@@ -1,0 +1,281 @@
+"""One benchmark per paper table/figure, driven by the discrete-event
+simulator (H100/L20 constants for validation against the paper's claims) and
+by the dry-run roofline JSONs (TPU target).
+
+Each function prints a CSV block and returns a dict of derived headline
+numbers; benchmarks/run.py validates them against the paper's reported bands.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+from repro.analysis.simulator import (H100_NVL, L20_PCIE, MECHANISMS,
+                                      MoEShape, sim_comet, sim_e2e,
+                                      sim_fastermoe, sim_megatron,
+                                      sim_tutel)
+from repro.configs.base import get_config
+
+# the paper's Table 2 models
+PAPER_MODELS = {
+    "mixtral-8x7b": dict(L=32, E=8, topk=2, N=4096, K=14336),
+    "qwen2-moe-2.7b": dict(L=24, E=64, topk=4, N=2048, K=1408),
+    "phi3.5-moe": dict(L=32, E=16, topk=2, N=4096, K=6400),
+}
+
+BASELINES = ["megatron_cutlass", "megatron_te", "fastermoe", "tutel"]
+
+
+def _shape(m, M, ep=8, etp=1):
+    return MoEShape(M=M, N=m["N"], K=m["K"], E=m["E"], topk=m["topk"],
+                    ep=ep, etp=etp)
+
+
+def _layer(mech: str, hw, s, imb=0.0) -> Dict:
+    if mech == "comet":
+        return sim_comet(hw, s, imb)
+    if mech == "fastermoe" and s.etp > 1:
+        return None
+    return MECHANISMS[mech](hw, s, imb)
+
+
+# ---------------------------------------------------------------------------
+# Figure 1a — time breakdown of MoE models (comm share of execution)
+# ---------------------------------------------------------------------------
+
+def fig1a_breakdown() -> Dict:
+    print("\n# fig1a_time_breakdown (Megatron, H100, M=16384, EP=8)")
+    print("model,comm_share")
+    shares = []
+    for name, m in PAPER_MODELS.items():
+        s = _shape(m, 16384)
+        r = sim_megatron(H100_NVL, s)
+        e2e = sim_e2e(H100_NVL, "megatron_cutlass", s, m["N"], m["L"], 8)
+        moe_comm = m["L"] * r["comm"]
+        share = moe_comm / e2e
+        shares.append(share)
+        print(f"{name},{share:.3f}")
+    avg = sum(shares) / len(shares)
+    print(f"average,{avg:.3f}")
+    return {"avg_comm_share": avg}
+
+
+# ---------------------------------------------------------------------------
+# Figure 9 — end-to-end model latency
+# ---------------------------------------------------------------------------
+
+def fig9_end_to_end() -> Dict:
+    print("\n# fig9_end_to_end_latency_ms (H100, W=8)")
+    print("model,M,parallelism,mech,ms")
+    speedups = []
+    for name, m in PAPER_MODELS.items():
+        for M in (4096, 8192):
+            for (ep, etp) in [(8, 1), (4, 2)]:
+                s = _shape(m, M, ep, etp)
+                ts = {}
+                for mech in BASELINES + ["comet"]:
+                    if mech == "fastermoe" and etp > 1:
+                        continue
+                    t = sim_e2e(H100_NVL, mech, s, m["N"], m["L"],
+                                tp_nonmoe=etp if etp > 1 else 1)
+                    ts[mech] = t
+                    print(f"{name},{M},EP{ep}xTP{etp},{mech},{t*1e3:.2f}")
+                for b in BASELINES:
+                    if b in ts:
+                        speedups.append(ts[b] / ts["comet"])
+    avg = sum(speedups) / len(speedups)
+    print(f"# e2e speedup vs baselines: avg={avg:.2f} "
+          f"min={min(speedups):.2f} max={max(speedups):.2f} (paper: 1.71x)")
+    return {"e2e_avg_speedup": avg, "e2e_min": min(speedups),
+            "e2e_max": max(speedups)}
+
+
+# ---------------------------------------------------------------------------
+# Figure 10 — single MoE layer vs input token length
+# ---------------------------------------------------------------------------
+
+def fig10_single_layer() -> Dict:
+    m = PAPER_MODELS["mixtral-8x7b"]
+    print("\n# fig10_single_layer_us (Mixtral expert shapes, EP=8, H100)")
+    print("M,mech,us")
+    speedups = []
+    for M in (1024, 2048, 4096, 8192, 16384, 32768, 65536):
+        s = _shape(m, M)
+        ts = {}
+        for mech in BASELINES + ["comet"]:
+            r = _layer(mech, H100_NVL, s)
+            ts[mech] = r["total"]
+            print(f"{M},{mech},{r['total']*1e6:.1f}")
+        for b in BASELINES:
+            speedups.append(ts[b] / ts["comet"])
+    avg = sum(speedups) / len(speedups)
+    print(f"# layer speedup: avg={avg:.2f} min={min(speedups):.2f} "
+          f"max={max(speedups):.2f} (paper: 1.28-2.37x, avg 1.96x)")
+    return {"layer_avg_speedup": avg, "layer_min": min(speedups),
+            "layer_max": max(speedups)}
+
+
+# ---------------------------------------------------------------------------
+# Figure 11 — time breakdown / latency hiding of a single MoE layer
+# ---------------------------------------------------------------------------
+
+def fig11_latency_hiding() -> Dict:
+    m = PAPER_MODELS["mixtral-8x7b"]
+    s = _shape(m, 16384)
+    print("\n# fig11_latency_hiding (EP=8 TP=1 E=8 topk=2 M=16384)")
+    print("mech,total_us,comm_us,hidden_frac")
+    out = {}
+    for mech in ("megatron_te", "fastermoe", "tutel", "comet"):
+        r = _layer(mech, H100_NVL, s)
+        hid = r["overlapped"] / max(r["comm"], 1e-12)
+        out[mech] = hid
+        print(f"{mech},{r['total']*1e6:.1f},{r['comm']*1e6:.1f},{hid:.3f}")
+    print("# paper: comet 86.5%, tutel 68.6%, fastermoe 29.2%")
+    return {"hiding": out}
+
+
+# ---------------------------------------------------------------------------
+# Figure 12 — parallelism strategies within the MoE layer
+# ---------------------------------------------------------------------------
+
+def fig12_parallelism() -> Dict:
+    m = PAPER_MODELS["mixtral-8x7b"]
+    print("\n# fig12_parallelism (M=8192, EPxTP=8)")
+    print("parallelism,mech,us")
+    comet_ts, base_worst = [], []
+    for ep, etp in [(8, 1), (4, 2), (2, 4), (1, 8)]:
+        s = _shape(m, 8192, ep, etp)
+        row = {}
+        for mech in BASELINES + ["comet"]:
+            r = _layer(mech, H100_NVL, s)
+            if r is None:
+                continue
+            row[mech] = r["total"]
+            print(f"EP{ep}xTP{etp},{mech},{r['total']*1e6:.1f}")
+        comet_ts.append(row["comet"])
+        base_worst.append(min(v for k, v in row.items() if k != "comet"))
+    # paper: baselines degrade as TP grows; comet stays low
+    degrade_comet = max(comet_ts) / min(comet_ts)
+    degrade_base = max(base_worst) / min(base_worst)
+    print(f"# degradation over TP sweep: comet {degrade_comet:.2f}x, "
+          f"best-baseline {degrade_base:.2f}x")
+    return {"degrade_comet": degrade_comet, "degrade_base": degrade_base}
+
+
+# ---------------------------------------------------------------------------
+# Figure 13 — various E and topk
+# ---------------------------------------------------------------------------
+
+def fig13_experts_topk() -> Dict:
+    m = PAPER_MODELS["mixtral-8x7b"]
+    print("\n# fig13_E_topk (M=16384, EP=8, TP=1)")
+    print("E,topk,mech,us")
+    speedups = []
+    for E in (8, 16, 32):
+        for topk in (2, 4, 8):
+            s = MoEShape(M=16384, N=m["N"], K=m["K"], E=E, topk=topk,
+                         ep=8, etp=1)
+            ts = {}
+            for mech in BASELINES + ["comet"]:
+                r = _layer(mech, H100_NVL, s)
+                ts[mech] = r["total"]
+                print(f"{E},{topk},{mech},{r['total']*1e6:.1f}")
+            for b in BASELINES:
+                speedups.append(ts[b] / ts["comet"])
+    print(f"# speedup range {min(speedups):.2f}-{max(speedups):.2f} "
+          f"(paper: 1.16-1.83x vs baselines)")
+    return {"etopk_min": min(speedups), "etopk_max": max(speedups)}
+
+
+# ---------------------------------------------------------------------------
+# Figure 14 — imbalanced token distribution + L20 cluster
+# ---------------------------------------------------------------------------
+
+def fig14_imbalance_and_l20() -> Dict:
+    m = PAPER_MODELS["mixtral-8x7b"]
+    print("\n# fig14a_imbalance (E=8 topk=2 M=8192 EP=8)")
+    print("std,mech,us")
+    mono = {}
+    for std in (0.0, 0.02, 0.032, 0.05):
+        s = _shape(m, 8192)
+        for mech in ("megatron_cutlass", "tutel", "comet"):
+            r = _layer(mech, H100_NVL, s, imb=std)
+            mono.setdefault(mech, []).append(r["total"])
+            print(f"{std},{mech},{r['total']*1e6:.1f}")
+    print("\n# fig14b_l20 (E=8 topk=4 M=8192, EPxTP=8)")
+    print("parallelism,mech,us")
+    speedups = []
+    for ep, etp in [(8, 1), (4, 2)]:
+        s = _shape(m, 8192, ep, etp)
+        s = MoEShape(M=8192, N=m["N"], K=m["K"], E=8, topk=4, ep=ep, etp=etp)
+        ts = {}
+        for mech in BASELINES + ["comet"]:
+            r = _layer(mech, L20_PCIE, s)
+            if r is None:
+                continue
+            ts[mech] = r["total"]
+            print(f"EP{ep}xTP{etp},{mech},{r['total']*1e6:.1f}")
+        for b in BASELINES:
+            if b in ts:
+                speedups.append(ts[b] / ts["comet"])
+    avg = sum(speedups) / len(speedups)
+    print(f"# L20 speedup avg={avg:.2f} (paper: 1.19-1.46x)")
+    imb_monotone = all(mono[mech][-1] >= mono[mech][0] * 0.999
+                       for mech in mono)
+    comet_best_imb = all(
+        mono["comet"][i] <= min(mono["megatron_cutlass"][i], mono["tutel"][i])
+        for i in range(4))
+    return {"l20_avg_speedup": avg, "imb_monotone": imb_monotone,
+            "comet_best_under_imbalance": comet_best_imb}
+
+
+# ---------------------------------------------------------------------------
+# Table 3 — communication buffer memory
+# ---------------------------------------------------------------------------
+
+def table3_buffers() -> Dict:
+    """The paper's NVSHMEM symmetric buffer is 2·M·N bytes. Our ppermute ring
+    double-buffers one (M/ep·topk, N) chunk per direction — report both."""
+    print("\n# table3_comm_buffer_MB")
+    print("model,M,paper_nvshmem_MB,ours_ring_MB")
+    out = {}
+    for name, m in PAPER_MODELS.items():
+        for M in (4096, 8192):
+            paper = 2 * M * m["N"] / 2**20
+            s = _shape(m, M)
+            chunk = (M / 8) * m["topk"] * m["N"] * 2 / 2**20
+            ours = 2 * chunk                       # send+recv double buffer
+            out[(name, M)] = (paper, ours)
+            print(f"{name},{M},{paper:.0f},{ours:.0f}")
+    return {"buffers": {f"{k[0]}@{k[1]}": v for k, v in out.items()}}
+
+
+# ---------------------------------------------------------------------------
+# TPU roofline summary (from the dry-run artifacts) — deliverable (g)
+# ---------------------------------------------------------------------------
+
+def roofline_summary(dryrun_dir: str = "experiments/dryrun") -> Dict:
+    print(f"\n# roofline_summary ({dryrun_dir})")
+    print("arch,shape,chips,impl,t_compute_ms,t_memory_ms,t_collective_ms,"
+          "dominant,roofline_fraction")
+    rows = []
+    for fn in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(fn) as f:
+            r = json.load(f)
+        base = os.path.basename(fn)[:-5].rsplit("_", 2)
+        arch_shape = base[0]
+        print(f"{arch_shape},{r['n_chips']},{r.get('impl','-')},"
+              f"{r['t_compute_s']*1e3:.2f},{r['t_memory_s']*1e3:.2f},"
+              f"{r['t_collective_s']*1e3:.2f},{r['dominant']},"
+              f"{r.get('roofline_fraction', 0):.4f}")
+        rows.append(r)
+    if not rows:
+        print("# (no dry-run artifacts found — run repro.launch.dryrun)")
+    return {"n_cells": len(rows)}
+
+
+ALL = [fig1a_breakdown, fig9_end_to_end, fig10_single_layer,
+       fig11_latency_hiding, fig12_parallelism, fig13_experts_topk,
+       fig14_imbalance_and_l20, table3_buffers, roofline_summary]

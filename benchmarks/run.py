@@ -1,0 +1,82 @@
+"""Benchmark harness: one function per paper table/figure (simulator-driven
+H100/L20 validation) + the TPU roofline summary from the dry-run artifacts.
+
+Prints each figure's CSV, then a validation block checking the headline
+numbers against the bands the paper reports. Exit code reflects validation.
+
+Run:  PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import sys
+
+
+def validate(results) -> int:
+    checks = []
+
+    def chk(name, cond, detail):
+        checks.append((name, bool(cond), detail))
+
+    r = results["fig1a_breakdown"]
+    chk("fig1a comm share ~47%", 0.25 <= r["avg_comm_share"] <= 0.65,
+        f"avg={r['avg_comm_share']:.2f} (paper 0.47)")
+
+    r = results["fig9_end_to_end"]
+    chk("fig9 e2e speedup ~1.71x", 1.25 <= r["e2e_avg_speedup"] <= 2.2,
+        f"avg={r['e2e_avg_speedup']:.2f} (paper 1.71)")
+
+    r = results["fig10_single_layer"]
+    chk("fig10 layer speedup ~1.96x", 1.4 <= r["layer_avg_speedup"] <= 2.6,
+        f"avg={r['layer_avg_speedup']:.2f} (paper 1.96)")
+    chk("fig10 layer speedup band", r["layer_min"] >= 1.0,
+        f"min={r['layer_min']:.2f} (paper min 1.28)")
+
+    h = results["fig11_latency_hiding"]["hiding"]
+    chk("fig11 comet hides most latency", h["comet"] >= 0.75,
+        f"comet={h['comet']:.2f} (paper 0.865)")
+    chk("fig11 ordering comet>tutel>fastermoe",
+        h["comet"] > h["tutel"] > h["fastermoe"],
+        f"{h['comet']:.2f} > {h['tutel']:.2f} > {h['fastermoe']:.2f} "
+        "(paper 0.865/0.686/0.292)")
+
+    r = results["fig12_parallelism"]
+    chk("fig12 comet robust across EPxTP",
+        r["degrade_comet"] < r["degrade_base"],
+        f"comet {r['degrade_comet']:.2f}x vs baseline "
+        f"{r['degrade_base']:.2f}x over the TP sweep")
+
+    r = results["fig13_experts_topk"]
+    chk("fig13 speedup band ~1.16-1.83x",
+        r["etopk_min"] >= 0.95 and r["etopk_max"] <= 3.5,
+        f"range {r['etopk_min']:.2f}-{r['etopk_max']:.2f}")
+
+    r = results["fig14_imbalance_and_l20"]
+    chk("fig14 imbalance prolongs all systems", r["imb_monotone"], "")
+    chk("fig14 comet best under imbalance", r["comet_best_under_imbalance"],
+        "")
+    chk("fig14 L20 speedup ~1.19-1.46x", 1.0 <= r["l20_avg_speedup"] <= 1.9,
+        f"avg={r['l20_avg_speedup']:.2f}")
+
+    r = results["roofline_summary"]
+    chk("roofline artifacts present", r["n_cells"] >= 30,
+        f"{r['n_cells']} cells")
+
+    print("\n#### validation vs paper claims ####")
+    fails = 0
+    for name, ok, detail in checks:
+        print(f"[{'PASS' if ok else 'FAIL'}] {name} {detail}")
+        fails += 0 if ok else 1
+    print(f"\n{len(checks) - fails}/{len(checks)} validation checks passed")
+    return fails
+
+
+def main() -> int:
+    from benchmarks import figures
+    results = {}
+    for fn in figures.ALL:
+        results[fn.__name__] = fn()
+    return 1 if validate(results) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

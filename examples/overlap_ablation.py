@@ -1,0 +1,49 @@
+"""Overlap-mechanism ablation: sweep input length M and print each
+mechanism's simulated single-layer latency + how much communication each
+hides (the paper's Fig. 10/11, runnable at any shape).
+
+Run:  PYTHONPATH=src python examples/overlap_ablation.py --hw h100_nvlink
+      PYTHONPATH=src python examples/overlap_ablation.py --hw tpu_v5e --tpu
+"""
+import argparse
+
+from repro.core.adaptive import HW, MoEShape
+from repro.analysis.simulator import (MECHANISMS, sim_comet, sim_fastermoe,
+                                      sim_megatron, sim_tutel)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--hw", default="h100_nvlink", choices=sorted(HW))
+    ap.add_argument("--tpu", action="store_true",
+                    help="model comet without SM-donation derate (TPU DMA)")
+    ap.add_argument("--N", type=int, default=4096)
+    ap.add_argument("--K", type=int, default=14336)
+    ap.add_argument("--E", type=int, default=8)
+    ap.add_argument("--topk", type=int, default=2)
+    ap.add_argument("--ep", type=int, default=8)
+    ap.add_argument("--etp", type=int, default=1)
+    args = ap.parse_args()
+    hw = HW[args.hw]
+
+    print(f"hw={hw.name}  experts {args.N}x{args.K}  E={args.E} "
+          f"topk={args.topk}  EP{args.ep}xTP{args.etp}")
+    print(f"{'M':>7s} {'megatron':>10s} {'fastermoe':>10s} {'tutel':>10s} "
+          f"{'comet':>10s} {'speedup':>8s} {'hidden%':>8s} {'n_col':>6s}")
+    for M in (1024, 2048, 4096, 8192, 16384, 32768, 65536):
+        s = MoEShape(M=M, N=args.N, K=args.K, E=args.E, topk=args.topk,
+                     ep=args.ep, etp=args.etp)
+        t_m = sim_megatron(hw, s)["total"]
+        t_f = (sim_fastermoe(hw, s)["total"] if args.etp == 1 else
+               float("nan"))
+        t_t = sim_tutel(hw, s)["total"]
+        c = sim_comet(hw, s, tpu=args.tpu)
+        hide = 100 * c["overlapped"] / max(c["comm"], 1e-12)
+        best_base = min(x for x in (t_m, t_f, t_t) if x == x)
+        print(f"{M:7d} {t_m*1e6:9.0f}u {t_f*1e6:9.0f}u {t_t*1e6:9.0f}u "
+              f"{c['total']*1e6:9.0f}u {best_base/c['total']:7.2f}x "
+              f"{hide:7.1f}% {c['n_col']:6d}")
+
+
+if __name__ == "__main__":
+    main()

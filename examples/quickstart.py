@@ -1,0 +1,62 @@
+"""Quickstart: the Comet MoE block as a composable JAX module.
+
+Builds a small MoE FFN, runs the three transports (naive baseline, coarse
+FasterMoE-style pipeline, comet fine-grained overlap) and shows they are
+numerically identical — the schedule changes, the math doesn't. Then shows
+the adaptive workload assignment picking the layer-1 column decomposition.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+(To see the multi-device collective schedule, run the same through
+ `python -m repro.launch.selftest --devices 8`.)
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config
+from repro.core.adaptive import TPU_V5E, MoEShape, choose_n_col, layer_times
+from repro.core.moe_layer import moe_ffn
+from repro.parallel.mesh import AxisCtx
+
+
+def main():
+    cfg = get_config("granite-moe-3b-a800m-smoke")
+    E, d, f = cfg.moe.num_experts, cfg.d_model, cfg.moe.d_expert
+    print(f"model: {cfg.name}  E={E} top_k={cfg.moe.top_k} d={d} d_expert={f}")
+
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 5)
+    params = {
+        "router": jax.random.normal(ks[0], (d, E), jnp.float32) * 0.1,
+        "experts": {
+            "w_gate": jax.random.normal(ks[1], (1, E, d, f)) * 0.05,
+            "w_up": jax.random.normal(ks[2], (1, E, d, f)) * 0.05,
+            "w_down": jax.random.normal(ks[3], (1, E, f, d)) * 0.05,
+        },
+    }
+    x = jax.random.normal(ks[4], (4, 32, d), jnp.float32)
+
+    outs = {}
+    for impl in ("naive", "coarse", "comet"):
+        mcfg = dataclasses.replace(cfg.moe, impl=impl)
+        y, aux = jax.jit(lambda xx: moe_ffn(cfg, mcfg, params, xx, AxisCtx()))(x)
+        outs[impl] = y
+        print(f"impl={impl:7s} out={y.shape} aux_loss={float(aux):.5f}")
+
+    err = float(jnp.max(jnp.abs(outs["comet"] - outs["naive"])))
+    print(f"max |comet - naive| = {err:.2e}  (identical math, different schedule)")
+
+    # adaptive workload assignment (paper §3.2.2, TPU knobs)
+    print("\nadaptive layer-1 N-decomposition (paper Fig. 6/8):")
+    for M in (1024, 4096, 16384, 65536):
+        s = MoEShape(M=M, N=4096, K=14336, E=8, topk=2, ep=8, etp=1)
+        n_col = choose_n_col(TPU_V5E, s)
+        t = layer_times(TPU_V5E, s)
+        print(f"  M={M:6d}  n_col={n_col}  per-chunk gemm={t['t_chunk_compute']*1e6:7.1f}us"
+              f"  per-hop ici={t['t_hop']*1e6:7.1f}us"
+              f"  balance={t['dispatch_balance']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,466 @@
+"""Static cost model over optimized (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` counts every ``while`` body ONCE — a scanned
+L-layer transformer is undercounted ~L×, which poisons any roofline derived
+from it. This module re-derives per-device FLOPs / HBM bytes / ICI bytes by
+walking the HLO text with correct call-graph multiplicities:
+
+* ``while`` bodies are multiplied by their trip count (parsed from
+  ``backend_config={"known_trip_count":{"n":...}}``, falling back to the
+  comparison constant in the condition computation);
+* ``fusion`` call sites contribute the *called computation's FLOPs* but only
+  the call-site operand/result bytes (fusion internals live in registers /
+  VMEM, not HBM — this is also more faithful to a roofline than XLA's
+  per-op "bytes accessed");
+* collectives contribute ring-model ICI bytes: all-reduce 2(n-1)/n·B,
+  all-gather (n-1)·B_shard, reduce-scatter (n-1)/n·B, all-to-all (n-1)/n·B,
+  collective-permute 1 hop·B — counted at ``-start`` for async pairs and
+  multiplied by enclosing while trip counts (collectives inside the layer
+  scan are the common case).
+
+Shapes in a post-SPMD module are shard-local, so every total is per-device.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3": 1, "f8e3m4": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-$]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_OP_NAME = re.compile(r"[\w\-]+\Z")
+_OPERAND_NAME = re.compile(r"%([\w.\-$]+)")
+_TRIP_BC = re.compile(r'known_trip_count[":{]+n["\s:]+(\d+)')
+_CONST_INT = re.compile(r"constant\((\d+)\)")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_GROUPS_SET = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_CALLS = re.compile(r"calls=%?([\w.\-$]+)")
+_COND = re.compile(r"condition=%?([\w.\-$]+)")
+_BODY = re.compile(r"body=%?([\w.\-$]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_DIM_LABELS = re.compile(r"dim_labels=([\w?]+)_([\w?]+)->([\w?]+)")
+
+# ops that move no HBM bytes of their own
+_FREE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "reshape", "domain",
+    "opt-barrier", "add-dependency",
+}
+_COLLECTIVES = {
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "ragged-all-to-all", "collective-broadcast",
+}
+_ELEMENTWISE_FLOP = {
+    "add", "subtract", "multiply", "divide", "power", "maximum", "minimum",
+    "exponential", "log", "tanh", "rsqrt", "sqrt", "negate", "abs",
+    "compare", "select", "and", "or", "xor", "not", "convert", "floor",
+    "ceil", "round-nearest-afz", "round-nearest-even", "sign", "atan2",
+    "cosine", "sine", "erf", "exponential-minus-one", "log-plus-one",
+    "clamp", "remainder", "logistic", "cbrt", "tan", "shift-left",
+    "shift-right-logical", "shift-right-arithmetic", "is-finite",
+    "stochastic-convert", "reduce-precision", "map", "popcnt", "clz",
+}
+
+
+def shape_numel_bytes(type_str: str) -> Tuple[int, int]:
+    """(numel, bytes) summed over every dtype[dims] token (tuples sum)."""
+    numel = nbytes = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        numel += n
+        nbytes += n * _DTYPE_BYTES[dt]
+    return numel, nbytes
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    operands: List[str]
+    attrs: str
+    numel: int
+    nbytes: int
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    mxu_flops: float = 0.0            # dot/convolution only
+    bytes: float = 0.0
+    ici_bytes: float = 0.0
+    coll_per_op: Dict[str, float] = dataclasses.field(default_factory=dict)
+    coll_counts: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.mxu_flops += other.mxu_flops * mult
+        self.bytes += other.bytes * mult
+        self.ici_bytes += other.ici_bytes * mult
+        for k, v in other.coll_per_op.items():
+            self.coll_per_op[k] = self.coll_per_op.get(k, 0.0) + v * mult
+        for k, v in other.coll_counts.items():
+            self.coll_counts[k] = self.coll_counts.get(k, 0.0) + v * mult
+
+
+class Computation:
+    def __init__(self, name: str):
+        self.name = name
+        self.instrs: List[Instr] = []
+        self.by_name: Dict[str, Instr] = {}
+        self.text_lines: List[str] = []
+
+    def add(self, ins: Instr):
+        self.instrs.append(ins)
+        self.by_name[ins.name] = ins
+
+
+def _scan_paren(s: str, start: int) -> int:
+    """Index just past the paren-group opening at s[start] == '('."""
+    depth, i = 0, start
+    while i < len(s):
+        c = s[i]
+        if c == "(":
+            depth += 1
+        elif c == ")":
+            depth -= 1
+            if depth == 0:
+                return i + 1
+        i += 1
+    return len(s)
+
+
+def parse_instr_line(line: str) -> Optional[Instr]:
+    """Parse ``[ROOT] %name = TYPE op(operands), attrs``. TYPE may be a huge
+    tuple containing ``/*index=N*/`` comments — regexes over it are unsafe,
+    so this uses paren-depth scanning."""
+    s = line.strip()
+    if s.startswith("ROOT "):
+        s = s[5:]
+    if not s.startswith("%"):
+        return None
+    eq = s.find(" = ")
+    if eq < 0:
+        return None
+    name = s[1:eq].strip()
+    rest = s[eq + 3:]
+    if rest.startswith("("):                       # tuple type
+        end = _scan_paren(rest, 0)
+        type_str = rest[:end]
+        rest = rest[end:].lstrip()
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        type_str = rest[:sp]
+        rest = rest[sp + 1:].lstrip()
+    p = rest.find("(")
+    if p <= 0:
+        return None
+    op = rest[:p]
+    if not _OP_NAME.match(op):
+        return None
+    end = _scan_paren(rest, p)
+    operand_str = rest[p + 1:end - 1]
+    attrs = rest[end:]
+    numel, nbytes = shape_numel_bytes(type_str)
+    ops = _OPERAND_NAME.findall(operand_str)
+    return Instr(name, type_str, op, ops, attrs, numel, nbytes)
+
+
+def parse_module(hlo_text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_HDR.match(line.strip())
+            if m:
+                cur = Computation(m.group(2))
+                if m.group(1):
+                    entry = cur.name
+                comps[cur.name] = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        cur.text_lines.append(line)
+        ins = parse_instr_line(line)
+        if ins is not None:
+            cur.add(ins)
+    return comps, entry
+
+
+def _group_size(attrs: str, default: int = 2) -> int:
+    m = _GROUPS_IOTA.search(attrs)
+    if m:
+        return max(1, int(m.group(2)))
+    m = _GROUPS_SET.search(attrs)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def _trip_count(while_attrs: str, cond: Optional[Computation]) -> int:
+    m = _TRIP_BC.search(while_attrs)
+    if m:
+        return int(m.group(1))
+    if cond is not None:
+        best = 1
+        for line in cond.text_lines:
+            for c in _CONST_INT.findall(line):
+                best = max(best, int(c))
+        return best
+    return 1
+
+
+class HLOCostModel:
+    """Evaluates per-device cost of the entry computation with correct
+    while/fusion/conditional multiplicities."""
+
+    def __init__(self, hlo_text: str):
+        self.comps, self.entry = parse_module(hlo_text)
+        self._memo: Dict[str, Cost] = {}
+
+    # -- per-instruction local helpers ------------------------------------
+    def _operand_bytes(self, comp: Computation, ins: Instr) -> float:
+        total = 0.0
+        for o in ins.operands:
+            d = comp.by_name.get(o)
+            if d is not None:
+                total += d.nbytes
+        return total
+
+    def _operand_shape(self, comp: Computation, ins: Instr, i: int):
+        if i < len(ins.operands):
+            d = comp.by_name.get(ins.operands[i])
+            if d is not None:
+                dims_m = _SHAPE_RE.search(d.type_str)
+                if dims_m:
+                    dims = ([int(x) for x in dims_m.group(2).split(",")]
+                            if dims_m.group(2) else [])
+                    return dims, d.nbytes
+        return None, 0
+
+    def _dot_flops(self, comp: Computation, ins: Instr) -> float:
+        lhs_dims, _ = self._operand_shape(comp, ins, 0)
+        contract = 1
+        m = _CONTRACT.search(ins.attrs)
+        if lhs_dims is not None and m and m.group(1):
+            for ax in m.group(1).split(","):
+                ax = int(ax)
+                if ax < len(lhs_dims):
+                    contract *= lhs_dims[ax]
+        elif lhs_dims:
+            contract = lhs_dims[-1]
+        return 2.0 * ins.numel * contract
+
+    def _conv_flops(self, comp: Computation, ins: Instr) -> float:
+        rhs_dims, _ = self._operand_shape(comp, ins, 1)
+        if rhs_dims is None:
+            return 2.0 * ins.numel
+        m = _DIM_LABELS.search(ins.attrs)
+        out_ch = 1
+        if m:
+            rhs_labels = m.group(2)
+            o_pos = rhs_labels.find("o")
+            if 0 <= o_pos < len(rhs_dims):
+                out_ch = rhs_dims[o_pos]
+        kernel_numel = 1
+        for d in rhs_dims:
+            kernel_numel *= d
+        return 2.0 * ins.numel * kernel_numel / max(out_ch, 1)
+
+    def _collective(self, cost: Cost, comp: Computation, ins: Instr):
+        op = ins.op[:-6] if ins.op.endswith("-start") else ins.op
+        ob = self._operand_bytes(comp, ins)
+        if ob == 0:
+            ob = ins.nbytes
+        n = _group_size(ins.attrs)
+        if op == "all-reduce":
+            traffic = 2.0 * (n - 1) / n * ob
+        elif op == "all-gather":
+            traffic = (n - 1) * ob          # operand is the local shard
+        elif op == "reduce-scatter":
+            traffic = (n - 1) / n * ob
+        elif op in ("all-to-all", "ragged-all-to-all"):
+            traffic = (n - 1) / n * ob
+        elif op == "collective-broadcast":
+            traffic = float(ob)
+        else:                                # collective-permute: one hop
+            traffic = float(ob)
+        cost.ici_bytes += traffic
+        cost.coll_per_op[op] = cost.coll_per_op.get(op, 0.0) + traffic
+        cost.coll_counts[op] = cost.coll_counts.get(op, 0.0) + 1
+        cost.bytes += ob + ins.nbytes        # collectives also touch HBM
+
+    # -- per-computation cost ----------------------------------------------
+    def comp_cost(self, name: str) -> Cost:
+        """Cost of one computation.
+
+        Ops whose metadata op_name contains ``__fusable__`` contribute FLOPs
+        but NO bytes: the model tags regions (via jax.named_scope) that run as
+        a single fused Pallas kernel on the real TPU target (e.g. flash
+        attention keeps its score tensors in VMEM), so their intermediate HBM
+        traffic is a CPU-lowering artifact. The kernel's true boundary bytes
+        are added back analytically by roofline.analyze.
+        """
+        if name in self._memo:
+            return self._memo[name]
+        comp = self.comps.get(name)
+        cost = Cost()
+        self._memo[name] = cost              # cycles cannot occur in HLO
+        if comp is None:
+            return cost
+        for ins in comp.instrs:
+            op = ins.op
+            if op in _FREE_OPS:
+                continue
+            if "__fusable__" in ins.attrs and op not in (
+                    "while", "conditional", "call"):
+                base_f = op[:-6] if op.endswith("-start") else op
+                if base_f in _COLLECTIVES and not op.endswith("-done"):
+                    # partitioner-inserted collectives move to the kernel
+                    # boundary on real TPU but still cross ICI: count the
+                    # traffic, skip only the HBM bytes
+                    hbm = Cost()
+                    self._collective(hbm, comp, ins)
+                    cost.ici_bytes += hbm.ici_bytes
+                    for k, v in hbm.coll_per_op.items():
+                        cost.coll_per_op[k] = cost.coll_per_op.get(k, 0) + v
+                    for k, v in hbm.coll_counts.items():
+                        cost.coll_counts[k] = cost.coll_counts.get(k, 0) + v
+                    continue
+                if op == "fusion":
+                    m = _CALLS.search(ins.attrs)
+                    if m:
+                        sub = self.comp_cost(m.group(1))
+                        cost.flops += sub.flops
+                        cost.mxu_flops += sub.mxu_flops
+                elif op == "dot":
+                    f = self._dot_flops(comp, ins)
+                    cost.flops += f
+                    cost.mxu_flops += f
+                elif op in _ELEMENTWISE_FLOP:
+                    cost.flops += float(ins.numel)
+                continue
+            if op == "while":
+                cond_m = _COND.search(ins.attrs)
+                body_m = _BODY.search(ins.attrs)
+                sub = Cost()
+                if body_m:
+                    sub.add(self.comp_cost(body_m.group(1)))
+                cond = self.comps.get(cond_m.group(1)) if cond_m else None
+                if cond_m:
+                    sub.add(self.comp_cost(cond_m.group(1)))
+                trip = _trip_count(ins.attrs, cond)
+                cost.add(sub, mult=trip)
+                continue
+            if op == "conditional":
+                m = _BRANCHES.search(ins.attrs)
+                if m:
+                    branches = _OPERAND_NAME.findall(m.group(1))
+                    subs = [self.comp_cost(b) for b in branches]
+                    if subs:
+                        best = max(subs, key=lambda c: (c.flops, c.bytes))
+                        cost.add(best)
+                cost.bytes += self._operand_bytes(comp, ins) + ins.nbytes
+                continue
+            if op == "fusion":
+                m = _CALLS.search(ins.attrs)
+                if m:
+                    sub = self.comp_cost(m.group(1))
+                    cost.flops += sub.flops          # FLOPs from internals
+                    cost.mxu_flops += sub.mxu_flops
+                    cost.ici_bytes += sub.ici_bytes  # (none in practice)
+                if "dynamic_update_slice" in ins.attrs or \
+                        "dynamic-update-slice" in ins.attrs:
+                    # in-place update fusion (KV-cache insert): only the
+                    # update operand moves, not the aliased buffer
+                    obs = [comp.by_name[o].nbytes for o in ins.operands
+                           if o in comp.by_name]
+                    if obs:
+                        cost.bytes += 2.0 * (sum(obs) - max(obs))
+                        continue
+                cost.bytes += self._operand_bytes(comp, ins) + ins.nbytes
+                continue
+            if op == "call" or op.startswith("async"):
+                m = _CALLS.search(ins.attrs) or _OPERAND_NAME.search(ins.attrs)
+                if m:
+                    cost.add(self.comp_cost(m.group(1)))
+                continue
+            if op.endswith("-done"):
+                continue
+            base = op[:-6] if op.endswith("-start") else op
+            if base in _COLLECTIVES:
+                self._collective(cost, comp, ins)
+                continue
+            if op == "dot":
+                f = self._dot_flops(comp, ins)
+                cost.flops += f
+                cost.mxu_flops += f
+                cost.bytes += self._operand_bytes(comp, ins) + ins.nbytes
+                continue
+            if op == "convolution":
+                f = self._conv_flops(comp, ins)
+                cost.flops += f
+                cost.mxu_flops += f
+                cost.bytes += self._operand_bytes(comp, ins) + ins.nbytes
+                continue
+            if op in ("dynamic-update-slice",):
+                # in-place: touches only the update operand's bytes (r+w)
+                _, ub = self._operand_shape(comp, ins, 1)
+                cost.bytes += 2.0 * ub
+                continue
+            if op in ("dynamic-slice", "slice"):
+                cost.bytes += 2.0 * ins.nbytes
+                continue
+            if op == "gather":
+                cost.bytes += 2.0 * ins.nbytes
+                continue
+            if op == "scatter":
+                _, ub = self._operand_shape(comp, ins, 2)
+                cost.bytes += 2.0 * ub + ins.nbytes
+                cost.flops += ins.numel
+                continue
+            if op in ("reduce", "reduce-window"):
+                in_dims, ib = self._operand_shape(comp, ins, 0)
+                n_in = 1
+                for d in (in_dims or []):
+                    n_in *= d
+                cost.flops += float(n_in)
+                cost.bytes += self._operand_bytes(comp, ins) + ins.nbytes
+                continue
+            if op in _ELEMENTWISE_FLOP:
+                cost.flops += float(ins.numel)
+                cost.bytes += self._operand_bytes(comp, ins) + ins.nbytes
+                continue
+            # copy, transpose, broadcast, pad, concatenate, sort, rng,
+            # custom-call, iota, ...: pure data movement (or unknown)
+            cost.bytes += self._operand_bytes(comp, ins) + ins.nbytes
+        return cost
+
+    def entry_cost(self) -> Cost:
+        if self.entry is None:
+            return Cost()
+        # reset memo so repeated calls stay correct
+        self._memo = {}
+        return self.comp_cost(self.entry)
+
+
+def analyze_text(hlo_text: str) -> Cost:
+    return HLOCostModel(hlo_text).entry_cost()

@@ -1,0 +1,278 @@
+"""Roofline analysis from compiled XLA artifacts (no hardware required).
+
+Three terms per (arch × shape × mesh), all in seconds-per-step per device:
+
+  compute    = HLO_FLOPs / peak_FLOP/s          (cost_analysis, per-device)
+  memory     = HLO_bytes / HBM_bw               (cost_analysis, per-device)
+  collective = ici_bytes / link_bw              (parsed from compiled HLO)
+
+``cost_analysis()`` does not report collective traffic, so ``ici_bytes`` is
+reconstructed by walking the post-SPMD HLO text: every all-reduce /
+all-gather / reduce-scatter / all-to-all / collective-permute contributes its
+operand bytes × the ring-traffic factor for its replica-group size. Shapes in
+the per-device module are already shard-local, so the sum is per-device
+traffic directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+# TPU v5e per-chip constants (assignment-mandated)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+LINK_BW = 50e9               # bytes/s per ICI link (conservative, 1 link)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2,
+    "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(?P<res>\([^)]*\)|[\w\[\],{}]+)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<async>-start)?\s*\((?P<operands>[^)]*)\)")
+_GROUPS_SET_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+
+
+def shape_bytes(text: str) -> int:
+    """Sum bytes of every dtype[dims] token in a shape/operand string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_SET_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2  # collective-permute / unknown: factor computed separately
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    per_op: Dict[str, float]            # op kind -> per-device bytes
+    counts: Dict[str, int]
+    total_bytes: float
+
+    def dominant(self) -> str:
+        if not self.per_op:
+            return "none"
+        return max(self.per_op, key=self.per_op.get)
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    per_op: Dict[str, float] = {}
+    counts: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if m is None:
+            continue
+        op = m.group("op")
+        operand_bytes = shape_bytes(m.group("operands"))
+        if operand_bytes == 0:
+            continue
+        n = _group_size(line)
+        if op == "all-reduce":
+            traffic = 2.0 * (n - 1) / n * operand_bytes
+        elif op == "all-gather":
+            traffic = (n - 1) * operand_bytes           # operand = local shard
+        elif op == "reduce-scatter":
+            traffic = (n - 1) / n * operand_bytes
+        elif op == "all-to-all":
+            traffic = (n - 1) / n * operand_bytes
+        else:  # collective-permute: one hop, operand bytes
+            traffic = float(operand_bytes)
+        per_op[op] = per_op.get(op, 0.0) + traffic
+        counts[op] = counts.get(op, 0) + 1
+    return CollectiveStats(per_op, counts, sum(per_op.values()))
+
+
+# ---------------------------------------------------------------------------
+# Full report for one compiled step
+# ---------------------------------------------------------------------------
+
+
+def flash_kernel_bytes(cfg, shape) -> float:
+    """Analytic GLOBAL HBM boundary traffic of the attention regions tagged
+    ``__fusable__flash`` (whose internals the HLO byte count skips — on the
+    TPU target they run as the Pallas flash kernel with scores in VMEM).
+
+    Per attention layer, fwd = read q + read k,v + write o; train adds the
+    remat re-forward (×1) and the backward (reads q,k,v,o,do; writes
+    dq,dk,dv ≈ ×2 fwd), total ×4. Decode reads the full KV cache per token.
+    """
+    if cfg.attn is None:
+        return 0.0
+    a = cfg.attn
+    dt = 2 if "16" in cfg.compute_dtype else 4
+    Bsz, S = shape.global_batch, shape.seq_len
+
+    def layer_io(Tq, Tk):
+        return dt * (2 * Tq * a.n_heads * a.head_dim
+                     + 2 * Tk * a.n_kv_heads * a.head_dim)
+
+    n_attn = sum(1 for i in range(cfg.n_layers) if cfg.layer_kind(i) == "a")
+    factor = 4.0 if shape.kind == "train" else 1.0
+    if shape.kind == "decode":
+        # q/o negligible; read whole cache per token per layer
+        per_layer = dt * 2 * Bsz * S * a.n_kv_heads * a.head_dim
+        total = n_attn * per_layer
+        if cfg.n_enc_layers:
+            total += cfg.n_layers * dt * 2 * Bsz * 4096 * a.n_kv_heads * a.head_dim
+        return total
+    total = n_attn * layer_io(Bsz * S, Bsz * S) * factor
+    if cfg.n_enc_layers:                      # whisper: encoder + cross attn
+        Sd = max(64, S // 4)
+        total = cfg.n_layers * layer_io(Bsz * Sd, Bsz * Sd) * factor     # dec self
+        total += cfg.n_layers * layer_io(Bsz * Sd, Bsz * S) * factor    # cross
+        total += cfg.n_enc_layers * layer_io(Bsz * S, Bsz * S) * factor  # enc
+    return total
+
+
+def ssd_kernel_bytes(cfg, shape) -> float:
+    """Analytic GLOBAL boundary traffic of ``__fusable__ssd`` regions (the
+    Pallas SSD kernel: read x, dt, B, C; write y; chunk internals in VMEM).
+    Same train ×4 factor (fwd + remat + bwd≈2) as the flash model."""
+    if cfg.ssm is None:
+        return 0.0
+    s = cfg.ssm
+    dt = 2 if "16" in cfg.compute_dtype else 4
+    Bsz, S = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        return 0.0                      # decode path is the O(1) recurrence
+    d_in = s.expand * cfg.d_model
+    n_ssm = sum(1 for i in range(cfg.n_layers) if cfg.layer_kind(i) == "m")
+    per_layer = dt * Bsz * S * (2 * d_in + 2 * s.d_state + d_in // s.head_dim)
+    factor = 4.0 if shape.kind == "train" else 1.0
+    return n_ssm * per_layer * factor
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N_active·D for train; 2·N_active·D for inference."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def analyze(compiled, n_chips: int, cfg=None, shape=None,
+            hlo_text: Optional[str] = None) -> Dict:
+    """Roofline terms from the compiled artifact.
+
+    ``cost_analysis()`` counts while-loop (scan) bodies once, so FLOPs/bytes
+    are re-derived by the HLO static cost model (analysis/hlo_cost.py) with
+    correct trip-count multiplicities; ``cost_analysis`` numbers are kept in
+    the report for reference as ``xla_*``.
+    """
+    from repro.analysis.hlo_cost import analyze_text
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    xla_flops = float(ca.get("flops", 0.0))
+    xla_bytes = float(ca.get("bytes accessed", 0.0))
+    hlo = hlo_text if hlo_text is not None else compiled.as_text()
+    cost = analyze_text(hlo)
+    flops = cost.flops
+    bytes_accessed = cost.bytes
+    fkb = 0.0
+    if cfg is not None and shape is not None:
+        fkb = (flash_kernel_bytes(cfg, shape)
+               + ssd_kernel_bytes(cfg, shape)) / max(1, n_chips)
+        bytes_accessed += fkb
+    coll = CollectiveStats(dict(cost.coll_per_op),
+                           {k: int(v) for k, v in cost.coll_counts.items()},
+                           cost.ici_bytes)
+
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_accessed / HBM_BW
+    t_coll = coll.total_bytes / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+
+    mem = compiled.memory_analysis()
+    mem_info = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        v = getattr(mem, attr, None)
+        if v is not None:
+            mem_info[attr] = int(v)
+
+    report = {
+        "n_chips": n_chips,
+        "hlo_flops_per_device": flops,
+        "hlo_mxu_flops_per_device": cost.mxu_flops,
+        "hlo_bytes_per_device": bytes_accessed,
+        "flash_kernel_bytes_per_device": fkb,
+        "xla_flops_per_device": xla_flops,
+        "xla_bytes_per_device": xla_bytes,
+        "collective_bytes_per_device": coll.total_bytes,
+        "collective_per_op": coll.per_op,
+        "collective_counts": coll.counts,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "bound_time_s": max(terms.values()),
+        "memory_analysis": mem_info,
+    }
+    if cfg is not None and shape is not None:
+        mf = model_flops(cfg, shape)
+        report["model_flops_global"] = mf
+        report["model_flops_per_device"] = mf / n_chips
+        report["useful_flops_ratio"] = (mf / n_chips) / max(flops, 1.0)
+        # roofline fraction: useful model FLOPs per device over peak, relative
+        # to the step's bound time — "how close to roofline the step runs"
+        report["roofline_fraction"] = (
+            (mf / n_chips / PEAK_FLOPS) / max(max(terms.values()), 1e-30))
+    return report
+
+
+def fmt_report(name: str, r: Dict) -> str:
+    lines = [f"== {name} ==",
+             f"  chips={r['n_chips']} "
+             f"FLOPs/dev={r['hlo_flops_per_device']:.3e} "
+             f"bytes/dev={r['hlo_bytes_per_device']:.3e} "
+             f"ici/dev={r['collective_bytes_per_device']:.3e}",
+             f"  t_compute={r['t_compute_s']*1e3:.2f}ms "
+             f"t_memory={r['t_memory_s']*1e3:.2f}ms "
+             f"t_collective={r['t_collective_s']*1e3:.2f}ms "
+             f"-> dominant: {r['dominant']}"]
+    if "useful_flops_ratio" in r:
+        lines.append(f"  model/HLO flops={r['useful_flops_ratio']:.3f} "
+                     f"roofline_fraction={r['roofline_fraction']:.3f}")
+    if r.get("collective_per_op"):
+        per = ", ".join(f"{k}:{v/1e6:.1f}MB×{r['collective_counts'][k]}"
+                        for k, v in sorted(r["collective_per_op"].items()))
+        lines.append(f"  collectives: {per}")
+    tm = r.get("memory_analysis", {})
+    if tm:
+        lines.append(
+            "  mem/dev: args={:.2f}GB out={:.2f}GB temp={:.2f}GB".format(
+                tm.get("argument_size_in_bytes", 0) / 2**30,
+                tm.get("output_size_in_bytes", 0) / 2**30,
+                tm.get("temp_size_in_bytes", 0) / 2**30))
+    return "\n".join(lines)

@@ -1,0 +1,6 @@
+from repro.configs.base import (ASSIGNED_ARCHS, LM_SHAPES, PAPER_ARCHS,
+                                SMOKE_SHAPE, AttnConfig, ModelConfig,
+                                MoEConfig, ShapeConfig, SSMConfig, get_config,
+                                list_archs, reduced, register,
+                                shape_applicable)
+from repro.configs import archs  # noqa: F401  — populates the registry

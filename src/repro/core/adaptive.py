@@ -1,0 +1,181 @@
+"""Adaptive workload assignment (paper §3.2.2, TPU-native).
+
+The paper balances communication vs computation by moving SMs between
+thread-block roles (n_c comm blocks out of 132). On TPU the ICI DMA engines
+are disjoint from the MXU, so there is no SM budget to split — the balancing
+knob that remains is the PIPELINE GEOMETRY:
+
+* ``n_col_blocks`` — layer-1 N-decomposition granularity (paper Fig. 6 T_N):
+  more blocks → earlier first-combine and finer return-traffic interleave,
+  but smaller GEMM tiles (alignment floor: blocks of ≥128 columns keep the
+  MXU full, the exact analogue of the paper's tile-efficiency constraint).
+* ring chunking is fixed by EP (ep-1 hops), and the per-chunk compute is
+  M/ep rows — the dispatch-side balance is achieved when per-chunk GEMM time
+  ≈ per-hop ICI time, which the cost model reports as ``dispatch_balance``.
+
+Two layers, same as the paper:
+1. an ANALYTICAL model (roofline arithmetic from hardware constants) picks a
+   starting config — this replaces profiling where no hardware is attached;
+2. a PROFILE CACHE stores measured-best configs keyed by
+   (M, N, K, E, topk, ep, etp, hw) — the direct analogue of Comet's
+   pre-compiled kernel metadata, filled by ``tune()`` when a timing callback
+   is available (real TPU runs; benchmarks/ wires the simulator in).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import os
+from typing import Callable, Dict, Iterable, Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Hardware models
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    name: str
+    flops: float                 # peak dense bf16 FLOP/s per chip
+    hbm_bw: float                # bytes/s
+    link_bw: float               # bytes/s per interconnect link/direction
+    links: int = 1               # usable links per chip for the ring
+    gemm_eff: float = 0.7        # sustained fraction of peak for big GEMMs
+    small_tile_penalty: float = 0.55   # efficiency when M-tile < 128 rows
+
+
+TPU_V5E = Hardware("tpu_v5e", flops=197e12, hbm_bw=819e9, link_bw=50e9,
+                   links=2)
+H100_NVL = Hardware("h100_nvlink", flops=990e12, hbm_bw=3.35e12,
+                    link_bw=377e9, links=1, gemm_eff=0.65)
+L20_PCIE = Hardware("l20_pcie", flops=119e12, hbm_bw=864e9, link_bw=25e9,
+                    links=1, gemm_eff=0.6)
+
+HW = {h.name: h for h in (TPU_V5E, H100_NVL, L20_PCIE)}
+
+
+# ---------------------------------------------------------------------------
+# Analytical cost terms for one MoE layer (per device)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEShape:
+    M: int          # tokens on this device's group before dispatch
+    N: int          # d_model
+    K: int          # d_expert (per-device after ETP split)
+    E: int          # global experts
+    topk: int
+    ep: int
+    etp: int
+    glu: bool = True
+    bytes_per_elt: int = 2
+
+
+# fixed software/DMA-setup latency per fine-grained transfer: this is what
+# makes the optimal decomposition COARSER at small M and FINER at large M
+# (the paper's Fig. 8 shift of the optimal division point with M)
+HOP_LATENCY_S = 5e-6
+
+
+def gemm_time(hw: Hardware, rows: int, n: int, k: int, n_mats: int = 1) -> float:
+    """Time for rows×k @ k×n (n_mats of them), with small-tile derating."""
+    eff = hw.gemm_eff if rows >= 128 else hw.gemm_eff * hw.small_tile_penalty
+    return n_mats * 2.0 * rows * n * k / (hw.flops * eff)
+
+
+def layer_times(hw: Hardware, s: MoEShape) -> Dict[str, float]:
+    """Per-chunk / per-hop costs for the comet schedule."""
+    rows_per_chunk = s.M * s.topk / s.ep          # expert rows from one source group
+    n_l0 = 2 if s.glu else 1                       # gate+up vs up
+    t_gemm1 = gemm_time(hw, rows_per_chunk, s.K, s.N, n_l0)
+    t_gemm2 = gemm_time(hw, rows_per_chunk, s.N, s.K)
+    chunk_bytes = rows_per_chunk * s.N * s.bytes_per_elt
+    t_hop = HOP_LATENCY_S + chunk_bytes / (hw.link_bw * hw.links)
+    return {
+        "t_gemm1": t_gemm1, "t_gemm2": t_gemm2,
+        "t_chunk_compute": t_gemm1 + t_gemm2,
+        "t_hop": t_hop,
+        "dispatch_balance": t_hop / max(t_gemm1 + t_gemm2, 1e-12),
+    }
+
+
+def choose_n_col(hw: Hardware, s: MoEShape, max_blocks: int = 8,
+                 align: int = 128) -> int:
+    """Pick the layer-1 N-decomposition: the finest column split whose
+    per-block GEMM still runs at full tile efficiency (block ≥ align cols)
+    and whose per-block return-hop stays ≤ per-block compute (no comm-bound
+    tail). Mirrors the paper's observation that the optimal n_c grows with M
+    and with communication burden (lower TP / higher bandwidth need)."""
+    best = 1
+    for n_col in range(1, max_blocks + 1):
+        blk = s.N // n_col
+        if blk < align or s.N % n_col:
+            continue
+        rows = s.M * s.topk / s.ep
+        t_blk_gemm = gemm_time(hw, rows, blk, s.K)
+        t_blk_hop = (HOP_LATENCY_S
+                     + rows * blk * s.bytes_per_elt / (hw.link_bw * hw.links))
+        if t_blk_hop <= t_blk_gemm * 1.05:
+            best = n_col
+    return best
+
+
+# ---------------------------------------------------------------------------
+# Profile cache (the paper's pre-compiled kernel metadata analogue)
+# ---------------------------------------------------------------------------
+
+
+class AdaptiveCache:
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self.table: Dict[str, Dict] = {}
+        if path and os.path.exists(path):
+            with open(path) as f:
+                self.table = json.load(f)
+
+    @staticmethod
+    def key(s: MoEShape, hw: Hardware) -> str:
+        return f"{hw.name}:M{s.M}:N{s.N}:K{s.K}:E{s.E}:k{s.topk}:ep{s.ep}:etp{s.etp}"
+
+    def get(self, s: MoEShape, hw: Hardware) -> Optional[Dict]:
+        return self.table.get(self.key(s, hw))
+
+    def put(self, s: MoEShape, hw: Hardware, cfg: Dict):
+        self.table[self.key(s, hw)] = cfg
+        if self.path:
+            with open(self.path, "w") as f:
+                json.dump(self.table, f, indent=1)
+
+    def tune(self, s: MoEShape, hw: Hardware,
+             candidates: Iterable[Dict],
+             measure: Callable[[Dict], float]) -> Dict:
+        """Profile-guided: measure each candidate once, cache the argmin."""
+        hit = self.get(s, hw)
+        if hit is not None:
+            return hit
+        best_cfg, best_t = None, math.inf
+        for cfg in candidates:
+            t = measure(cfg)
+            if t < best_t:
+                best_cfg, best_t = dict(cfg), t
+        best_cfg["measured_s"] = best_t
+        self.put(s, hw, best_cfg)
+        return best_cfg
+
+
+def default_candidates(s: MoEShape, max_blocks: int = 8):
+    for n_col in range(1, max_blocks + 1):
+        if s.N % n_col == 0 and s.N // n_col >= 128:
+            yield {"n_col_blocks": n_col}
+
+
+def resolve_n_col(mcfg, cfg_d_model: int, tokens_local: int,
+                  ep: int, etp: int, hw: Hardware = TPU_V5E) -> int:
+    """Entry used by moe_layer when mcfg.n_col_blocks == 0 (adaptive)."""
+    if mcfg.n_col_blocks:
+        return mcfg.n_col_blocks
+    s = MoEShape(M=tokens_local, N=cfg_d_model, K=mcfg.d_expert // etp,
+                 E=mcfg.num_experts, topk=mcfg.top_k, ep=ep, etp=etp)
+    return choose_n_col(hw, s)

@@ -1,0 +1,184 @@
+"""The MoE block: router → shared-tensor dispatch → transport → combine.
+
+Runs under ``jax.shard_map`` (manual SPMD) when a mesh is active so the
+collective schedule is explicit and deterministic — the paper's argument
+against stream-level scheduling, and what the roofline parser inspects.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import routing as R
+from repro.core import transport as T
+from repro.models.common import ParamDecl, is_glu
+from repro.parallel.mesh import AxisCtx
+
+
+# ---------------------------------------------------------------------------
+# Schema: expert weights are stored PRE-SHARDED with leading dim = model-axis
+# size W; entry r is exactly what model-rank r owns (experts sliced over ep
+# groups, d_expert sliced over etp). This supports any (ep, etp) factorization
+# without divisibility constraints between E and the mesh axis.
+# ---------------------------------------------------------------------------
+
+
+def moe_schema(cfg, mcfg, W: int, etp: int) -> Dict:
+    d = cfg.d_model
+    E_loc = mcfg.num_experts // max(1, W // etp)
+    f_loc = mcfg.d_expert // etp
+    s: Dict = {
+        "router": ParamDecl((d, mcfg.num_experts), ("embed_v", "experts_v")),
+    }
+    ew: Dict[str, ParamDecl] = {}
+    if is_glu(cfg.activation):
+        ew["w_gate"] = ParamDecl((W, E_loc, d, f_loc),
+                                 ("expert_shard", None, "embed", None))
+    ew["w_up"] = ParamDecl((W, E_loc, d, f_loc),
+                           ("expert_shard", None, "embed", None))
+    ew["w_down"] = ParamDecl((W, E_loc, f_loc, d),
+                             ("expert_shard", None, None, "embed"))
+    s["experts"] = ew
+    if mcfg.num_shared_experts:
+        from repro.models.common import ffn_schema
+        s["shared"] = ffn_schema(cfg, d, mcfg.d_expert * mcfg.num_shared_experts)
+    return s
+
+
+def pack_expert_weights(full: Dict[str, jnp.ndarray], ep: int, etp: int) -> Dict:
+    """Convert logical (E, d, f)/(E, f, d) weights into the pre-sharded
+    (W, E_loc, ...) storage layout. Used by tests/examples."""
+    out = {}
+    for name, w in full.items():
+        E = w.shape[0]
+        E_loc = E // ep
+        packed = []
+        for g in range(ep):
+            for t in range(etp):
+                sl = w[g * E_loc:(g + 1) * E_loc]
+                if name == "w_down":
+                    f_loc = w.shape[1] // etp
+                    packed.append(sl[:, t * f_loc:(t + 1) * f_loc, :])
+                else:
+                    f_loc = w.shape[2] // etp
+                    packed.append(sl[:, :, t * f_loc:(t + 1) * f_loc])
+        out[name] = jnp.stack(packed)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Local (per-shard) body
+# ---------------------------------------------------------------------------
+
+
+def _moe_body(cfg, mcfg, ctx: AxisCtx, n_col: int, x, router_w, experts):
+    """x: (B_loc, S_loc, d) local tokens. Returns (y, aux)."""
+    B, S, d = x.shape
+    xt = x.reshape(B * S, d)
+    Tn = B * S
+    E = mcfg.num_experts
+    token_axes = ()
+    if ctx.active:
+        token_axes = tuple(ctx.dp_axes)
+        if ctx.seq_shard and S > 1:
+            token_axes = token_axes + (ctx.model_axis,)
+    idx, wts, aux = R.router(xt, router_w, mcfg, token_axes)
+    C = R.capacity(Tn, mcfg.top_k, E, mcfg.capacity_factor)
+    buf, info = R.build_dispatch(xt, idx, E, C)                     # (E, C, d)
+    ep = ctx.ep if ctx.active else 1
+    E_loc = E // ep
+    w_local = {k: v[0] for k, v in experts.items()}                 # strip shard dim
+
+    impl = mcfg.impl
+    if impl == "coarse" and ctx.active and ctx.world > 1:
+        y = _coarse(cfg, mcfg, ctx, xt, idx, wts, E, w_local)
+    elif impl == "bcast" or (impl != "dense" and S == 1 and not ctx.seq_shard):
+        out = T.transport_bcast(ctx, buf, w_local, cfg.activation)
+        y = R.combine(out.reshape(E * C, d), info, wts, E_loc=E, C=C,
+                      rot=None, ep=1)
+    else:
+        send = buf.reshape(ep, E_loc, C, d)
+        if impl == "comet":
+            out, rot = T.transport_comet(ctx, send, w_local, cfg.activation,
+                                         n_col_blocks=n_col,
+                                         ring_group=mcfg.ring_group)
+        else:                                                        # naive / dense
+            out, rot = T.transport_naive(ctx, send, w_local, cfg.activation)
+        y = R.combine(out.reshape(ep * E_loc * C, d), info, wts, E_loc, C,
+                      rot, ep)
+
+    y = y.reshape(B, S, d)
+    # aux already pmean'd over token axes inside the router
+    return y, aux
+
+
+def _coarse(cfg, mcfg, ctx, xt, idx, wts, E, w_local):
+    """FasterMoE-style: n token slices, each a full (a2a → MLP → a2a) round."""
+    n = max(1, mcfg.coarse_chunks)
+    Tn, d = xt.shape
+    while Tn % n:
+        n -= 1
+    Ts = Tn // n
+    Cs = R.capacity(Ts, mcfg.top_k, E, mcfg.capacity_factor)
+    ep = ctx.ep
+    E_loc = E // ep
+    outs = []
+    for i in range(n):
+        xs = xt[i * Ts:(i + 1) * Ts]
+        ids = idx[i * Ts:(i + 1) * Ts]
+        ws = wts[i * Ts:(i + 1) * Ts]
+        buf, info = R.build_dispatch(xs, ids, E, Cs)
+        send = buf.reshape(ep, E_loc, Cs, d)
+        out, _ = T.transport_naive(ctx, send, w_local, cfg.activation)
+        outs.append(R.combine(out.reshape(ep * E_loc * Cs, d), info, ws,
+                              E_loc, Cs, None, ep))
+    return jnp.concatenate(outs, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Public entry
+# ---------------------------------------------------------------------------
+
+
+def moe_ffn(cfg, mcfg, params, x, ctx: AxisCtx,
+            n_col: int = 0) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) global (under pjit) or local (no mesh). Returns (y, aux).
+    n_col == 0 → adaptive workload assignment picks the layer-1 column split."""
+    if n_col == 0:
+        from repro.core.adaptive import resolve_n_col
+        toks = x.shape[0] * x.shape[1]
+        dp = ctx.dp_size if ctx.active else 1
+        n_col = resolve_n_col(mcfg, cfg.d_model, max(1, toks // max(1, dp)),
+                              ctx.ep, ctx.etp)
+    router_w = params["router"]
+    experts = {k: v for k, v in params["experts"].items()}
+
+    if not ctx.active:
+        return _moe_body(cfg, mcfg, AxisCtx(), n_col, x, router_w, experts)
+
+    S = x.shape[1]
+    seq_sharded = ctx.seq_shard and S > 1 and S % ctx.model_size == 0
+    # batch below the dp size (e.g. long-context decode with B=1): replicate
+    # over dp instead of sharding it
+    dp_axes = (ctx.dp_axes
+               if ctx.dp_size > 1 and x.shape[0] % ctx.dp_size == 0 else ())
+    x_spec = P(dp_axes or None,
+               ctx.model_axis if seq_sharded else None, None)
+    body_ctx = dataclasses.replace(ctx, seq_shard=seq_sharded,
+                                   dp_axes=dp_axes)
+
+    def body(x_l, rw, ew):
+        return _moe_body(cfg, mcfg, body_ctx, n_col, x_l, rw, ew)
+
+    expert_specs = {k: P(ctx.model_axis, None, None, None) for k in experts}
+    f = jax.shard_map(
+        body, mesh=ctx.mesh,
+        in_specs=(x_spec, P(None, None), expert_specs),
+        out_specs=(x_spec, P()),
+        check_vma=False)
+    return f(x, router_w, experts)

@@ -1,0 +1,268 @@
+"""MoE transports: how the shared tensor moves between ranks.
+
+All functions take the dispatch buffer ``send`` of shape (ep, E_loc, C, d)
+(chunked by destination expert-group — the paper's M-dimension decomposition)
+and local expert weights, and return ``recv_out`` of shape (ep, E_loc, C, d)
+holding this rank's tokens' expert outputs, plus the ring rotation needed by
+``combine``.
+
+  naive   — single all_to_all in, grouped MLP, single all_to_all back
+            (Megatron-style non-overlapped baseline).
+  coarse  — FasterMoE/Tutel-style: token range split into ``n`` slices, each
+            slice runs the naive schedule; slices pipeline at kernel level.
+            (Implemented at the layer level in moe_layer.py.)
+  comet   — the paper: decomposed collectives. Dispatch is ep-1 ring steps of
+            collective-permute; the chunk at ICI distance 0 (local) computes
+            first (paper's "sort by source rank / local tiles first"), each
+            chunk's expert MLP is fused GEMM1→act→GEMM2 and its *output is
+            returned immediately* via a reverse permute — both directions
+            overlap the next chunk's compute (XLA async collective-permute).
+            Layer-1's N-dimension decomposition: the second GEMM produces
+            ``n_col_blocks`` column blocks, each combined/returned as soon as
+            it completes (paper Fig. 6 column-major GroupGEMM traversal).
+  bcast   — decode-shape path: tokens replicated over the model axis, each
+            rank computes its experts, psum combines. No dispatch collective.
+
+ETP (> 1) shards every expert's hidden dim across ``etp`` adjacent ranks of
+the model axis; chunks are replicated across the etp subgroup (collectives
+use axis_index_groups), partial GEMM2 outputs psum over the subgroup.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.common import activate, is_glu
+from repro.parallel.mesh import AxisCtx
+
+
+# ---------------------------------------------------------------------------
+# Expert MLP (GroupGEMM over local experts)
+# ---------------------------------------------------------------------------
+
+# GroupGEMM backend: "xla" (einsum; XLA fuses + reorders freely) or "pallas"
+# (the kernels/grouped_gemm.py kernel with Comet traversal orders — on TPU
+# this pins tile completion order, layer-1 uses order="n_major" per Fig. 6).
+GEMM_IMPL = "xla"
+
+
+def set_gemm_impl(name: str):
+    global GEMM_IMPL
+    assert name in ("xla", "pallas"), name
+    GEMM_IMPL = name
+
+
+def _gg(rows, w, order="expert_major"):
+    if GEMM_IMPL == "pallas":
+        from repro.kernels import ops
+        return ops.grouped_gemm(rows, w, order=order)
+    contract = "erd,edf->erf" if w.shape[1] == rows.shape[-1] else "erf,efd->erd"
+    return jnp.einsum(contract, rows, w)
+
+
+def expert_gemm1(rows, w, activation: str):
+    """rows: (E_loc, R, d) -> h: (E_loc, R, f_loc)."""
+    if is_glu(activation):
+        gate = _gg(rows, w["w_gate"])
+        up = _gg(rows, w["w_up"])
+        return activate(activation, gate, up)
+    up = _gg(rows, w["w_up"])
+    return activate(activation, None, up)
+
+
+def expert_gemm2(h, w, col_slice: Optional[Tuple[int, int]] = None):
+    """h: (E_loc, R, f_loc) -> (E_loc, R, d_block)."""
+    wd = w["w_down"]
+    if col_slice is not None:
+        wd = lax.dynamic_slice_in_dim(wd, col_slice[0], col_slice[1], axis=2)
+    return _gg(h, wd, order="n_major")
+
+
+def _etp_psum(ctx: AxisCtx, x):
+    if ctx.etp == 1:
+        return x
+    return lax.psum(x, ctx.model_axis, axis_index_groups=ctx.etp_groups())
+
+
+def expert_mlp(ctx: AxisCtx, rows, w, activation: str):
+    h = expert_gemm1(rows, w, activation)
+    out = expert_gemm2(h, w)
+    return _etp_psum(ctx, out)
+
+
+# ---------------------------------------------------------------------------
+# naive: one all_to_all each way
+# ---------------------------------------------------------------------------
+
+
+def transport_naive(ctx: AxisCtx, send, w, activation: str):
+    ep, E_loc, C, d = send.shape
+    ax = ctx.model_axis
+    if not ctx.active or ctx.world == 1:
+        rows = send.transpose(1, 0, 2, 3).reshape(E_loc, ep * C, d)
+        out = expert_mlp(ctx, rows, w, activation)
+        out = out.reshape(E_loc, ep, C, d).transpose(1, 0, 2, 3)
+        return out, None
+
+    if ctx.etp == 1:
+        recv = lax.all_to_all(send, ax, 0, 0, tiled=True)           # (ep,E_loc,C,d)
+        rows = recv.transpose(1, 0, 2, 3).reshape(E_loc, ep * C, d)
+        out = expert_mlp(ctx, rows, w, activation)
+        out = out.reshape(E_loc, ep, C, d).transpose(1, 0, 2, 3)
+        ret = lax.all_to_all(out, ax, 0, 0, tiled=True)
+        return ret, None
+
+    # ETP > 1: replicate chunks across the etp subgroup, exchange within
+    # same-tp groups, psum partials, return from the tp-matching rank.
+    etp, ep_g = ctx.etp, ctx.ep
+    gathered = lax.all_gather(send, ax, axis_index_groups=ctx.etp_groups())
+    # (etp, ep, E_loc, C, d): gathered[t] = send buffer of subgroup member t
+    recv = lax.all_to_all(gathered, ax, 1, 1, axis_index_groups=ctx.tp_groups(),
+                          tiled=True)                               # (etp,ep,...)
+    rows = recv.transpose(2, 0, 1, 3, 4).reshape(E_loc, etp * ep_g * C, d)
+    out = expert_mlp(ctx, rows, w, activation)                      # psum'd
+    out = out.reshape(E_loc, etp, ep_g, C, d)
+    my_tp = lax.axis_index(ax) % etp
+    mine = jnp.take(out, my_tp, axis=1)                             # (E_loc,ep,C,d)
+    mine = mine.transpose(1, 0, 2, 3)
+    ret = lax.all_to_all(mine, ax, 0, 0, axis_index_groups=ctx.tp_groups(),
+                         tiled=True)
+    return ret, None
+
+
+# ---------------------------------------------------------------------------
+# comet: decomposed ring with fused per-chunk MLP + early column-block return
+# ---------------------------------------------------------------------------
+
+
+def _perm(ctx: AxisCtx, group_shift: int, tp_shift: int):
+    """Permutation over the model axis: (g, t) -> ((g+group_shift)%ep, (t+tp_shift)%etp)."""
+    W, etp, ep = ctx.world, ctx.etp, ctx.ep
+    pairs = []
+    for r in range(W):
+        g, t = r // etp, r % etp
+        dst = ((g + group_shift) % ep) * etp + (t + tp_shift) % etp
+        pairs.append((r, dst))
+    return pairs
+
+
+def transport_comet(ctx: AxisCtx, send, w, activation: str,
+                    n_col_blocks: int = 1, ring_group: int = 1):
+    """Returns (recv_out (ep, E_loc, C, d), rot) — combine() must use the ring
+    rotation: chunk slot s holds outputs for destination group (rot - s) % ep.
+
+    ring_group g: number of source-rank chunks fused into ONE GroupGEMM
+    macro-step (ep/g steps total). g=1 is the finest overlap (paper default);
+    larger g trades overlap granularity for arithmetic intensity — each
+    macro-step reads the expert weights once for g chunks, so weight HBM
+    traffic and backward dW-accumulator traffic scale ×(g/ep) relative to
+    ×1. The adaptive layer picks g from the roofline balance (§3.2.2: the
+    same compute-vs-comm division the paper tunes with thread-block counts).
+    """
+    ep, E_loc, C, d = send.shape
+    ax = ctx.model_axis
+    etp = ctx.etp
+
+    if not ctx.active or ctx.world == 1:
+        out, _ = transport_naive(ctx, send, w, activation)
+        return out, None
+
+    r = lax.axis_index(ax)
+    g_r = r // etp
+    n_col = max(1, min(n_col_blocks, 8))
+    while d % n_col:
+        n_col -= 1
+    blk = d // n_col
+    g = max(1, min(ring_group, ep))
+    while ep % g:
+        g -= 1
+    n_steps = ep // g
+
+    outs: List[jnp.ndarray] = []
+    for step in range(n_steps):
+        # ---- dispatch: receive g source groups' chunks ---------------------
+        chunk_rows = []
+        for j in range(g):
+            s = step * g + j
+            to_send = _dyn_chunk(send, (g_r - s) % ep)              # (E_loc,C,d)
+            recvs = []
+            for o in range(etp):
+                if s == 0 and o == 0:
+                    recvs.append(to_send)                           # local chunk first
+                else:
+                    recvs.append(lax.ppermute(to_send, ax, _perm(ctx, -s, o)))
+            if etp == 1:
+                chunk_rows.append(recvs[0])                         # (E_loc,C,d)
+            else:
+                stacked = jnp.stack(recvs)                          # (etp,E_loc,C,d)
+                # reorder by true source tp: chunk from source tp u sits at
+                # position o = (t_r - u) % etp
+                t_r = r % etp
+                order = (t_r - jnp.arange(etp)) % etp
+                by_u = jnp.take(stacked, order, axis=0)
+                chunk_rows.append(
+                    by_u.transpose(1, 0, 2, 3).reshape(E_loc, etp * C, d))
+        rows = (chunk_rows[0] if g == 1 else
+                jnp.concatenate(chunk_rows, axis=1))   # (E_loc, g*etp*C, d)
+
+        # ---- fused macro-step expert MLP (layer0 consumer) -----------------
+        h = expert_gemm1(rows, w, activation)                       # (E_loc,R,f_loc)
+
+        # ---- layer1: N-decomposed GEMM2, return each column block early ----
+        Rc = etp * C                                    # rows per source chunk
+        blocks: List[List[jnp.ndarray]] = [[] for _ in range(g)]
+        for b in range(n_col):
+            ob = expert_gemm2(h, w, (b * blk, blk))     # (E_loc, g*Rc, blk)
+            ob = _etp_psum(ctx, ob)
+            for j in range(g):
+                s = step * g + j
+                obj = lax.slice_in_dim(ob, j * Rc, (j + 1) * Rc, axis=1)
+                if etp > 1:
+                    ob_u = obj.reshape(E_loc, etp, C, blk)
+                    t_r = r % etp
+                    ob_mine = jnp.take(ob_u, t_r, axis=1)           # (E_loc,C,blk)
+                else:
+                    ob_mine = obj
+                if s == 0:
+                    blocks[j].append(ob_mine)
+                else:
+                    blocks[j].append(lax.ppermute(ob_mine, ax, _perm(ctx, s, 0)))
+        for j in range(g):
+            outs.append(jnp.concatenate(blocks[j], axis=-1))        # (E_loc,C,d)
+
+    recv_out = jnp.stack(outs)                                      # (ep,E_loc,C,d)
+    return recv_out, g_r
+
+
+def _dyn_chunk(send, g):
+    """send: (ep, E_loc, C, d); g traced -> (E_loc, C, d)."""
+    return lax.dynamic_index_in_dim(send, g, axis=0, keepdims=False)
+
+
+# ---------------------------------------------------------------------------
+# bcast: decode path — tokens replicated over the model axis
+# ---------------------------------------------------------------------------
+
+
+def transport_bcast(ctx: AxisCtx, buf_full, w, activation: str):
+    """buf_full: (E, C, d) — identical on every model rank. Each rank runs its
+    own expert slice; a single psum over the model axis both sums ETP partials
+    and merges expert groups. Returns (E, C, d) fully combined."""
+    E, C, d = buf_full.shape
+    if not ctx.active or ctx.world == 1:
+        rows = buf_full
+        out = expert_mlp(ctx, rows, w, activation)
+        return out
+    ax = ctx.model_axis
+    E_loc = E // ctx.ep
+    r = lax.axis_index(ax)
+    g_r = r // ctx.etp
+    mine = lax.dynamic_slice_in_dim(buf_full, g_r * E_loc, E_loc, axis=0)
+    h = expert_gemm1(mine, w, activation)
+    out = expert_gemm2(h, w)                                        # partial
+    full = jnp.zeros((E, C, d), out.dtype)
+    full = lax.dynamic_update_slice_in_dim(full, out, g_r * E_loc, axis=0)
+    return lax.psum(full, ax)

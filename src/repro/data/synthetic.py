@@ -1,0 +1,94 @@
+"""Deterministic synthetic data pipeline with background prefetch.
+
+Every batch is a pure function of (seed, step) — restart-safe: resuming from a
+checkpoint at step k regenerates exactly the batches k, k+1, … that a failed
+run would have seen. Sharded per process via (process_index, process_count).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Dict, Iterator, Optional
+
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch.specs import WHISPER_DEC_RATIO
+
+
+class SyntheticLM:
+    def __init__(self, cfg: ModelConfig, shape_structs: Dict[str, Any],
+                 seed: int = 0, process_index: int = 0, process_count: int = 1):
+        self.cfg = cfg
+        self.structs = shape_structs
+        self.seed = seed
+        self.pidx = process_index
+        self.pcount = process_count
+
+    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step, self.pidx]))
+        out: Dict[str, np.ndarray] = {}
+        if "tokens" in self.structs:
+            # correlated stream so models actually learn: labels = next token
+            shape = tuple(self.structs["tokens"].shape)
+            stream = self._markov(rng, shape, self.cfg.vocab_size)
+            out["tokens"] = stream
+            if "labels" in self.structs:
+                lab = np.roll(stream, -1, axis=-1)
+                lab[..., -1] = 0
+                out["labels"] = lab
+        elif "labels" in self.structs:                # vlm: embeds + labels
+            shape = tuple(self.structs["labels"].shape)
+            out["labels"] = rng.integers(0, self.cfg.vocab_size, size=shape,
+                                         dtype=np.int32)
+        for name in ("embeds", "frames"):
+            if name in self.structs:
+                shape = tuple(self.structs[name].shape)
+                out[name] = rng.standard_normal(shape).astype(np.float32) * 0.02
+        return out
+
+    @staticmethod
+    def _markov(rng, shape, vocab):
+        """Cheap learnable structure: x[t+1] = (a*x[t] + b + noise) % vocab."""
+        x = rng.integers(0, vocab, size=shape[:-1] + (1,), dtype=np.int64)
+        seq = [x]
+        a, b = 31, 17
+        for _ in range(shape[-1] - 1):
+            nxt = (a * seq[-1] + b + rng.integers(0, 3, size=x.shape)) % vocab
+            seq.append(nxt)
+        return np.concatenate(seq, axis=-1).astype(np.int32)
+
+
+class Prefetcher:
+    """Background-thread prefetch: overlaps host batch synthesis with device
+    compute (the data-pipeline half of compute/comm overlap)."""
+
+    def __init__(self, source: SyntheticLM, start_step: int = 0, depth: int = 2):
+        self.source = source
+        self.q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self.step = start_step
+        self._stop = threading.Event()
+        self.thread = threading.Thread(target=self._run, daemon=True)
+        self.thread.start()
+
+    def _run(self):
+        s = self.step
+        while not self._stop.is_set():
+            try:
+                self.q.put((s, self.source.batch_at(s)), timeout=0.2)
+                s += 1
+            except queue.Full:
+                continue
+
+    def next(self):
+        return self.q.get()
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self.q.get_nowait()
+        except queue.Empty:
+            pass
+        self.thread.join(timeout=2)

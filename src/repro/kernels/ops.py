@@ -1,0 +1,61 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in ``interpret=True`` mode —
+the kernel body runs in Python for correctness validation; on TPU the same
+``pallas_call`` compiles to Mosaic. ``interpret`` auto-detects the backend
+unless forced via keyword.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import grouped_gemm as _gg
+from repro.kernels import rmsnorm as _rn
+from repro.kernels import topk_combine as _tc
+
+
+def _interp(flag: Optional[bool]) -> bool:
+    if flag is not None:
+        return flag
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "order",
+                                             "interpret"))
+def grouped_gemm(lhs, rhs, bm: int = 128, bn: int = 128, bk: int = 512,
+                 order: str = "expert_major", interpret: Optional[bool] = None):
+    return _gg.grouped_gemm_padded(lhs, rhs, bm=bm, bn=bn, bk=bk, order=order,
+                                   interpret=_interp(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk",
+                                             "interpret"))
+def flash_attention(q, k, v, causal: bool = True, bq: int = 128,
+                    bk: int = 128, interpret: Optional[bool] = None):
+    return _fa.flash_attention(q, k, v, causal=causal, bq=bq, bk=bk,
+                               interpret=_interp(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "bt", "interpret"))
+def rmsnorm(x, scale, eps: float = 1e-5, bt: int = 256,
+            interpret: Optional[bool] = None):
+    return _rn.rmsnorm(x, scale, eps=eps, bt=bt, interpret=_interp(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "interpret"))
+def topk_combine(rows, weights, bt: int = 256,
+                 interpret: Optional[bool] = None):
+    return _tc.topk_combine(rows, weights, bt=bt, interpret=_interp(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_forward(x, dt, A, Bm, Cm, D, chunk: int = 64,
+                interpret: Optional[bool] = None):
+    from repro.kernels import ssd as _ssd
+    return _ssd.ssd_forward(x, dt, A, Bm, Cm, D, chunk=chunk,
+                            interpret=_interp(interpret))

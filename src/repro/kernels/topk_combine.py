@@ -1,0 +1,46 @@
+"""Top-k combine epilogue as a Pallas-TPU kernel.
+
+The paper's layer-1 consumer: after the N-major GroupGEMM produces expert
+outputs, each token's k expert rows are weighted-summed in fp32. On TPU the
+*gather* (slot → token) stays outside the kernel (dynamic HBM gathers belong
+to XLA's gather engine, not VMEM tiles — hardware-adaptation note in
+DESIGN.md); the kernel fuses the (T, k, d) weighted reduction, which is the
+bandwidth-bound part that runs per column block in the overlap schedule.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _combine_kernel(rows_ref, w_ref, o_ref):
+    rows = rows_ref[...].astype(jnp.float32)          # (bt, k, d)
+    w = w_ref[...].astype(jnp.float32)                # (bt, k)
+    o_ref[...] = jnp.einsum("tkd,tk->td", rows, w).astype(o_ref.dtype)
+
+
+def topk_combine(rows: jnp.ndarray, weights: jnp.ndarray, *,
+                 bt: int = 256, interpret: bool = False) -> jnp.ndarray:
+    """rows: (T, k, d) expert outputs per (token, choice); weights: (T, k).
+    Returns (T, d) fp32-accumulated weighted sum, cast to rows.dtype."""
+    T, k, d = rows.shape
+    bt = min(bt, T)
+    pad = (bt - T % bt) % bt
+    if pad:
+        rows = jnp.pad(rows, ((0, pad), (0, 0), (0, 0)))
+        weights = jnp.pad(weights, ((0, pad), (0, 0)))
+    out = pl.pallas_call(
+        _combine_kernel,
+        grid=((T + pad) // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, k, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bt, k), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((T + pad, d), rows.dtype),
+        interpret=interpret,
+    )(rows, weights)
+    return out[:T] if pad else out

@@ -1,0 +1,142 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+# (Tests may shrink the placeholder fleet via REPRO_DRYRUN_DEVICES.)
+if os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["REPRO_DRYRUN_DEVICES"])
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this builds the production mesh, the jitted step
+(train_step for train shapes, prefill/serve_step for inference shapes),
+lowers it against ShapeDtypeStruct inputs (no allocation), compiles, and
+prints ``memory_analysis()`` + ``cost_analysis()`` + the three roofline
+terms. Failures (sharding mismatch, OOM at compile, unsupported collective)
+are bugs in the system — the exit code reflects them.
+
+Usage:
+  python -m repro.launch.dryrun --arch all --shape all            # single-pod
+  python -m repro.launch.dryrun --arch all --shape all --multi-pod
+  python -m repro.launch.dryrun --arch qwen3-moe-235b-a22b --shape train_4k \
+      --impl comet --out experiments/dryrun
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+
+def run_cell(cfg, shape, mesh, n_chips, impl, out_dir=None, verbose=True):
+    import dataclasses
+
+    import jax
+
+    from repro.analysis import roofline as RL
+    from repro.configs.base import shape_applicable
+    from repro.launch.train_step import (build_decode_step,
+                                         build_prefill_step,
+                                         build_train_step)
+
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        return {"status": "skipped", "reason": reason}
+
+    if cfg.moe is not None and impl:
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(cfg.moe,
+                                                               impl=impl))
+    t0 = time.time()
+    if shape.kind == "train":
+        built = build_train_step(cfg, shape, mesh)
+        args = (built["state_abstract"], built["batch_structs"])
+        jitted = built["jit"]
+    elif shape.kind == "prefill":
+        built = build_prefill_step(cfg, shape, mesh)
+        args = (built["params_abstract"], built["batch_structs"])
+        jitted = built["jit"]
+    else:  # decode: serve_step = one new token against a seq_len KV cache
+        built = build_decode_step(cfg, shape, mesh)
+        args = (built["params_abstract"], built["cache_abstract"],
+                built["tok"], built["pos"])
+        jitted = built["jit"]
+
+    lowered = jitted.lower(*args)
+    compiled = lowered.compile()
+    elapsed = time.time() - t0
+
+    report = RL.analyze(compiled, n_chips, cfg=cfg, shape=shape)
+    report["status"] = "ok"
+    report["compile_s"] = elapsed
+    report["impl"] = impl or (cfg.moe.impl if cfg.moe else "-")
+    name = f"{cfg.name}/{shape.name}/{n_chips}chips"
+    if verbose:
+        print(RL.fmt_report(name, report))
+        print(f"  compile: {elapsed:.1f}s")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        fn = f"{cfg.name}_{shape.name}_{n_chips}_{report['impl']}.json"
+        with open(os.path.join(out_dir, fn), "w") as f:
+            json.dump(report, f, indent=1)
+    return report
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--impl", default="",
+                    help="MoE transport override: naive|coarse|comet")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="")
+    ap.add_argument("--include-paper-archs", action="store_true")
+    args = ap.parse_args()
+
+    import jax
+
+    from repro.configs.base import (ASSIGNED_ARCHS, LM_SHAPES, PAPER_ARCHS,
+                                    get_config)
+    from repro.launch.mesh import make_production_mesh
+
+    n_dev = len(jax.devices())
+    archs = ([args.arch] if args.arch != "all" else
+             list(ASSIGNED_ARCHS) +
+             (PAPER_ARCHS if args.include_paper_archs else []))
+    shapes = [args.shape] if args.shape != "all" else list(LM_SHAPES)
+    meshes = []
+    if args.both_meshes or not args.multi_pod:
+        meshes.append(("single-pod", False))
+    if args.both_meshes or args.multi_pod:
+        meshes.append(("multi-pod", True))
+
+    failures, cells = [], 0
+    for mesh_name, multi in meshes:
+        mesh = make_production_mesh(multi_pod=multi)
+        n_chips = mesh.devices.size
+        print(f"\n#### mesh {mesh_name} {dict(mesh.shape)} "
+              f"({n_chips} chips) ####")
+        for arch in archs:
+            cfg = get_config(arch)
+            for shape_name in shapes:
+                shape = LM_SHAPES[shape_name]
+                cells += 1
+                try:
+                    r = run_cell(cfg, shape, mesh, n_chips, args.impl,
+                                 args.out or None)
+                    if r["status"] == "skipped":
+                        print(f"== {arch}/{shape_name} == SKIPPED: "
+                              f"{r['reason'][:90]}")
+                except Exception as e:
+                    failures.append((mesh_name, arch, shape_name))
+                    print(f"== {arch}/{shape_name} == FAILED: {e}")
+                    traceback.print_exc()
+
+    print(f"\n{cells} cells, {len(failures)} failures")
+    for f in failures:
+        print("  FAIL:", *f)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,14 @@
+"""Production mesh factory (assignment-mandated shape)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    try:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    except TypeError:  # older jax without axis_types kw
+        return jax.make_mesh(shape, axes)

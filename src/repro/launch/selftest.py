@@ -1,0 +1,173 @@
+"""Multi-device self-test: runs under forced host-platform device count.
+
+Invoked as:  python -m repro.launch.selftest --devices 8 [--case all]
+
+Exit code 0 iff every check passes. Used by the pytest suite via subprocess
+(the main test process must keep seeing 1 device).
+"""
+import argparse
+import os
+import sys
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--devices", type=int, default=8)
+    ap.add_argument("--case", default="all")
+    args = ap.parse_args()
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={args.devices} "
+        + os.environ.get("XLA_FLAGS", ""))
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    import dataclasses
+    from repro.configs import get_config
+    from repro.core.moe_layer import moe_ffn, pack_expert_weights
+    from repro.models.common import init_from_schema
+    from repro.core.moe_layer import moe_schema
+    from repro.parallel.mesh import AxisCtx, choose_ep, make_mesh
+
+    failures = []
+
+    def check(name, cond, detail=""):
+        status = "PASS" if cond else "FAIL"
+        print(f"[{status}] {name} {detail}")
+        if not cond:
+            failures.append(name)
+
+    # ---- build a small MoE problem ----------------------------------------
+    cfg = get_config("granite-moe-3b-a800m-smoke")
+    d = cfg.d_model
+    E = 8
+    f = 64
+    key = jax.random.PRNGKey(7)
+    ks = jax.random.split(key, 8)
+    full = {
+        "w_gate": jax.random.normal(ks[0], (E, d, f), jnp.float32) * 0.05,
+        "w_up": jax.random.normal(ks[1], (E, d, f), jnp.float32) * 0.05,
+        "w_down": jax.random.normal(ks[2], (E, f, d), jnp.float32) * 0.05,
+    }
+    router_w = jax.random.normal(ks[3], (d, E), jnp.float32) * 0.1
+
+    Bsz, Ssz = 4, 32
+    x = jax.random.normal(ks[4], (Bsz, Ssz, d), jnp.float32)
+
+    # no-drop capacity so local and sharded paths agree exactly
+    mcfg0 = dataclasses.replace(
+        cfg.moe, num_experts=E, d_expert=f, capacity_factor=float(E),
+        top_k=2)
+
+    # ---- reference: local single-device -----------------------------------
+    params_local = {"router": router_w,
+                    "experts": {k: v[None] for k, v in full.items()}}
+    mref = dataclasses.replace(mcfg0, impl="naive")
+    y_ref, aux_ref = jax.jit(
+        lambda xx: moe_ffn(cfg, mref, params_local, xx, AxisCtx()))(x)
+
+    n_dev = args.devices
+    for dp, mp in [(n_dev // 4, 4), (n_dev // 8, 8)] if n_dev >= 8 else [(1, n_dev)]:
+        if dp < 1:
+            continue
+        mesh = make_mesh((dp, mp), ("data", "model"))
+        ep_candidates = {choose_ep(E, mp)[0]}
+        if mp >= 2:
+            ep_candidates.add(mp // 2)          # forces etp == 2
+        for ep_req in sorted(c for c in ep_candidates if c >= 1):
+            ep, etp = ep_req, mp // ep_req
+            if E % ep or f % etp:
+                continue
+            ctx = AxisCtx(mesh=mesh, dp_axes=("data",), model_axis="model",
+                          ep=ep, etp=etp, seq_shard=False)
+            packed = pack_expert_weights(full, ep, etp)
+            params = {"router": router_w, "experts": packed}
+            for impl, rg in (("naive", 1), ("comet", 1), ("comet", 2),
+                             ("coarse", 1)):
+                for seq_shard in (False, True):
+                    if seq_shard and Ssz % mp:
+                        continue
+                    c2 = dataclasses.replace(ctx, seq_shard=seq_shard)
+                    m2 = dataclasses.replace(mcfg0, impl=impl, ring_group=rg,
+                                             n_col_blocks=2 if impl == "comet" else 0)
+                    with jax.set_mesh(mesh):
+                        y, aux = jax.jit(
+                            lambda xx: moe_ffn(cfg, m2, params, xx, c2))(x)
+                    err = float(jnp.max(jnp.abs(y - y_ref)))
+                    scale = float(jnp.max(jnp.abs(y_ref))) + 1e-9
+                    tag = (f"dp{dp} mp{mp} ep{ep} etp{etp} {impl}"
+                           f"{'-rg' + str(rg) if rg > 1 else ''} "
+                           f"sp={int(seq_shard)}")
+                    check(f"moe_fwd {tag}", err / scale < 2e-5,
+                          f"rel_err={err/scale:.2e}")
+                    check(f"moe_aux {tag}",
+                          abs(float(aux - aux_ref)) < 1e-4,
+                          f"aux={float(aux):.5f} ref={float(aux_ref):.5f}")
+
+            # ---- gradient equivalence (comet vs naive vs local) ------------
+            def loss(params, impl, c):
+                m2 = dataclasses.replace(mcfg0, impl=impl)
+                y, aux = moe_ffn(cfg, m2, params, x, c)
+                return jnp.sum(y ** 2) + aux
+
+            with jax.set_mesh(mesh):
+                g_naive = jax.jit(jax.grad(lambda p: loss(p, "naive", ctx)))(params)
+                g_comet = jax.jit(jax.grad(lambda p: loss(p, "comet", ctx)))(params)
+            g_local = jax.jit(jax.grad(
+                lambda p: loss(p, "naive", AxisCtx())))(params_local)
+            gl_packed = pack_expert_weights(
+                {k: v[0] for k, v in g_local["experts"].items()}, ep, etp)
+
+            for k in packed:
+                e1 = float(jnp.max(jnp.abs(g_naive["experts"][k] - gl_packed[k])))
+                e2 = float(jnp.max(jnp.abs(g_comet["experts"][k] - gl_packed[k])))
+                s = float(jnp.max(jnp.abs(gl_packed[k]))) + 1e-9
+                check(f"moe_grad[{k}] ep{ep} etp{etp} naive-vs-local", e1 / s < 5e-5,
+                      f"rel={e1/s:.2e}")
+                check(f"moe_grad[{k}] ep{ep} etp{etp} comet-vs-local", e2 / s < 5e-5,
+                      f"rel={e2/s:.2e}")
+            er = float(jnp.max(jnp.abs(g_naive["router"] - g_local["router"])))
+            sr = float(jnp.max(jnp.abs(g_local["router"]))) + 1e-9
+            check(f"moe_grad[router] ep{ep} etp{etp}", er / sr < 5e-5,
+                  f"rel={er/sr:.2e}")
+
+        # ---- decode (S=1) bcast path ---------------------------------------
+        x1 = x[:, :1]
+        y1_ref, _ = jax.jit(
+            lambda xx: moe_ffn(cfg, mref, params_local, xx, AxisCtx()))(x1)
+        ep, etp = choose_ep(E, mp)
+        ctx = AxisCtx(mesh=mesh, dp_axes=("data",), model_axis="model",
+                      ep=ep, etp=etp)
+        packed = pack_expert_weights(full, ep, etp)
+        params = {"router": router_w, "experts": packed}
+        m2 = dataclasses.replace(mcfg0, impl="comet")
+        with jax.set_mesh(mesh):
+            y1, _ = jax.jit(lambda xx: moe_ffn(cfg, m2, params, xx, ctx))(x1)
+        err = float(jnp.max(jnp.abs(y1 - y1_ref)))
+        s = float(jnp.max(jnp.abs(y1_ref))) + 1e-9
+        check(f"moe_decode_bcast mp{mp} ep{ep} etp{etp}", err / s < 2e-5,
+              f"rel={err/s:.2e}")
+
+    # ---- full train-step on mesh for a couple of smoke archs ---------------
+    if args.case in ("all", "train"):
+        from repro.launch.train_step import build_train_step  # noqa
+        from repro.training.trainer import smoke_mesh_train
+        for arch in ("granite-moe-3b-a800m-smoke", "jamba-v0.1-52b-smoke"):
+            try:
+                loss0, loss1 = smoke_mesh_train(arch, n_dev)
+                check(f"mesh_train {arch}",
+                      np.isfinite(loss0) and np.isfinite(loss1) and loss1 < loss0 + 1.0,
+                      f"loss {loss0:.3f} -> {loss1:.3f}")
+            except Exception as e:  # pragma: no cover
+                import traceback
+                traceback.print_exc()
+                check(f"mesh_train {arch}", False, str(e)[:200])
+
+    print(f"\n{'OK' if not failures else 'FAILURES'}: {len(failures)} failed")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

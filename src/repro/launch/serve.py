@@ -1,0 +1,41 @@
+"""Serving launcher CLI: batched prefill + greedy decode.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch granite-moe-3b-a800m-smoke \
+      --batch 4 --max-new 16
+"""
+import argparse
+import time
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    from repro.configs.base import get_config
+    from repro.serving import ServeEngine
+
+    cfg = get_config(args.arch)
+    eng = ServeEngine(cfg, max_seq=args.max_seq, batch_size=args.batch,
+                      seed=args.seed)
+    rng = np.random.default_rng(args.seed)
+    prompts = [rng.integers(1, cfg.vocab_size, size=args.prompt_len).tolist()
+               for _ in range(args.batch)]
+    t0 = time.perf_counter()
+    res = eng.generate(prompts, max_new=args.max_new)
+    dt = time.perf_counter() - t0
+    for i, row in enumerate(res.tokens):
+        print(f"req{i}: {row.tolist()}")
+    print(f"{res.prefill_tokens} prefill toks + {res.decode_steps} decode "
+          f"steps x{args.batch} in {dt:.2f}s")
+
+
+if __name__ == "__main__":
+    main()

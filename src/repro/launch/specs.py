@@ -1,0 +1,99 @@
+"""ShapeDtypeStruct input stand-ins + shardings for every (arch × shape) cell.
+
+Used by the dry-run (no allocation) and by the data pipeline (shape contract).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import lm
+from repro.parallel.mesh import AxisCtx
+from repro.parallel.sharding import cache_specs
+
+# default grad-accumulation per train shape (microbatch count)
+TRAIN_ACCUM = {"train_4k": 8, "smoke": 1}
+WHISPER_DEC_RATIO = 4          # decoder text length = seq_len // ratio
+WHISPER_ENC_LEN_DECODE = 4096  # encoder frames cached during decode
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig, accum: int,
+                      dp_axes: Tuple[str, ...] = ("pod", "data")
+                      ) -> Tuple[Dict[str, Any], Dict[str, P]]:
+    """Returns (ShapeDtypeStructs, PartitionSpecs) for one train batch.
+    Leading dims: (accum, microbatch, seq)."""
+    B, S = shape.global_batch, shape.seq_len
+    while accum > 1 and B % accum:
+        accum -= 1
+    mb = B // accum
+    dt_tok = jnp.int32
+    dp = dp_axes if len(dp_axes) != 1 else dp_axes[0]
+
+    def shp(*tail):
+        return (accum, mb) + tail if accum > 1 else (mb,) + tail
+
+    def spec(*tail):
+        lead = (None, dp) if accum > 1 else (dp,)
+        return P(*(lead + tail))
+
+    structs: Dict[str, Any] = {}
+    specs: Dict[str, P] = {}
+    if cfg.family == "vlm":
+        structs["embeds"] = sds(shp(S, cfg.d_model), cfg.compute_dtype)
+        specs["embeds"] = spec(None, None)
+        structs["labels"] = sds(shp(S), dt_tok)
+        specs["labels"] = spec(None)
+    elif cfg.n_enc_layers:                          # whisper
+        Sd = max(64, S // WHISPER_DEC_RATIO)
+        structs["frames"] = sds(shp(S, cfg.d_model), cfg.compute_dtype)
+        specs["frames"] = spec(None, None)
+        structs["tokens"] = sds(shp(Sd), dt_tok)
+        specs["tokens"] = spec(None)
+        structs["labels"] = sds(shp(Sd), dt_tok)
+        specs["labels"] = spec(None)
+    else:
+        structs["tokens"] = sds(shp(S), dt_tok)
+        specs["tokens"] = spec(None)
+        structs["labels"] = sds(shp(S), dt_tok)
+        specs["labels"] = spec(None)
+    return structs, specs
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: ShapeConfig,
+                        dp_axes: Tuple[str, ...] = ("pod", "data")):
+    s = dataclasses.replace(shape, kind="train")
+    structs, specs = train_batch_specs(cfg, s, accum=1, dp_axes=dp_axes)
+    structs.pop("labels", None)
+    specs.pop("labels", None)
+    return structs, specs
+
+
+def decode_inputs(cfg: ModelConfig, shape: ShapeConfig, ctx: AxisCtx):
+    """Returns (cache_structs, cache_specs_tree, token_struct, token_spec)."""
+    B, S = shape.global_batch, shape.seq_len
+    enc_len = WHISPER_ENC_LEN_DECODE if cfg.n_enc_layers else 0
+    cache = jax.eval_shape(
+        lambda: lm.init_cache(cfg, B, S, enc_len=enc_len))
+    cspecs = cache_specs(cfg, ctx, B, S, enc_len=enc_len)
+    # init_cache entries: attach specs per leaf by structure
+    tok = sds((B, 1), jnp.int32)
+    dp_ok = B % max(1, ctx.dp_size) == 0 and B > 1
+    tok_spec = P(ctx.dp_axes if dp_ok else None, None)
+    return cache, cspecs, tok, tok_spec
+
+
+def cache_leaf_specs(cache_structs, cspecs):
+    """Expand per-entry dict specs to match the full cache pytree."""
+    out = []
+    for entry, spec_entry in zip(cache_structs, cspecs):
+        out.append({k: spec_entry[k] for k in entry})
+    return tuple(out)

@@ -1,0 +1,171 @@
+"""jit-compiled step builders: train (grad-accum, AdamW), prefill, decode.
+
+Each builder returns (jitted_fn, in_shardings, out_shardings, abstract_inputs)
+so the dry-run can ``.lower().compile()`` without allocating, and the trainer
+can run the identical function for real.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch import specs as SP
+from repro.models import lm
+from repro.models.common import specs_from_schema
+from repro.optim.adamw import AdamW
+from repro.parallel.mesh import AxisCtx
+from repro.parallel.sharding import make_ctx, param_specs
+
+Pytree = Any
+
+
+def _named(mesh, tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def state_specs(cfg: ModelConfig, ctx: AxisCtx, fsdp: bool = True):
+    schema = lm.model_schema(cfg, ctx)
+    pspecs = param_specs(schema, ctx.mesh, fsdp)
+    return {
+        "params": pspecs,
+        "opt": {"m": pspecs, "v": pspecs, "count": P()},
+        "step": P(),
+    }
+
+
+def abstract_state(cfg: ModelConfig, ctx: AxisCtx):
+    params = lm.abstract_params(cfg, ctx)
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    return {
+        "params": params,
+        "opt": {"m": jax.tree_util.tree_map(f32, params),
+                "v": jax.tree_util.tree_map(f32, params),
+                "count": jax.ShapeDtypeStruct((), jnp.int32)},
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Train
+# ---------------------------------------------------------------------------
+
+
+def make_train_fn(cfg: ModelConfig, ctx: AxisCtx, optim: AdamW, accum: int):
+    def loss_fn(params, batch):
+        return lm.loss_fn(cfg, params, batch, ctx)
+
+    def step(state, batch):
+        params = state["params"]
+        if accum > 1:
+            def mb(carry, b):
+                gsum, lsum = carry
+                (lo, met), gr = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, b)
+                gsum = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(jnp.float32), gsum, gr)
+                return (gsum, lsum + lo), None
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, lsum), _ = jax.lax.scan(mb, (zeros, jnp.zeros((), jnp.float32)),
+                                            batch)
+            grads = jax.tree_util.tree_map(lambda g: g / accum, grads)
+            loss = lsum / accum
+        else:
+            (loss, met), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        new_params, new_opt, stats = optim.update(grads, state["opt"], params)
+        metrics = {"loss": loss, **stats}
+        return {"params": new_params, "opt": new_opt,
+                "step": state["step"] + 1}, metrics
+
+    return step
+
+
+def build_train_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Optional[Mesh],
+                     optim: Optional[AdamW] = None, accum: int = 0,
+                     fsdp: bool = True, seq_shard: bool = True):
+    """Returns dict with fn/jitted/in_shardings/abstract inputs."""
+    optim = optim or AdamW()
+    accum = accum or SP.TRAIN_ACCUM.get(shape.name, 1)
+    ctx = make_ctx(cfg, mesh, seq_shard=seq_shard)
+    step = make_train_fn(cfg, ctx, optim, accum)
+    dp_axes = ctx.dp_axes if ctx.active else ("pod", "data")
+    batch_structs, batch_pspecs = SP.train_batch_specs(cfg, shape, accum,
+                                                       dp_axes=dp_axes)
+
+    if mesh is None:
+        return {"fn": step, "jit": jax.jit(step, donate_argnums=0),
+                "batch_structs": batch_structs, "ctx": ctx, "accum": accum,
+                "state_abstract": abstract_state(cfg, ctx)}
+
+    sspecs = state_specs(cfg, ctx, fsdp)
+    in_sh = (_named(mesh, sspecs), _named(mesh, batch_pspecs))
+    out_sh = (_named(mesh, sspecs), None)
+    jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                     donate_argnums=0)
+    return {"fn": step, "jit": jitted, "batch_structs": batch_structs,
+            "state_specs": sspecs, "batch_pspecs": batch_pspecs, "ctx": ctx,
+            "accum": accum, "state_abstract": abstract_state(cfg, ctx)}
+
+
+# ---------------------------------------------------------------------------
+# Serve: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def build_prefill_step(cfg: ModelConfig, shape: ShapeConfig,
+                       mesh: Optional[Mesh], fsdp: bool = True):
+    ctx = make_ctx(cfg, mesh, seq_shard=True)
+
+    def fn(params, batch):
+        return lm.prefill(cfg, params, batch, ctx)
+
+    batch_structs, batch_pspecs = SP.prefill_batch_specs(
+        cfg, shape, dp_axes=ctx.dp_axes if ctx.active else ("pod", "data"))
+    params_abs = lm.abstract_params(cfg, ctx)
+    if mesh is None:
+        return {"fn": fn, "jit": jax.jit(fn), "batch_structs": batch_structs,
+                "params_abstract": params_abs, "ctx": ctx}
+    schema = lm.model_schema(cfg, ctx)
+    pspecs = param_specs(schema, mesh, fsdp)
+    in_sh = (_named(mesh, pspecs), _named(mesh, batch_pspecs))
+    jitted = jax.jit(fn, in_shardings=in_sh)
+    return {"fn": fn, "jit": jitted, "batch_structs": batch_structs,
+            "params_abstract": params_abs, "param_pspecs": pspecs, "ctx": ctx}
+
+
+def build_decode_step(cfg: ModelConfig, shape: ShapeConfig,
+                      mesh: Optional[Mesh], fsdp: bool = True):
+    ctx = make_ctx(cfg, mesh, seq_shard=False)
+
+    def fn(params, cache, tokens, pos):
+        logits, new_cache = lm.decode_step(cfg, params, cache, tokens, pos, ctx)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return next_tok, logits, new_cache
+
+    cache_abs, cspecs, tok, tok_spec = SP.decode_inputs(cfg, shape, ctx)
+    params_abs = lm.abstract_params(cfg, ctx)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    if mesh is None:
+        return {"fn": fn, "jit": jax.jit(fn, donate_argnums=1),
+                "cache_abstract": cache_abs, "tok": tok,
+                "params_abstract": params_abs, "ctx": ctx, "pos": pos}
+    schema = lm.model_schema(cfg, ctx)
+    pspecs = param_specs(schema, mesh, fsdp)
+    cache_sh = _named(mesh, SP.cache_leaf_specs(cache_abs, cspecs))
+    in_sh = (_named(mesh, pspecs), cache_sh, NamedSharding(mesh, tok_spec),
+             NamedSharding(mesh, P()))
+    out_sh = (NamedSharding(mesh, tok_spec), None, cache_sh)
+    jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                     donate_argnums=1)
+    return {"fn": fn, "jit": jitted, "cache_abstract": cache_abs, "tok": tok,
+            "params_abstract": params_abs, "param_pspecs": pspecs,
+            "cache_pspecs": cspecs, "ctx": ctx, "pos": pos}

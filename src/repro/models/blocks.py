@@ -1,0 +1,345 @@
+"""Layer blocks: (attention | mamba) + (dense FFN | MoE), schema + apply,
+for train / prefill / decode modes."""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.moe_layer import moe_ffn, moe_schema
+from repro.models import attention as A
+from repro.models import ssm as S
+from repro.models.common import (apply_norm, ffn_apply, ffn_schema,
+                                 norm_schema)
+from repro.parallel.mesh import AxisCtx
+
+
+def _csp(x, ctx: AxisCtx, *axes):
+    """Sharding-constraint helper; no-op without a mesh."""
+    if not ctx.active:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, P(*axes)))
+
+
+# ---------------------------------------------------------------------------
+# Schema for one layer position
+# ---------------------------------------------------------------------------
+
+
+def layer_schema(cfg, pos: int, ctx: AxisCtx, cross: bool = False) -> Dict:
+    kind = cfg.layer_kind(pos)
+    s: Dict[str, Any] = {"ln1": norm_schema(cfg, cfg.d_model)}
+    if kind == "a":
+        s["attn"] = A.attn_schema(cfg, cfg.attn)
+        if cross:
+            s["ln_x"] = norm_schema(cfg, cfg.d_model)
+            s["xattn"] = A.attn_schema(cfg, cfg.attn, cross=True)
+    else:
+        s["ssm"] = S.ssm_schema(cfg, cfg.ssm)
+    has_mlp = cfg.d_ff > 0 or cfg.is_moe_layer(pos)
+    if has_mlp:
+        s["ln2"] = norm_schema(cfg, cfg.d_model)
+        if cfg.is_moe_layer(pos):
+            W = ctx.model_size if ctx.active else 1
+            s["moe"] = moe_schema(cfg, cfg.moe, W, ctx.etp)
+        else:
+            s["ffn"] = ffn_schema(cfg, cfg.d_model, cfg.d_ff)
+    return s
+
+
+# ---------------------------------------------------------------------------
+# Apply — training / prefill
+# ---------------------------------------------------------------------------
+
+
+def attn_case(ctx: AxisCtx, a, Sq: int) -> str:
+    """How attention shards over the model axis. Explicit (not left to the
+    SPMD partitioner) because an indivisible head count otherwise makes XLA
+    reshard INSIDE the chunked-attention scan loops — one collective per
+    (q-block × kv-block) iteration, observed as ~1 TB/device of all-reduce
+    on qwen2-0.5b (14 heads on a 16-way axis).
+
+      heads  — Hq and Hkv both divide the axis: classic TP head sharding.
+      qheads — only Hq divides: q sharded over heads, K/V replicated once
+               per layer (GQA KV is small; Megatron-style).
+      seq    — heads don't divide: sequence-parallel attention; K/V
+               all-gathered once per layer, q/output stay seq-sharded.
+      none   — nothing divides (tiny smoke shapes): replicate.
+    """
+    m = ctx.model_size
+    if not ctx.active or m == 1:
+        return "none"
+    if a.n_heads % m == 0 and a.n_kv_heads % m == 0:
+        return "heads"
+    if a.n_heads % m == 0:
+        return "qheads"
+    if Sq % m == 0 and Sq > 1:
+        return "seq"
+    return "none"
+
+
+def _attn_core(a, causal, use_rope, q_sharded, kv_sharded, mx,
+               q4, k4, v4, qp, kp):
+    """Local (per-shard) attention body. q4: (B, Sq_l, H_l, hd);
+    k4/v4: (B, Sk, Hkv_l, hd); qp/kp: absolute positions (B, Sq_l)/(B, Sk).
+    Runs under shard_map so fwd AND bwd are collective-free inside."""
+    if use_rope:
+        q4 = A.apply_rope(q4, qp, a.rope_theta)
+        k4 = A.apply_rope(k4, kp, a.rope_theta)
+    k_cache, v_cache = k4, v4                    # post-rope, pre-expansion
+    H_l, Hkv_l = q4.shape[2], k4.shape[2]
+    rep = a.n_heads // a.n_kv_heads
+    if mx:
+        r = jax.lax.axis_index(mx)
+        head_base = r * H_l if q_sharded else 0
+        kv_base = r * Hkv_l if kv_sharded else 0
+    else:
+        head_base = kv_base = 0
+    # global q head -> local kv head (works for every sharding case)
+    kv_map = (head_base + jnp.arange(H_l)) // rep - kv_base
+    ke = jnp.take(k4, kv_map, axis=2)
+    ve = jnp.take(v4, kv_map, axis=2)
+    with jax.named_scope("__fusable__flash"):
+        o = A.attention(q4, ke, ve, causal=causal, q_block=a.q_block,
+                        kv_block=a.kv_block, q_pos=qp, kv_pos=kp)
+    return o, k_cache, v_cache
+
+
+def attn_apply(cfg, p, x, ctx: AxisCtx, positions, causal: bool,
+               use_rope: bool = True, kv_x=None, return_kv: bool = False):
+    a = cfg.attn
+    src = x if kv_x is None else kv_x
+    B, Sq, _ = x.shape
+    q = x @ p["wq"]
+    k = src @ p["wk"]
+    v = src @ p["wv"]
+    if "bq" in p:
+        q = q + p["bq"].astype(q.dtype)
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    Sk = src.shape[1]
+    q = q.reshape(B, Sq, a.n_heads, a.head_dim)
+    k = k.reshape(B, Sk, a.n_kv_heads, a.head_dim)
+    v = v.reshape(B, Sk, a.n_kv_heads, a.head_dim)
+    if positions is None:
+        positions = jnp.arange(Sq)[None, :]
+    positions = jnp.broadcast_to(positions, (B, Sq))
+    kv_positions = (positions if kv_x is None else
+                    jnp.broadcast_to(jnp.arange(Sk)[None, :], (B, Sk)))
+
+    Hq_real, Hkv_real = a.n_heads, a.n_kv_heads
+    m = ctx.model_size
+    padded = (a.pad_heads and ctx.active and m > 1
+              and (a.n_heads % m or a.n_kv_heads % m))
+    if padded:
+        # pad KV heads up to the axis, keep the real group ratio for q
+        rep = a.n_heads // a.n_kv_heads
+        Hkv_p = -(-a.n_kv_heads // m) * m
+        Hq_p = Hkv_p * rep
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, Hq_p - a.n_heads), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, Hkv_p - a.n_kv_heads), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, Hkv_p - a.n_kv_heads), (0, 0)))
+        # dummy heads: zero K/V ⇒ uniform softmax over zero values ⇒ zero
+        # output, and real q head h keeps kv head h//rep < Hkv_real
+        a = dataclasses.replace(a, n_heads=Hq_p, n_kv_heads=Hkv_p)
+
+    case = attn_case(ctx, a, Sq)
+    mx = ctx.model_axis
+    if case == "none" or not ctx.active:
+        o, kc, vc = _attn_core(a, causal, use_rope, False, False,
+                               None, q, k, v, positions, kv_positions)
+    else:
+        dp = ctx.dp_axes if B % max(1, ctx.dp_size) == 0 else None
+        q_sharded = case in ("heads", "qheads")
+        kv_sharded = case == "heads"
+        q_spec = (P(dp, None, mx, None) if q_sharded
+                  else P(dp, mx, None, None))
+        kv_spec = (P(dp, None, mx, None) if kv_sharded
+                   else P(dp, None, None, None))
+        qp_spec = P(dp, None) if q_sharded else P(dp, mx)
+        body = partial(_attn_core, a, causal, use_rope, q_sharded,
+                       kv_sharded, mx)
+        o, kc, vc = jax.shard_map(
+            body, mesh=ctx.mesh,
+            in_specs=(q_spec, kv_spec, kv_spec, qp_spec, P(dp, None)),
+            out_specs=(q_spec, kv_spec, kv_spec),
+            check_vma=False)(q, k, v, positions, kv_positions)
+    if padded:
+        # drop dummy-head outputs / cache entries (exact: they are zero)
+        o = o[:, :, :Hq_real]
+        kc = kc[:, :, :Hkv_real]
+        vc = vc[:, :, :Hkv_real]
+    o = o.reshape(B, Sq, Hq_real * a.head_dim)
+    if ctx.active and case not in ("none",):
+        if case == "seq":
+            o = _csp(o, ctx, ctx.dp_axes, mx, None)
+        else:
+            o = _csp(o, ctx, ctx.dp_axes, None, mx)
+    out = o @ p["wo"]
+    if return_kv:
+        return out, (kc, vc)
+    return out, None
+
+
+def apply_layer(cfg, pos: int, p, x, ctx: AxisCtx, positions,
+                enc_out=None, return_cache: bool = False):
+    """Training / prefill path. Returns (x, aux_loss, cache_entry)."""
+    kind = cfg.layer_kind(pos)
+    aux = jnp.zeros((), jnp.float32)
+    cache_entry = None
+    h = apply_norm(cfg, p["ln1"], x)
+    if kind == "a":
+        is_causal = cfg.attn.causal
+        use_rope = cfg.attn.rope_theta > 0
+        h, kv = attn_apply(cfg, p["attn"], h, ctx, positions, is_causal,
+                           use_rope, return_kv=return_cache)
+        if return_cache:
+            cache_entry = {"k": kv[0], "v": kv[1]}
+        x = x + h.astype(x.dtype)
+        if enc_out is not None:
+            hx = apply_norm(cfg, p["ln_x"], x)
+            hx, xkv = attn_apply(cfg, p["xattn"], hx, ctx, positions,
+                                 causal=False, use_rope=False, kv_x=enc_out,
+                                 return_kv=return_cache)
+            if return_cache:
+                cache_entry["xk"], cache_entry["xv"] = xkv
+            x = x + hx.astype(x.dtype)
+    else:
+        h, ssm_cache = S.ssm_forward(cfg, cfg.ssm, p["ssm"], h,
+                                     return_cache=return_cache)
+        if return_cache:
+            cache_entry = ssm_cache
+        x = x + h.astype(x.dtype)
+
+    if "ln2" in p:
+        h = apply_norm(cfg, p["ln2"], x)
+        if "moe" in p:
+            h = _csp(h, ctx, ctx.dp_axes,
+                     ctx.model_axis if ctx.seq_shard and h.shape[1] > 1 else None,
+                     None)
+            h, aux = moe_ffn(cfg, cfg.moe, p["moe"], h, ctx,
+                             n_col=cfg.moe.n_col_blocks)
+            if "shared" in p["moe"]:
+                h = h + ffn_apply(cfg, p["moe"]["shared"],
+                                  apply_norm(cfg, p["ln2"], x))
+        else:
+            h = ffn_apply(cfg, p["ffn"], h)
+        x = x + h.astype(x.dtype)
+    sp = (cfg.sp_residual and ctx.active
+          and x.shape[1] % max(1, ctx.model_size) == 0 and x.shape[1] > 1)
+    x = _csp(x, ctx, ctx.dp_axes, ctx.model_axis if sp else None, None)
+    return x, aux, cache_entry
+
+
+# ---------------------------------------------------------------------------
+# Apply — single-token decode with caches
+# ---------------------------------------------------------------------------
+
+
+def sharded_decode_attention(ctx: AxisCtx, a, q, k_cache, v_cache, t_pos):
+    """Decode attention without gathering the cache.
+
+    * Hkv divides the model axis → kv-group sharding: q reshaped
+      (B,1,Hkv,rep,hd) and sharded with its kv head; zero collectives.
+    * else S divides → split-KV flash decode: each rank reduces its cache
+      shard to (m, l, acc) partials, merged by pmax + two psums of
+      (B,H,1[,hd]) — ~kB per layer instead of all-gathering GBs of cache.
+    * else → plain replicated decode.
+    """
+    B, S, Hkv, hd = k_cache.shape
+    m = ctx.model_size
+    if not ctx.active or m == 1:
+        return A.decode_attention(q, k_cache, v_cache, t_pos)
+    mx = ctx.model_axis
+    dp = ctx.dp_axes if ctx.dp_size > 1 and B % ctx.dp_size == 0 else None
+    H = q.shape[2]
+    rep = H // Hkv
+    if Hkv % m == 0:
+        qg = q.reshape(B, 1, Hkv, rep, hd)
+
+        def body(qk, kc, vc):
+            qk = qk.reshape(B, 1, -1, hd)           # (B,1,Hkv_l*rep,hd)
+            return A.decode_attention(qk, kc, vc, t_pos)
+
+        o = jax.shard_map(
+            body, mesh=ctx.mesh,
+            in_specs=(P(dp, None, mx, None, None),
+                      P(dp, None, mx, None), P(dp, None, mx, None)),
+            out_specs=P(dp, None, mx, None),
+            check_vma=False)(qg, k_cache, v_cache)
+        return o.reshape(B, 1, H, hd)
+    if S % m == 0:
+        S_loc = S // m
+
+        def body(qf, kc, vc):
+            off = jax.lax.axis_index(mx) * S_loc
+            mm, ll, acc = A.decode_attention_partial(qf, kc, vc, t_pos, off)
+            out = A.merge_decode_partials(mm, ll, acc, mx)   # (B,H,1,hd)
+            return out.transpose(0, 2, 1, 3).astype(qf.dtype)
+
+        return jax.shard_map(
+            body, mesh=ctx.mesh,
+            in_specs=(P(dp, None, None, None),
+                      P(dp, mx, None, None), P(dp, mx, None, None)),
+            out_specs=P(dp, None, None, None),
+            check_vma=False)(q, k_cache, v_cache)
+    return A.decode_attention(q, k_cache, v_cache, t_pos)
+
+
+def decode_layer(cfg, pos: int, p, x, ctx: AxisCtx, cache, t_pos,
+                 has_cross: bool = False):
+    """x: (B, 1, d); cache: layer cache dict; t_pos: () int32 position.
+    Returns (x, new_cache)."""
+    kind = cfg.layer_kind(pos)
+    a = cfg.attn
+    new_cache = dict(cache) if cache is not None else None
+    h = apply_norm(cfg, p["ln1"], x)
+    if kind == "a":
+        B = x.shape[0]
+        q = h @ p["attn"]["wq"]
+        k = h @ p["attn"]["wk"]
+        v = h @ p["attn"]["wv"]
+        if "bq" in p["attn"]:
+            q = q + p["attn"]["bq"].astype(q.dtype)
+            k = k + p["attn"]["bk"].astype(k.dtype)
+            v = v + p["attn"]["bv"].astype(v.dtype)
+        q = q.reshape(B, 1, a.n_heads, a.head_dim)
+        k = k.reshape(B, 1, a.n_kv_heads, a.head_dim)
+        v = v.reshape(B, 1, a.n_kv_heads, a.head_dim)
+        if a.rope_theta > 0:
+            pos_arr = jnp.full((B, 1), t_pos, jnp.int32)
+            q = A.apply_rope(q, pos_arr, a.rope_theta)
+            k = A.apply_rope(k, pos_arr, a.rope_theta)
+        kc, vc = A.update_cache(cache["k"], cache["v"], k, v, t_pos)
+        new_cache["k"], new_cache["v"] = kc, vc
+        o = sharded_decode_attention(ctx, a, q, kc, vc, t_pos)
+        o = o.reshape(B, 1, a.n_heads * a.head_dim)
+        h = o @ p["attn"]["wo"]
+        x = x + h
+        if has_cross:
+            hx = apply_norm(cfg, p["ln_x"], x)
+            qx = (hx @ p["xattn"]["wq"]).reshape(B, 1, a.n_heads, a.head_dim)
+            ox = A.dense_attention(qx, cache["xk"], cache["xv"], causal=False)
+            hx = ox.reshape(B, 1, a.n_heads * a.head_dim) @ p["xattn"]["wo"]
+            x = x + hx
+    else:
+        h, ssm_new = S.ssm_forward(cfg, cfg.ssm, p["ssm"], h, cache=cache)
+        new_cache = ssm_new
+        x = x + h
+
+    if "ln2" in p:
+        h = apply_norm(cfg, p["ln2"], x)
+        if "moe" in p:
+            h, _ = moe_ffn(cfg, cfg.moe, p["moe"], h, ctx)
+            if "shared" in p["moe"]:
+                h = h + ffn_apply(cfg, p["moe"]["shared"],
+                                  apply_norm(cfg, p["ln2"], x))
+        else:
+            h = ffn_apply(cfg, p["ffn"], h)
+        x = x + h
+    return x, new_cache

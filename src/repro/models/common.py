@@ -1,0 +1,229 @@
+"""Shared model building blocks: schema-driven params, norms, RoPE, FFN, losses.
+
+Parameters are declared through a *schema* (nested dict of ``ParamDecl``) so a
+single source of truth yields: real initialization, abstract ShapeDtypeStructs
+for the dry-run, and PartitionSpecs for pjit — the three never drift.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Pytree = Any
+
+
+# ---------------------------------------------------------------------------
+# Param schema
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ParamDecl:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]      # logical axis names, len == ndim
+    init: str = "normal"                    # normal | zeros | ones | small
+    scale: float = 1.0
+
+    def initialize(self, key, dtype):
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, dtype)
+        fan_in = self.shape[-2] if len(self.shape) >= 2 else self.shape[-1]
+        std = self.scale / math.sqrt(max(1, fan_in))
+        return (jax.random.normal(key, self.shape, jnp.float32) * std).astype(dtype)
+
+
+def init_from_schema(schema: Pytree, key, dtype: str) -> Pytree:
+    leaves, treedef = jax.tree_util.tree_flatten(
+        schema, is_leaf=lambda x: isinstance(x, ParamDecl))
+    keys = jax.random.split(key, len(leaves))
+    dt = jnp.dtype(dtype)
+    out = []
+    for k, decl in zip(keys, leaves):
+        # norm scales/biases kept fp32 for stability
+        use = jnp.float32 if decl.init in ("ones", "zeros") else dt
+        out.append(decl.initialize(k, use))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def abstract_from_schema(schema: Pytree, dtype: str) -> Pytree:
+    dt = jnp.dtype(dtype)
+
+    def mk(decl: ParamDecl):
+        use = jnp.float32 if decl.init in ("ones", "zeros") else dt
+        return jax.ShapeDtypeStruct(decl.shape, use)
+
+    return jax.tree_util.tree_map(
+        mk, schema, is_leaf=lambda x: isinstance(x, ParamDecl))
+
+
+def specs_from_schema(schema: Pytree, rules: Dict[str, Optional[Any]]) -> Pytree:
+    def mk(decl: ParamDecl):
+        axes = tuple(rules.get(l) if l is not None else None for l in decl.logical)
+        return P(*axes)
+
+    return jax.tree_util.tree_map(
+        mk, schema, is_leaf=lambda x: isinstance(x, ParamDecl))
+
+
+# ---------------------------------------------------------------------------
+# Primitives
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, scale, eps):
+    h = x.astype(jnp.float32)
+    var = jnp.mean(h * h, axis=-1, keepdims=True)
+    return (h * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale.astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps):
+    h = x.astype(jnp.float32)
+    mu = jnp.mean(h, axis=-1, keepdims=True)
+    var = jnp.var(h, axis=-1, keepdims=True)
+    out = (h - mu) * jax.lax.rsqrt(var + eps)
+    return out.astype(x.dtype) * scale.astype(x.dtype) + bias.astype(x.dtype)
+
+
+def apply_norm(cfg, p, x):
+    if cfg.norm == "layernorm":
+        return layer_norm(x, p["scale"], p["bias"], cfg.norm_eps)
+    return rms_norm(x, p["scale"], cfg.norm_eps)
+
+
+def norm_schema(cfg, d) -> Dict[str, ParamDecl]:
+    s = {"scale": ParamDecl((d,), ("embed_v",), "ones")}
+    if cfg.norm == "layernorm":
+        s["bias"] = ParamDecl((d,), ("embed_v",), "zeros")
+    return s
+
+
+def activate(name: str, gate, up):
+    """gate may be None for non-GLU activations."""
+    if name == "swiglu":
+        return jax.nn.silu(gate) * up
+    if name == "geglu":
+        return jax.nn.gelu(gate) * up
+    if name == "gelu":
+        return jax.nn.gelu(up)
+    if name == "relu2":
+        r = jax.nn.relu(up)
+        return r * r
+    raise ValueError(name)
+
+
+def is_glu(name: str) -> bool:
+    return name in ("swiglu", "geglu")
+
+
+# ---------------------------------------------------------------------------
+# Dense FFN
+# ---------------------------------------------------------------------------
+
+
+def ffn_schema(cfg, d, hidden) -> Dict[str, ParamDecl]:
+    s: Dict[str, ParamDecl] = {}
+    if is_glu(cfg.activation):
+        s["w_gate"] = ParamDecl((d, hidden), ("embed", "ffn"))
+    s["w_up"] = ParamDecl((d, hidden), ("embed", "ffn"))
+    s["w_down"] = ParamDecl((hidden, d), ("ffn", "embed"), scale=1.0)
+    return s
+
+
+def ffn_apply(cfg, p, x):
+    gate = x @ p["w_gate"] if "w_gate" in p else None
+    up = x @ p["w_up"]
+    h = activate(cfg.activation, gate, up)
+    return h @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta):
+    """x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoid_positions(S: int, d: int):
+    pos = jnp.arange(S, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, dim / d)
+    pe = jnp.zeros((S, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(ang)).at[:, 1::2].set(jnp.cos(ang))
+    return pe
+
+
+def sinusoid_at(pos, d: int):
+    """Single-position sinusoid embedding; pos may be traced. Returns (d,)."""
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)
+    ang = pos.astype(jnp.float32) / jnp.power(10000.0, dim / d)
+    pe = jnp.zeros((d,), jnp.float32)
+    return pe.at[0::2].set(jnp.sin(ang)).at[1::2].set(jnp.cos(ang))
+
+
+# ---------------------------------------------------------------------------
+# Chunked softmax cross-entropy — never materializes (tokens, vocab)
+# ---------------------------------------------------------------------------
+
+
+def chunked_xent(h, w_out, labels, chunk: int = 1024, logit_dtype=jnp.float32):
+    """h: (B, S, d); w_out: (d, V); labels: (B, S) with -1 = ignore.
+
+    Scans over sequence chunks; per chunk the (tokens, V) logits exist only
+    transiently. Returns (mean loss over non-ignored, token count).
+    """
+    B, S, d = h.shape
+    V = w_out.shape[1]
+    chunk = min(chunk, S)
+    n = S // chunk
+    rem = S - n * chunk
+
+    # checkpoint: without it jax saves each chunk's FULL logits as scan
+    # residuals for the backward pass — the exact (tokens, V) blow-up this
+    # function exists to avoid. With it, logits are recomputed in bwd.
+    @jax.checkpoint
+    def one(hc, lc):
+        logits = (hc.astype(logit_dtype) @ w_out.astype(logit_dtype))
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(
+            logits, jnp.maximum(lc, 0)[..., None], axis=-1)[..., 0]
+        mask = (lc >= 0).astype(logit_dtype)
+        return jnp.sum((lse - tgt) * mask), jnp.sum(mask)
+
+    def body(carry, xs):
+        hc, lc = xs
+        l, c = one(hc, lc)
+        return (carry[0] + l, carry[1] + c), None
+
+    hs = h[:, :n * chunk].reshape(B, n, chunk, d).swapaxes(0, 1)
+    ls = labels[:, :n * chunk].reshape(B, n, chunk).swapaxes(0, 1)
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros((), logit_dtype),) * 2, (hs, ls))
+    if rem:
+        l, c = one(h[:, n * chunk:], labels[:, n * chunk:])
+        tot, cnt = tot + l, cnt + c
+    return tot / jnp.maximum(cnt, 1.0), cnt
+
+
+def logits_for(h, w_out, logit_dtype=jnp.float32):
+    return h.astype(logit_dtype) @ w_out.astype(logit_dtype)

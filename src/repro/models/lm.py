@@ -1,0 +1,243 @@
+"""Full model assembly: schema, init, train forward, prefill, decode.
+
+Layers are stacked by *period* (lcm of the hybrid pattern length and the MoE
+interleave) and scanned — one period of HLO regardless of depth, which keeps
+the 94-layer dry-runs compilable.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import attention as A
+from repro.models import blocks as B
+from repro.models import ssm as S
+from repro.models.common import (ParamDecl, abstract_from_schema, apply_norm,
+                                 chunked_xent, ffn_schema, init_from_schema,
+                                 norm_schema, sinusoid_positions,
+                                 specs_from_schema)
+from repro.parallel.mesh import AxisCtx
+
+Pytree = Any
+
+
+def period_of(cfg) -> int:
+    p = max(1, len(cfg.layer_pattern))
+    if cfg.moe is not None:
+        p = math.lcm(p, cfg.moe.every_k_layers)
+    return p
+
+
+def _stack(schema: Pytree, n: int) -> Pytree:
+    def mk(d: ParamDecl):
+        return ParamDecl((n,) + d.shape, ("layers",) + d.logical, d.init, d.scale)
+    return jax.tree_util.tree_map(mk, schema,
+                                  is_leaf=lambda x: isinstance(x, ParamDecl))
+
+
+def _enc_layer_schema(cfg) -> Dict:
+    return {
+        "ln1": norm_schema(cfg, cfg.d_model),
+        "attn": A.attn_schema(cfg, cfg.attn),
+        "ln2": norm_schema(cfg, cfg.d_model),
+        "ffn": ffn_schema(cfg, cfg.d_model, cfg.d_ff),
+    }
+
+
+def model_schema(cfg, ctx: AxisCtx) -> Dict:
+    d, V = cfg.d_model, cfg.vocab_size
+    s: Dict[str, Any] = {"embed": ParamDecl((V, d), ("vocab", "embed"))}
+    if not cfg.tie_embeddings:
+        s["lm_head"] = ParamDecl((d, V), ("embed", "vocab"))
+    s["ln_f"] = norm_schema(cfg, d)
+    p = period_of(cfg)
+    assert cfg.n_layers % p == 0, (cfg.name, cfg.n_layers, p)
+    n_periods = cfg.n_layers // p
+    cross = cfg.n_enc_layers > 0
+    s["layers"] = [
+        _stack(B.layer_schema(cfg, pos, ctx, cross=cross), n_periods)
+        for pos in range(p)
+    ]
+    if cfg.n_enc_layers:
+        s["encoder"] = _stack(_enc_layer_schema(cfg), cfg.n_enc_layers)
+        s["ln_enc"] = norm_schema(cfg, d)
+    return s
+
+
+def init_params(cfg, key, ctx: AxisCtx = AxisCtx()) -> Pytree:
+    return init_from_schema(model_schema(cfg, ctx), key, cfg.param_dtype)
+
+
+def abstract_params(cfg, ctx: AxisCtx = AxisCtx()) -> Pytree:
+    return abstract_from_schema(model_schema(cfg, ctx), cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / io
+# ---------------------------------------------------------------------------
+
+
+def embed_inputs(cfg, params, batch, ctx: AxisCtx):
+    if "embeds" in batch:                       # stub modality frontend
+        h = batch["embeds"].astype(cfg.compute_dtype)
+    else:
+        h = jnp.take(params["embed"], batch["tokens"], axis=0)
+        h = h.astype(cfg.compute_dtype)
+    if cfg.n_enc_layers:                        # whisper decoder: abs positions
+        Spos = h.shape[1]
+        h = h + sinusoid_positions(Spos, cfg.d_model).astype(h.dtype)
+    return B._csp(h, ctx, ctx.dp_axes, None, None)
+
+
+def output_head(cfg, params):
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["lm_head"]
+
+
+# ---------------------------------------------------------------------------
+# Encoder (whisper)
+# ---------------------------------------------------------------------------
+
+
+def encode(cfg, params, frames, ctx: AxisCtx):
+    h = frames.astype(cfg.compute_dtype)
+    h = h + sinusoid_positions(h.shape[1], cfg.d_model).astype(h.dtype)
+    positions = jnp.arange(h.shape[1])[None, :]
+
+    def body(x, p):
+        hh = apply_norm(cfg, p["ln1"], x)
+        hh, _ = B.attn_apply(cfg, p["attn"], hh, ctx, positions, causal=False,
+                             use_rope=False)
+        x = x + hh
+        hh = apply_norm(cfg, p["ln2"], x)
+        from repro.models.common import ffn_apply
+        x = x + ffn_apply(cfg, p["ffn"], hh)
+        return x, None
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+    h, _ = jax.lax.scan(lambda c, p: body(c, p), h, params["encoder"])
+    return apply_norm(cfg, params["ln_enc"], h)
+
+
+# ---------------------------------------------------------------------------
+# Train / prefill forward
+# ---------------------------------------------------------------------------
+
+
+def forward(cfg, params, batch, ctx: AxisCtx = AxisCtx(),
+            return_cache: bool = False):
+    """Returns (h_final, aux_loss, cache|None). h_final: (B, S, d)."""
+    h = embed_inputs(cfg, params, batch, ctx)
+    Bsz, Ssz, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(Ssz)[None, :], (Bsz, Ssz))
+    enc_out = None
+    if cfg.n_enc_layers:
+        enc_out = encode(cfg, params, batch["frames"], ctx)
+
+    p = period_of(cfg)
+
+    def period_body(carry, layer_params):
+        x, aux = carry
+        caches = []
+        for pos in range(p):
+            x, a, ce = B.apply_layer(cfg, pos, layer_params[pos], x, ctx,
+                                     positions, enc_out=enc_out,
+                                     return_cache=return_cache)
+            aux = aux + a
+            caches.append(ce)
+        out = tuple(caches) if return_cache else None
+        return (x, aux), out
+
+    body = period_body
+    if cfg.remat == "full" and not return_cache:
+        body = jax.checkpoint(period_body)
+
+    (h, aux), caches = jax.lax.scan(
+        body, (h, jnp.zeros((), jnp.float32)), tuple(params["layers"]))
+    h = apply_norm(cfg, params["ln_f"], h)
+    return h, aux, caches
+
+
+def loss_fn(cfg, params, batch, ctx: AxisCtx = AxisCtx()):
+    h, aux, _ = forward(cfg, params, batch, ctx)
+    loss, cnt = chunked_xent(h, output_head(cfg, params), batch["labels"])
+    return loss + aux, {"xent": loss, "aux": aux, "tokens": cnt}
+
+
+def prefill(cfg, params, batch, ctx: AxisCtx = AxisCtx()):
+    """Returns (last-token logits (B, V), cache pytree)."""
+    h, _, caches = forward(cfg, params, batch, ctx, return_cache=True)
+    logits = h[:, -1].astype(jnp.float32) @ output_head(cfg, params).astype(jnp.float32)
+    return logits, caches
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg, batch_size: int, seq_len: int, ctx: AxisCtx = AxisCtx(),
+               enc_len: int = 0) -> Tuple:
+    """Zero cache matching the scan layout: tuple over period positions of
+    stacked (n_periods, ...) entries."""
+    p = period_of(cfg)
+    n_periods = cfg.n_layers // p
+    a = cfg.attn
+    dt = jnp.dtype(cfg.param_dtype)
+    caches = []
+    for pos in range(p):
+        kind = cfg.layer_kind(pos)
+        if kind == "a":
+            e = {
+                "k": jnp.zeros((n_periods, batch_size, seq_len, a.n_kv_heads,
+                                a.head_dim), dt),
+                "v": jnp.zeros((n_periods, batch_size, seq_len, a.n_kv_heads,
+                                a.head_dim), dt),
+            }
+            if cfg.n_enc_layers:
+                e["xk"] = jnp.zeros((n_periods, batch_size, enc_len,
+                                     a.n_kv_heads, a.head_dim), dt)
+                e["xv"] = jnp.zeros_like(e["xk"])
+        else:
+            s = cfg.ssm
+            d_in = s.expand * cfg.d_model
+            nh = d_in // s.head_dim
+            e = {
+                "conv": jnp.zeros((n_periods, batch_size, s.conv_width - 1,
+                                   d_in + 2 * s.d_state), dt),
+                "state": jnp.zeros((n_periods, batch_size, nh, s.d_state,
+                                    s.head_dim), jnp.float32),
+            }
+        caches.append(e)
+    return tuple(caches)
+
+
+def decode_step(cfg, params, cache, tokens, t_pos, ctx: AxisCtx = AxisCtx()):
+    """tokens: (B, 1) int32; t_pos: () int32. Returns (logits (B, V), cache)."""
+    h = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
+    if cfg.n_enc_layers:
+        from repro.models.common import sinusoid_at
+        h = h + sinusoid_at(t_pos, cfg.d_model).astype(h.dtype)
+    p = period_of(cfg)
+    has_cross = cfg.n_enc_layers > 0
+
+    def period_body(x, inp):
+        layer_params, cache_in = inp
+        new_caches = []
+        for pos in range(p):
+            x, nc = B.decode_layer(cfg, pos, layer_params[pos], x, ctx,
+                                   cache_in[pos], t_pos, has_cross=has_cross)
+            new_caches.append(nc)
+        return x, tuple(new_caches)
+
+    h, new_cache = jax.lax.scan(
+        period_body, h, (tuple(params["layers"]), cache))
+    h = apply_norm(cfg, params["ln_f"], h)
+    logits = h[:, 0].astype(jnp.float32) @ output_head(cfg, params).astype(jnp.float32)
+    return logits, new_cache

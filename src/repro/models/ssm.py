@@ -1,0 +1,197 @@
+"""Mamba-2 (SSD, state-space duality) block: chunked dual-form training path +
+O(1)-state decode step. Pure JAX; the chunked scan is the TPU-friendly
+formulation (dense intra-chunk matmuls feed the MXU, inter-chunk recurrence is
+a length-S/Q scan over (nh, hd, d_state) states).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamDecl, rms_norm
+
+
+def ssm_schema(cfg, s) -> Dict[str, ParamDecl]:
+    d = cfg.d_model
+    d_in = s.expand * d
+    nh = d_in // s.head_dim
+    conv_ch = d_in + 2 * s.d_state
+    return {
+        "in_proj": ParamDecl((d, 2 * d_in + 2 * s.d_state + nh), ("embed", "ssm_in")),
+        "conv_w": ParamDecl((s.conv_width, conv_ch), (None, "ssm_conv")),
+        "conv_b": ParamDecl((conv_ch,), ("ssm_conv",), "zeros"),
+        "A_log": ParamDecl((nh,), ("ssm_heads",), "ones"),
+        "D": ParamDecl((nh,), ("ssm_heads",), "ones"),
+        "dt_bias": ParamDecl((nh,), ("ssm_heads",), "zeros"),
+        "norm_scale": ParamDecl((d_in,), ("ssm_inner",), "ones"),
+        "out_proj": ParamDecl((d_in, d), ("ssm_inner", "embed")),
+    }
+
+
+def _split_proj(cfg, s, zxbcdt):
+    d_in = s.expand * cfg.d_model
+    nh = d_in // s.head_dim
+    sizes = [d_in, d_in, s.d_state, s.d_state, nh]
+    idx = []
+    acc = 0
+    for sz in sizes[:-1]:
+        acc += sz
+        idx.append(acc)
+    return jnp.split(zxbcdt, idx, axis=-1)  # z, x, B, C, dt
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv. x: (B, S, C); w: (W, C). state: (B, W-1, C) or None.
+    Returns (y, new_state)."""
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)            # (B, S+W-1, C)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype) for i in range(W))
+    new_state = xp[:, -(W - 1):] if W > 1 else None
+    return y + b.astype(x.dtype), new_state
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, D, chunk: int):
+    """SSD dual form. x: (B,S,nh,hd); dt: (B,S,nh); A: (nh) (negative);
+    Bm/Cm: (B,S,ds); D: (nh). Returns y (B,S,nh,hd)."""
+    Bsz, S, nh, hd = x.shape
+    ds = Bm.shape[-1]
+    Q = min(chunk, S)
+    if S % Q:
+        Q = S  # fall back to one chunk (small/smoke shapes)
+    nchunks = S // Q
+    f32 = jnp.float32
+
+    xd = (x * dt[..., None]).astype(f32)              # discretized input
+    la = (dt * A[None, None, :]).astype(f32)          # log decay per step (<=0)
+
+    # reshape into chunks
+    xc = xd.reshape(Bsz, nchunks, Q, nh, hd)
+    lac = la.reshape(Bsz, nchunks, Q, nh)
+    Bc = Bm.reshape(Bsz, nchunks, Q, ds).astype(f32)
+    Cc = Cm.reshape(Bsz, nchunks, Q, ds).astype(f32)
+
+    cum = jnp.cumsum(lac, axis=2)                     # (B,NC,Q,nh)
+    total = cum[:, :, -1]                             # (B,NC,nh)
+
+    # --- intra-chunk (quadratic within chunk) ---
+    # L[i,j] = exp(cum_i - cum_j) for i >= j
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]      # (B,NC,Q,Q,nh)
+    ii = jnp.arange(Q)
+    causal = (ii[:, None] >= ii[None, :])[None, None, :, :, None]
+    L = jnp.where(causal, jnp.exp(diff), 0.0)
+    CB = jnp.einsum("bnis,bnjs->bnij", Cc, Bc)                # (B,NC,Q,Q)
+    y_intra = jnp.einsum("bnij,bnijh,bnjhp->bnihp", CB, L, xc)
+
+    # --- chunk states ---
+    decay_to_end = jnp.exp(total[:, :, None, :] - cum)        # (B,NC,Q,nh)
+    states = jnp.einsum("bnjs,bnjh,bnjhp->bnhsp", Bc,
+                        decay_to_end, xc)                     # (B,NC,nh,ds,hd)
+
+    # --- inter-chunk recurrence ---
+    def step(h, inp):
+        st, tot = inp                                          # (B,nh,ds,hd),(B,nh)
+        h_new = h * jnp.exp(tot)[..., None, None] + st
+        return h_new, h                                        # emit state BEFORE chunk
+
+    h0 = jnp.zeros((Bsz, nh, ds, hd), f32)
+    h_final, h_prev = jax.lax.scan(
+        step, h0,
+        (states.swapaxes(0, 1), total.swapaxes(0, 1)))         # (NC,B,nh,ds,hd)
+    h_prev = h_prev.swapaxes(0, 1)                             # (B,NC,nh,ds,hd)
+
+    y_inter = jnp.einsum("bnis,bnih,bnhsp->bnihp", Cc,
+                         jnp.exp(cum), h_prev)
+
+    y = (y_intra + y_inter).reshape(Bsz, S, nh, hd)
+    y = y + (D[None, None, :, None] * x.astype(f32))
+    return y.astype(x.dtype), h_final
+
+
+def ssd_reference(x, dt, A, Bm, Cm, D):
+    """Naive O(S) sequential recurrence — oracle for tests."""
+    Bsz, S, nh, hd = x.shape
+    ds = Bm.shape[-1]
+    f32 = jnp.float32
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp
+        a = jnp.exp(dtt * A)                                   # (B,nh)
+        xd = xt * dtt[..., None]
+        h = h * a[..., None, None] + jnp.einsum("bs,bhp->bhsp", bt, xd)
+        y = jnp.einsum("bs,bhsp->bhp", ct, h)
+        return h, y
+
+    h0 = jnp.zeros((Bsz, nh, ds, hd), f32)
+    xs = (x.astype(f32).swapaxes(0, 1), dt.astype(f32).swapaxes(0, 1),
+          Bm.astype(f32).swapaxes(0, 1), Cm.astype(f32).swapaxes(0, 1))
+    _, ys = jax.lax.scan(step, h0, xs)
+    y = ys.swapaxes(0, 1) + D[None, None, :, None] * x.astype(f32)
+    return y.astype(x.dtype)
+
+
+def ssm_forward(cfg, s, p, x, cache=None, pos=None, return_cache=False):
+    """Full Mamba-2 block. x: (B,S,d). cache: None for training/prefill, else
+    dict with 'conv' (B,W-1,C) and 'state' (B,nh,ds,hd) for single-token
+    decode. return_cache=True on the prefill path emits the final state.
+    Returns (y, new_cache)."""
+    d_in = s.expand * cfg.d_model
+    nh = d_in // s.head_dim
+    zxbcdt = x @ p["in_proj"]
+    z, xr, Bm, Cm, dt = _split_proj(cfg, s, zxbcdt)
+
+    conv_in = jnp.concatenate([xr, Bm, Cm], axis=-1)
+    conv_state = cache["conv"] if cache is not None else None
+    conv_out, new_conv = _causal_conv(conv_in, p["conv_w"], p["conv_b"], conv_state)
+    conv_out = jax.nn.silu(conv_out)
+    xr = conv_out[..., :d_in]
+    Bm = conv_out[..., d_in:d_in + s.d_state]
+    Cm = conv_out[..., d_in + s.d_state:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xr.reshape(*xr.shape[:-1], nh, s.head_dim)
+
+    if cache is None:
+        # tagged fusable: kernels/ssd.py is the validated Pallas kernel that
+        # keeps the chunk working set (L, CB, states) in VMEM on TPU; the
+        # roofline counts its boundary bytes analytically.
+        with jax.named_scope("__fusable__ssd"):
+            y, h_final = ssd_chunked(xh, dt, A, Bm, Cm,
+                                     p["D"].astype(jnp.float32), s.chunk_size)
+        new_cache = None
+        if return_cache:
+            new_cache = {"conv": conv_in[:, -(s.conv_width - 1):].astype(x.dtype)
+                         if s.conv_width > 1 else
+                         jnp.zeros((x.shape[0], 0, conv_in.shape[-1]), x.dtype),
+                         "state": h_final}
+    else:
+        # single-step recurrence: S == 1
+        h = cache["state"]                                    # (B,nh,ds,hd) fp32
+        a = jnp.exp(dt[:, 0] * A)                             # (B,nh)
+        xd = (xh[:, 0] * dt[:, 0, :, None]).astype(jnp.float32)
+        h = h * a[..., None, None] + jnp.einsum("bs,bhp->bhsp",
+                                                Bm[:, 0].astype(jnp.float32), xd)
+        y = jnp.einsum("bs,bhsp->bhp", Cm[:, 0].astype(jnp.float32), h)
+        y = y + p["D"].astype(jnp.float32)[None, :, None] * xh[:, 0].astype(jnp.float32)
+        y = y[:, None].astype(x.dtype)
+        new_cache = {"conv": new_conv, "state": h}
+
+    y = y.reshape(*x.shape[:-1], d_in)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_scale"], cfg.norm_eps)
+    return (y @ p["out_proj"]).astype(x.dtype), new_cache
+
+
+def init_ssm_cache(cfg, s, batch: int, dtype):
+    d_in = s.expand * cfg.d_model
+    nh = d_in // s.head_dim
+    conv_ch = d_in + 2 * s.d_state
+    return {
+        "conv": jnp.zeros((batch, s.conv_width - 1, conv_ch), dtype),
+        "state": jnp.zeros((batch, nh, s.d_state, s.head_dim), jnp.float32),
+    }

@@ -1,0 +1,79 @@
+"""AdamW with global-norm clipping and cosine schedule — pure JAX pytrees."""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    min_ratio: float = 0.1) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * jnp.minimum(1.0, step / max(1, warmup))
+        prog = jnp.clip((step - warmup) / max(1, total - warmup), 0.0, 1.0)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, base_lr * cos)
+    return lr
+
+
+def global_norm(tree: Pytree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: Callable = cosine_schedule(3e-4, 100, 10000)
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+    def init(self, params: Pytree) -> Dict:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "m": jax.tree_util.tree_map(zeros, params),
+            "v": jax.tree_util.tree_map(zeros, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(self, grads: Pytree, state: Dict, params: Pytree
+               ) -> Tuple[Pytree, Dict, Dict]:
+        count = state["count"] + 1
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-9))
+        lr = self.lr(count)
+        c1 = 1.0 - self.b1 ** count.astype(jnp.float32)
+        c2 = 1.0 - self.b2 ** count.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32) * scale
+            m_new = self.b1 * m + (1 - self.b1) * g
+            v_new = self.b2 * v + (1 - self.b2) * g * g
+            mh = m_new / c1
+            vh = v_new / c2
+            step = mh / (jnp.sqrt(vh) + self.eps)
+            step = step + self.weight_decay * p.astype(jnp.float32)
+            p_new = p.astype(jnp.float32) - lr * step
+            return p_new.astype(p.dtype), m_new, v_new
+
+        flat_p, tdef = jax.tree_util.tree_flatten(params)
+        flat_g = jax.tree_util.tree_leaves(grads)
+        flat_m = jax.tree_util.tree_leaves(state["m"])
+        flat_v = jax.tree_util.tree_leaves(state["v"])
+        outs = [upd(p, g, m, v) for p, g, m, v in
+                zip(flat_p, flat_g, flat_m, flat_v)]
+        new_params = jax.tree_util.tree_unflatten(tdef, [o[0] for o in outs])
+        new_state = {
+            "m": jax.tree_util.tree_unflatten(tdef, [o[1] for o in outs]),
+            "v": jax.tree_util.tree_unflatten(tdef, [o[2] for o in outs]),
+            "count": count,
+        }
+        return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,92 @@
+"""Int8 gradient compression with error feedback (distributed-optimization
+substrate for the DP all-reduce at 1000+-node scale).
+
+The DP gradient all-reduce crosses DCN between pods; int8 quantization cuts
+that traffic 4× (bf16→int8 is 2×, fp32 accum→int8 is 4×). Error feedback
+(residual carried to the next step) keeps SGD/Adam convergence — the standard
+1-bit-Adam / Optimus-CC result, cited as [34] in the paper's related work.
+
+Usage inside a jitted step::
+
+    q, scale, new_resid = compress(grad + resid)
+    q_sum = lax.psum(q.astype(jnp.int32), "pod")     # int32 accumulate
+    grad_hat = dequantize(q_sum, psum(scale)) / n_pods
+
+``compress_pytree``/``decompress_pytree`` wrap whole gradient trees and
+``allreduce_compressed`` is the pod-axis reduction. Status: validated at
+unit level (error-feedback telescoping identity, quantization bound —
+tests/test_optim.py). Wiring into the jitted train step requires computing
+per-pod partial gradients under ``shard_map`` over the "pod" axis (so the
+partitioner does not insert its own full-precision reduce first); that
+integration is documented here and left explicit rather than silently
+claimed.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-tensor symmetric int8. Returns (q int8, scale f32 scalar)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_with_feedback(grad: jnp.ndarray, resid: jnp.ndarray
+                           ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (q, scale, new_resid). new_resid = (grad+resid) - dequant(q)."""
+    g = grad.astype(jnp.float32) + resid
+    q, scale = quantize_int8(g)
+    new_resid = g - dequantize_int8(q, scale)
+    return q, scale, new_resid
+
+
+def init_residuals(grads: Pytree) -> Pytree:
+    return jax.tree_util.tree_map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compress_pytree(grads: Pytree, resids: Pytree):
+    """Returns ({'q','scale'} trees, new resids)."""
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_r = jax.tree_util.tree_leaves(resids)
+    qs, ss, rs = [], [], []
+    for g, r in zip(flat_g, flat_r):
+        q, s, nr = compress_with_feedback(g, r)
+        qs.append(q); ss.append(s); rs.append(nr)
+    unf = lambda l: jax.tree_util.tree_unflatten(tdef, l)
+    return {"q": unf(qs), "scale": unf(ss)}, unf(rs)
+
+
+def decompress_pytree(packed: Dict) -> Pytree:
+    return jax.tree_util.tree_map(dequantize_int8, packed["q"], packed["scale"])
+
+
+def allreduce_compressed(grads: Pytree, resids: Pytree, axis: str):
+    """DP-axis all-reduce of int8-compressed grads with error feedback.
+    Quantized payload is summed in int32 (exact), then dequantized with the
+    max scale — each participant's contribution is within one quantum."""
+    packed, new_resids = compress_pytree(grads, resids)
+    n = jax.lax.psum(1, axis)
+
+    def reduce_one(q, s):
+        s_max = jax.lax.pmax(s, axis)
+        # requantize to the common scale so the int32 sum is coherent
+        q_common = jnp.clip(jnp.round(q.astype(jnp.float32) * (s / s_max)),
+                            -127, 127).astype(jnp.int32)
+        tot = jax.lax.psum(q_common, axis)
+        return tot.astype(jnp.float32) * s_max / n
+
+    out = jax.tree_util.tree_map(reduce_one, packed["q"], packed["scale"])
+    return out, new_resids

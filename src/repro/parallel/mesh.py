@@ -1,0 +1,86 @@
+"""Mesh construction + axis context shared by the whole framework."""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]) -> Mesh:
+    n = math.prod(shape)
+    if n > len(jax.devices()):
+        raise RuntimeError(
+            f"mesh {tuple(shape)} needs {n} devices, have {len(jax.devices())}; "
+            "the dry-run launcher sets XLA_FLAGS=--xla_force_host_platform_device_count")
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+@dataclass(frozen=True)
+class AxisCtx:
+    """How the model maps onto mesh axes. ep*etp must equal the model-axis size."""
+    mesh: Optional[Mesh] = None
+    dp_axes: Tuple[str, ...] = ()      # batch axes, e.g. ("pod", "data")
+    model_axis: str = ""               # TP / EP / SP axis
+    ep: int = 1                        # expert-parallel group size
+    etp: int = 1                       # expert-tensor-parallel (d_ff) group size
+    seq_shard: bool = False            # sequence-parallel activations into MoE
+
+    @property
+    def active(self) -> bool:
+        return self.mesh is not None and self.model_axis != ""
+
+    @property
+    def world(self) -> int:
+        return self.ep * self.etp
+
+    @property
+    def dp_size(self) -> int:
+        if self.mesh is None:
+            return 1
+        return math.prod(self.mesh.shape[a] for a in self.dp_axes) if self.dp_axes else 1
+
+    @property
+    def model_size(self) -> int:
+        if self.mesh is None or not self.model_axis:
+            return 1
+        return self.mesh.shape[self.model_axis]
+
+    def tp_groups(self):
+        """axis_index_groups: ranks sharing tp index (EP collectives), size ep."""
+        if self.etp == 1:
+            return None
+        return [[g * self.etp + t for g in range(self.ep)] for t in range(self.etp)]
+
+    def etp_groups(self):
+        """axis_index_groups: ranks sharing ep group (ETP psum), size etp."""
+        if self.etp == 1:
+            return None
+        return [[g * self.etp + t for t in range(self.etp)] for g in range(self.ep)]
+
+
+def choose_ep(num_experts: int, model_size: int, requested: int = 0) -> Tuple[int, int]:
+    """Pick (ep, etp) with ep*etp == model_size, ep | num_experts, maximizing ep."""
+    if requested:
+        if model_size % requested or num_experts % requested:
+            raise ValueError(f"requested ep={requested} incompatible with "
+                             f"E={num_experts}, model={model_size}")
+        return requested, model_size // requested
+    ep = 1
+    for cand in range(1, model_size + 1):
+        if model_size % cand == 0 and num_experts % cand == 0:
+            ep = cand
+    return ep, model_size // ep
+
+
+def batch_sharding(ctx: AxisCtx):
+    if not ctx.active:
+        return None
+    return NamedSharding(ctx.mesh, P(ctx.dp_axes if ctx.dp_axes else None, None))
+
+
+def local_ctx() -> AxisCtx:
+    return AxisCtx()

@@ -1,0 +1,116 @@
+"""Logical-axis → mesh-axis rules (MaxText-style) + context construction."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import ParamDecl
+from repro.parallel.mesh import AxisCtx, choose_ep
+
+# logical axes used by the schemas:
+#   vocab, embed, embed_v (norm vectors), qheads, kvheads, ffn,
+#   expert_shard, experts_v, ssm_in, ssm_conv, ssm_inner, ssm_heads, layers
+
+
+def make_rules(fsdp: bool) -> Dict[str, Optional[str]]:
+    return {
+        "vocab": "model",
+        "embed": "data" if fsdp else None,
+        "embed_v": None,
+        "qheads": "model",
+        "kvheads": "model",
+        "ffn": "model",
+        "expert_shard": "model",
+        "experts_v": None,
+        "ssm_in": "model",
+        "ssm_conv": "model",
+        "ssm_inner": "model",
+        "ssm_heads": None,
+        "layers": None,
+    }
+
+
+def decl_spec(decl: ParamDecl, rules: Dict[str, Optional[str]],
+              axis_sizes: Dict[str, int]) -> P:
+    axes = []
+    used = set()
+    for dim, logical in zip(decl.shape, decl.logical):
+        ax = rules.get(logical) if logical is not None else None
+        if ax is not None and (dim % axis_sizes.get(ax, 1) != 0 or ax in used):
+            ax = None                       # non-divisible or repeated: replicate
+        if ax is not None:
+            used.add(ax)
+        axes.append(ax)
+    return P(*axes)
+
+
+def param_specs(schema, mesh: Mesh, fsdp: bool):
+    rules = make_rules(fsdp)
+    sizes = dict(mesh.shape)
+    return jax.tree_util.tree_map(
+        lambda d: decl_spec(d, rules, sizes), schema,
+        is_leaf=lambda x: isinstance(x, ParamDecl))
+
+
+def make_ctx(cfg, mesh: Optional[Mesh], seq_shard: bool = True) -> AxisCtx:
+    if mesh is None:
+        return AxisCtx()
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    msize = mesh.shape.get("model", 1)
+    ep = etp = 1
+    if cfg.moe is not None:
+        ep, etp = choose_ep(cfg.moe.num_experts, msize, cfg.moe.ep)
+        # also require d_expert divisible by etp
+        while etp > 1 and cfg.moe.d_expert % etp:
+            etp //= 2
+            ep = msize // etp
+        if cfg.moe.num_experts % ep:
+            raise ValueError(f"no valid (ep, etp) for E={cfg.moe.num_experts} "
+                             f"on model axis {msize}")
+    else:
+        ep, etp = msize, 1
+    return AxisCtx(mesh=mesh, dp_axes=dp_axes, model_axis="model",
+                   ep=ep, etp=etp, seq_shard=seq_shard)
+
+
+def cache_specs(cfg, ctx: AxisCtx, batch: int, seq_len: int, enc_len: int = 0):
+    """PartitionSpec tree matching lm.init_cache layout: shard KV over
+    (batch→dp, heads→model if divisible else seq→model if divisible)."""
+    from repro.models.lm import period_of
+    msize = ctx.model_size
+    dp = ctx.dp_axes
+    dp_ok = batch % max(1, ctx.dp_size) == 0 and batch > 1
+    bspec = dp if dp_ok else None
+
+    def kv_spec(n_heads, slen):
+        if n_heads % msize == 0:
+            return P(None, bspec, None, "model", None)
+        if slen % msize == 0:
+            return P(None, bspec, "model", None, None)
+        return P(None, bspec, None, None, None)
+
+    p = period_of(cfg)
+    a = cfg.attn
+    specs = []
+    for pos in range(p):
+        kind = cfg.layer_kind(pos)
+        if kind == "a":
+            e = {"k": kv_spec(a.n_kv_heads, seq_len),
+                 "v": kv_spec(a.n_kv_heads, seq_len)}
+            if cfg.n_enc_layers:
+                e["xk"] = kv_spec(a.n_kv_heads, enc_len)
+                e["xv"] = kv_spec(a.n_kv_heads, enc_len)
+        else:
+            s = cfg.ssm
+            d_in = s.expand * cfg.d_model
+            nh = d_in // s.head_dim
+            conv_ch = d_in + 2 * s.d_state
+            e = {"conv": P(None, bspec, None,
+                           "model" if conv_ch % msize == 0 else None),
+                 "state": P(None, bspec, "model" if nh % msize == 0 else None,
+                            None, None)}
+        specs.append(e)
+    return tuple(specs)

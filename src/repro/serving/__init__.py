@@ -1,0 +1,1 @@
+from repro.serving.engine import GenerateResult, ServeEngine  # noqa: F401

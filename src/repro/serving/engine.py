@@ -1,0 +1,114 @@
+"""Batched serving engine: prefill → KV-cache stitch → greedy decode loop.
+
+Static-batch offline serving (the shape the decode_32k / long_500k cells
+lower): requests are left-padded to a common prompt length, prefilled in one
+jitted call, and decoded token-by-token with the donated-cache decode step.
+Per-request stop handling masks finished rows. The same engine runs on a mesh
+(pjit shardings from build_*_step) or a single device.
+
+Limitation (documented): left padding carries no attention mask, so pad
+tokens participate in attention for shorter prompts — exact parity with an
+unpadded forward holds for equal-length prompts (tested); mixed lengths get
+an approximation, as in mask-free batched-serving setups. Adding a prefill
+pad mask is a straightforward extension of attention's kv_mask argument.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch.train_step import build_decode_step, build_prefill_step
+from repro.models import lm
+
+
+def stitch_prefill_cache(cfg, decode_cache, prefill_cache, prompt_len: int):
+    """Insert prefill cache entries — stacked (n_periods, B, S, ...) from the
+    layer scan — into the fixed-size decode cache at positions [0, S)."""
+    out = []
+    for entry, pre in zip(decode_cache, prefill_cache):
+        e = {}
+        for k in entry:
+            if k in ("k", "v"):
+                e[k] = entry[k].at[:, :, :prompt_len].set(
+                    pre[k].astype(entry[k].dtype))
+            elif k in ("xk", "xv"):
+                src = pre[k]
+                e[k] = entry[k].at[:, :, :src.shape[2]].set(
+                    src.astype(entry[k].dtype))
+            elif k == "conv":
+                e[k] = pre[k].astype(entry[k].dtype)
+            else:                                   # ssm state (fp32)
+                e[k] = pre[k]
+        out.append(e)
+    return tuple(out)
+
+
+@dataclasses.dataclass
+class GenerateResult:
+    tokens: np.ndarray          # (B, max_new) generated ids
+    lengths: np.ndarray         # (B,) tokens before eos/max
+    prefill_tokens: int
+    decode_steps: int
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params=None, mesh=None,
+                 max_seq: int = 256, batch_size: int = 4, seed: int = 0):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.max_seq = max_seq
+        self.B = batch_size
+        pshape = ShapeConfig("serve_prefill", seq_len=max_seq,
+                             global_batch=batch_size, kind="prefill")
+        dshape = ShapeConfig("serve_decode", seq_len=max_seq,
+                             global_batch=batch_size, kind="decode")
+        self.prefill = build_prefill_step(cfg, pshape, mesh)
+        self.decode = build_decode_step(cfg, dshape, mesh)
+        if params is None:
+            params = lm.init_params(cfg, jax.random.PRNGKey(seed),
+                                    self.prefill["ctx"])
+        self.params = params
+
+    def generate(self, prompts: Sequence[Sequence[int]], max_new: int = 32,
+                 eos_id: Optional[int] = None) -> GenerateResult:
+        B = len(prompts)
+        assert B == self.B, f"engine compiled for batch {self.B}, got {B}"
+        plen = max(len(p) for p in prompts)
+        assert plen + max_new <= self.max_seq, "exceeds engine max_seq"
+        toks = np.zeros((B, plen), np.int32)
+        for i, p in enumerate(prompts):
+            toks[i, plen - len(p):] = p              # left-pad to align last
+        batch = {"tokens": jnp.asarray(toks)}
+
+        # ---- prefill: one jitted call over the whole padded batch ---------
+        logits, pre_cache = self.prefill["fn"](self.params, batch)
+        cache = lm.init_cache(self.cfg, B, self.max_seq,
+                              self.prefill["ctx"])
+        cache = stitch_prefill_cache(self.cfg, cache, pre_cache, plen)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+
+        # ---- greedy decode loop -------------------------------------------
+        out = np.zeros((B, max_new), np.int32)
+        done = np.zeros((B,), bool)
+        lengths = np.full((B,), max_new, np.int64)
+        step_fn = self.decode["jit"]
+        steps = 0
+        for t in range(max_new):
+            out[:, t] = np.asarray(nxt[:, 0])
+            if eos_id is not None:
+                newly = (out[:, t] == eos_id) & ~done
+                lengths[newly] = t
+                done |= newly
+                if done.all():
+                    steps = t + 1
+                    break
+            nxt, _, cache = step_fn(self.params, cache, nxt,
+                                    jnp.int32(plen + t))
+            steps = t + 1
+        return GenerateResult(out, lengths, prefill_tokens=B * plen,
+                              decode_steps=steps)

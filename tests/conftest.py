@@ -1,0 +1,25 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS device forcing here — smoke tests and
+benches must see the real single CPU device; multi-device checks run in
+subprocesses (launch/selftest.py) with their own flags."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def run_selftest(devices: int, case: str = "all", timeout: int = 900):
+    """Run the multi-device selftest in a subprocess; returns CompletedProcess."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.selftest",
+         "--devices", str(devices), "--case", case],
+        capture_output=True, text=True, timeout=timeout, env=env)

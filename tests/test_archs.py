@@ -1,0 +1,159 @@
+"""Per-architecture smoke tests: every assigned arch (reduced config) runs a
+forward + one train step on CPU with finite outputs and correct shapes, and
+the decode path is consistent with prefill."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import (ASSIGNED_ARCHS, PAPER_ARCHS, ShapeConfig,
+                                get_config)
+from repro.data.synthetic import SyntheticLM
+from repro.launch.specs import train_batch_specs
+from repro.models import lm
+from repro.parallel.mesh import AxisCtx
+
+ALL_SMOKE = [a + "-smoke" for a in ASSIGNED_ARCHS + PAPER_ARCHS]
+CTX = AxisCtx()
+SHAPE = ShapeConfig("smoke", seq_len=64, global_batch=2, kind="train")
+
+
+def _params_and_batch(name):
+    cfg = get_config(name)
+    key = jax.random.PRNGKey(0)
+    params = lm.init_params(cfg, key, CTX)
+    structs, _ = train_batch_specs(cfg, SHAPE, accum=1)
+    data = SyntheticLM(cfg, structs, seed=0)
+    batch = {k: jnp.asarray(v) for k, v in data.batch_at(0).items()}
+    return cfg, params, batch
+
+
+@pytest.mark.parametrize("name", ALL_SMOKE)
+def test_forward_shapes_and_finite(name):
+    cfg, params, batch = _params_and_batch(name)
+    h, aux, _ = jax.jit(lambda p, b: lm.forward(cfg, p, b, CTX))(params, batch)
+    S = batch["tokens"].shape[-1] if "tokens" in batch else \
+        batch["labels"].shape[-1]
+    assert h.shape == (2, S, cfg.d_model), (name, h.shape)
+    assert np.isfinite(np.asarray(h, np.float32)).all(), name
+    assert np.isfinite(float(aux)), name
+    if cfg.moe is not None:
+        assert float(aux) > 0, f"{name}: MoE aux loss should be positive"
+    else:
+        assert float(aux) == 0.0, name
+
+
+@pytest.mark.parametrize("name", ALL_SMOKE)
+def test_train_step_improves(name):
+    """Two SGD-ish steps on the same batch must reduce the loss."""
+    cfg, params, batch = _params_and_batch(name)
+
+    def loss(p):
+        l, _ = lm.loss_fn(cfg, p, batch, CTX)
+        return l
+
+    vg = jax.jit(jax.value_and_grad(loss))
+    l0, g = vg(params)
+    # jamba's exp() ssm dynamics NaN at lr=0.5; 0.15 converges for all
+    lr = 0.15
+    params = jax.tree_util.tree_map(lambda p, gg: p - lr * gg.astype(p.dtype),
+                                    params, g)
+    l1, g = vg(params)
+    params = jax.tree_util.tree_map(lambda p, gg: p - lr * gg.astype(p.dtype),
+                                    params, g)
+    l2, _ = vg(params)
+    assert np.isfinite([float(l0), float(l1), float(l2)]).all(), name
+    assert float(l2) < float(l0), (name, float(l0), float(l2))
+
+
+@pytest.mark.parametrize("name", ["qwen2-0.5b-smoke", "granite-moe-3b-a800m-smoke",
+                                  "mamba2-780m-smoke", "jamba-v0.1-52b-smoke",
+                                  "whisper-small-smoke"])
+def test_prefill_decode_consistency(name):
+    """prefill(S tokens) then decode token S must match the full forward's
+    logits at position S — the serving-correctness contract per family.
+    (No-drop MoE capacity: with drops, prefill may drop a token that the
+    single-token decode necessarily keeps — not a bug, a capacity semantic.)"""
+    cfg = get_config(name)
+    if cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(
+                cfg.moe, capacity_factor=float(cfg.moe.num_experts)))
+    key = jax.random.PRNGKey(1)
+    params = lm.init_params(cfg, key, CTX)
+    B, S = 2, 32
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, S + 1), 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks[:, :S]}
+    enc_len = 0
+    if cfg.n_enc_layers:
+        frames = jax.random.normal(jax.random.PRNGKey(3),
+                                   (B, 64, cfg.d_model), jnp.float32) * 0.02
+        batch["frames"] = frames
+        enc_len = 64
+
+    # full forward over S+1 tokens -> logits at position S
+    batch_full = dict(batch, tokens=toks)
+    h, _, _ = lm.forward(cfg, params, batch_full, CTX)
+    from repro.models.common import logits_for
+    want = logits_for(h, lm.output_head(cfg, params))[:, S]
+
+    # prefill S, then one decode step
+    logits_p, cache_p = lm.prefill(cfg, params, batch, CTX)
+    cache = lm.init_cache(cfg, B, S + 8, CTX, enc_len=enc_len)
+    cache = _copy_prefill_into(cfg, cache, cache_p, S)
+    got, _ = lm.decode_step(cfg, params, cache, toks[:, S:S + 1],
+                            jnp.int32(S), CTX)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=5e-3, atol=5e-3)
+
+
+def _copy_prefill_into(cfg, cache, cache_p, S):
+    """Insert prefill cache entries (stacked (n_periods, B, S, ...) from the
+    scan) into the fixed-size decode cache."""
+    out = []
+    for entry, pre in zip(cache, cache_p):
+        e = {}
+        for k in entry:
+            if k in ("k", "v", "xk", "xv"):
+                buf = entry[k]
+                src = pre[k]
+                if k in ("k", "v"):
+                    e[k] = buf.at[:, :, :S].set(src.astype(buf.dtype))
+                else:
+                    e[k] = buf.at[:, :, :src.shape[2]].set(
+                        src.astype(buf.dtype))
+            elif k == "conv":
+                e[k] = pre[k].astype(entry[k].dtype)
+            else:
+                e[k] = pre[k]
+        out.append(e)
+    return tuple(out)
+
+
+def test_long_context_decode_subquadratic_archs():
+    """ssm/hybrid archs decode against a large cache without materializing
+    O(S^2); smoke-scale stand-in for the long_500k cell."""
+    for name in ["mamba2-780m-smoke", "jamba-v0.1-52b-smoke"]:
+        cfg = get_config(name)
+        B, S = 1, 512
+        params = lm.init_params(cfg, jax.random.PRNGKey(0), CTX)
+        cache = lm.init_cache(cfg, B, S, CTX)
+        tok = jnp.zeros((B, 1), jnp.int32)
+        logits, new_cache = jax.jit(
+            lambda p, c, t: lm.decode_step(cfg, p, c, t, jnp.int32(S // 2),
+                                           CTX))(params, cache, tok)
+        assert logits.shape == (B, cfg.vocab_size)
+        assert np.isfinite(np.asarray(logits)).all(), name
+
+
+def test_vlm_uses_stub_embeds():
+    cfg = get_config("llava-next-34b-smoke")
+    params = lm.init_params(cfg, jax.random.PRNGKey(0), CTX)
+    B, S = 2, 16
+    batch = {"embeds": jnp.ones((B, S, cfg.d_model), jnp.float32) * 0.01,
+             "labels": jnp.zeros((B, S), jnp.int32)}
+    h, _, _ = lm.forward(cfg, params, batch, CTX)
+    assert h.shape == (B, S, cfg.d_model)

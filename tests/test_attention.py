@@ -1,0 +1,119 @@
+"""Attention math: chunked online-softmax vs dense oracle, position-array
+masking (sequence-sharded case), GQA head mapping, rope."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention as A
+from repro.models.common import apply_rope
+
+KEY = jax.random.PRNGKey(2)
+
+
+def qkv(B=2, S=128, H=4, Hkv=2, hd=32, Sk=None):
+    Sk = Sk or S
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, Sk, Hkv, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, Sk, Hkv, hd), jnp.float32)
+    return q, k, v
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("qb,kb", [(32, 32), (64, 128), (128, 64)])
+def test_chunked_matches_dense(causal, qb, kb):
+    q, k, v = qkv(S=256)
+    want = A.dense_attention(q, k, v, causal)
+    got = A.chunked_attention(q, k, v, causal, q_block=qb, kv_block=kb)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_chunked_gqa_ratios():
+    for H, Hkv in [(8, 8), (8, 2), (8, 1)]:
+        q, k, v = qkv(H=H, Hkv=Hkv, S=128)
+        want = A.dense_attention(q, k, v, True)
+        got = A.chunked_attention(q, k, v, True, 64, 64)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_position_array_masking_equals_offset():
+    """Sequence-sharded path: masking by absolute position arrays must equal
+    computing the full sequence and slicing (the shard_map correctness
+    contract)."""
+    B, S, H, hd = 1, 128, 2, 16
+    q, k, v = qkv(B=B, S=S, H=H, Hkv=H, hd=hd)
+    full = A.dense_attention(q, k, v, causal=True)
+    shards = 4
+    Sl = S // shards
+    for r in range(shards):
+        q_loc = q[:, r * Sl:(r + 1) * Sl]
+        qp = jnp.broadcast_to(jnp.arange(r * Sl, (r + 1) * Sl)[None], (B, Sl))
+        kp = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        got = A.chunked_attention(q_loc, k, v, True, 32, 32,
+                                  q_pos=qp, kv_pos=kp)
+        np.testing.assert_allclose(np.asarray(got),
+                                   np.asarray(full[:, r * Sl:(r + 1) * Sl]),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_decode_attention_matches_dense_prefix():
+    """decode at position t == row t of the causal dense attention."""
+    B, S, H, hd = 2, 64, 4, 16
+    q, k, v = qkv(B=B, S=S, H=H, Hkv=H, hd=hd)
+    full = A.dense_attention(q, k, v, causal=True)
+    for t in [0, 7, 63]:
+        got = A.decode_attention(q[:, t:t + 1], k, v, jnp.int32(t))
+        np.testing.assert_allclose(np.asarray(got[:, 0]),
+                                   np.asarray(full[:, t]),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_update_cache_inserts():
+    B, S, Hkv, hd = 1, 16, 2, 8
+    kc = jnp.zeros((B, S, Hkv, hd))
+    vc = jnp.zeros((B, S, Hkv, hd))
+    knew = jnp.ones((B, 1, Hkv, hd))
+    vnew = 2 * jnp.ones((B, 1, Hkv, hd))
+    kc, vc = A.update_cache(kc, vc, knew, vnew, jnp.int32(5))
+    assert float(kc[0, 5].sum()) == Hkv * hd
+    assert float(vc[0, 5].sum()) == 2 * Hkv * hd
+    assert float(kc.sum()) == Hkv * hd                  # only one slot written
+
+
+def test_rope_preserves_norm_and_relativity():
+    B, S, H, hd = 1, 32, 2, 16
+    x = jax.random.normal(KEY, (B, S, H, hd), jnp.float32)
+    pos = jnp.arange(S)[None, :]
+    r = apply_rope(x, pos, 10000.0)
+    # rotation preserves per-head norms
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(x), axis=-1),
+                               np.linalg.norm(np.asarray(r), axis=-1),
+                               rtol=1e-4)
+    # dot(q_i, k_j) depends only on i - j: shift both by a constant
+    q, k = x, jax.random.normal(jax.random.PRNGKey(3), x.shape)
+    r1 = (apply_rope(q, pos, 1e4)[0, 10, 0] @ apply_rope(k, pos, 1e4)[0, 4, 0])
+    r2 = (apply_rope(q, pos + 7, 1e4)[0, 10, 0] @
+          apply_rope(k, pos + 7, 1e4)[0, 4, 0])
+    np.testing.assert_allclose(float(r1), float(r2), rtol=1e-4)
+
+
+def test_expand_kv_mapping():
+    """blocks._attn_core kv_map: global q head h uses kv head h // rep."""
+    from repro.models.blocks import _attn_core
+    from repro.configs.base import AttnConfig
+    a = AttnConfig(n_heads=8, n_kv_heads=2, head_dim=16, q_block=64,
+                   kv_block=64)
+    B, S = 1, 64
+    q = jax.random.normal(KEY, (B, S, 8, 16), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(4), (B, S, 2, 16), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(5), (B, S, 2, 16), jnp.float32)
+    qp = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    o, kc, vc = _attn_core(a, True, False, False, False, None,
+                           q, k, v, qp, qp)
+    want = A.dense_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(kc), np.asarray(k))

@@ -1,0 +1,127 @@
+"""Data pipeline determinism + config registry / param-count sanity."""
+import numpy as np
+import pytest
+
+from repro.configs.base import (ASSIGNED_ARCHS, LM_SHAPES, PAPER_ARCHS,
+                                ShapeConfig, get_config, list_archs,
+                                shape_applicable)
+from repro.data.synthetic import Prefetcher, SyntheticLM
+from repro.launch.specs import train_batch_specs
+
+SHAPE = ShapeConfig("smoke", seq_len=32, global_batch=4, kind="train")
+
+
+def pipeline(arch="qwen2-0.5b-smoke", seed=0, pidx=0):
+    cfg = get_config(arch)
+    structs, _ = train_batch_specs(cfg, SHAPE, accum=1)
+    return SyntheticLM(cfg, structs, seed=seed, process_index=pidx)
+
+
+def test_batches_deterministic_per_step():
+    a, b = pipeline(), pipeline()
+    for step in (0, 3, 17):
+        ba, bb = a.batch_at(step), b.batch_at(step)
+        for k in ba:
+            np.testing.assert_array_equal(ba[k], bb[k])
+
+
+def test_batches_differ_across_steps_seeds_processes():
+    p = pipeline()
+    assert not np.array_equal(p.batch_at(0)["tokens"], p.batch_at(1)["tokens"])
+    assert not np.array_equal(p.batch_at(0)["tokens"],
+                              pipeline(seed=1).batch_at(0)["tokens"])
+    assert not np.array_equal(p.batch_at(0)["tokens"],
+                              pipeline(pidx=1).batch_at(0)["tokens"])
+
+
+def test_labels_are_shifted_tokens():
+    b = pipeline().batch_at(0)
+    np.testing.assert_array_equal(b["labels"][..., :-1], b["tokens"][..., 1:])
+
+
+def test_tokens_in_vocab_range():
+    cfg = get_config("qwen2-0.5b-smoke")
+    b = pipeline().batch_at(0)
+    assert b["tokens"].min() >= 0
+    assert b["tokens"].max() < cfg.vocab_size
+
+
+def test_prefetcher_yields_in_order():
+    p = Prefetcher(pipeline(), start_step=5, depth=2)
+    try:
+        s0, b0 = p.next()
+        s1, b1 = p.next()
+        assert (s0, s1) == (5, 6)
+        np.testing.assert_array_equal(b0["tokens"],
+                                      pipeline().batch_at(5)["tokens"])
+    finally:
+        p.close()
+
+
+def test_whisper_batch_has_frames():
+    cfg = get_config("whisper-small-smoke")
+    structs, _ = train_batch_specs(cfg, SHAPE, accum=1)
+    b = SyntheticLM(cfg, structs).batch_at(0)
+    assert "frames" in b and "tokens" in b and "labels" in b
+    assert b["frames"].shape[-1] == cfg.d_model
+
+
+# ---------------------------------------------------------------------------
+# configs
+# ---------------------------------------------------------------------------
+
+def test_registry_contains_assigned_and_paper_archs():
+    names = list_archs()
+    for a in ASSIGNED_ARCHS + PAPER_ARCHS:
+        assert a in names, a
+    smoke = list_archs(include_smoke=True)
+    for a in ASSIGNED_ARCHS + PAPER_ARCHS:
+        assert a + "-smoke" in smoke, a
+
+
+@pytest.mark.parametrize("name,low,high", [
+    ("qwen2-0.5b", 0.4e9, 0.65e9),
+    ("qwen1.5-4b", 3.0e9, 4.5e9),
+    ("phi3-medium-14b", 12e9, 15e9),
+    ("mixtral-8x7b", 44e9, 49e9),
+    ("nemotron-4-340b", 300e9, 380e9),
+    ("mamba2-780m", 0.6e9, 0.9e9),
+    ("jamba-v0.1-52b", 45e9, 58e9),
+    ("llava-next-34b", 30e9, 38e9),
+    ("granite-moe-3b-a800m", 2.5e9, 3.9e9),
+    ("qwen3-moe-235b-a22b", 200e9, 260e9),
+])
+def test_param_counts_match_public_sizes(name, low, high):
+    n = get_config(name).param_count()
+    assert low <= n <= high, (name, n / 1e9)
+
+
+@pytest.mark.parametrize("name,low,high", [
+    ("mixtral-8x7b", 11e9, 15e9),          # 12.9B active per token
+    ("qwen3-moe-235b-a22b", 18e9, 26e9),   # ~22B active
+    ("granite-moe-3b-a800m", 0.6e9, 1.2e9),
+])
+def test_active_param_counts(name, low, high):
+    n = get_config(name).active_param_count()
+    assert low <= n <= high, (name, n / 1e9)
+
+
+def test_shape_applicability_long500k():
+    ok, _ = shape_applicable(get_config("mamba2-780m"), LM_SHAPES["long_500k"])
+    assert ok
+    ok, _ = shape_applicable(get_config("jamba-v0.1-52b"),
+                             LM_SHAPES["long_500k"])
+    assert ok
+    ok, why = shape_applicable(get_config("phi3-medium-14b"),
+                               LM_SHAPES["long_500k"])
+    assert not ok and "full-attention" in why
+
+
+def test_smoke_configs_are_reduced_same_family():
+    for a in ASSIGNED_ARCHS:
+        full, smoke = get_config(a), get_config(a + "-smoke")
+        assert smoke.family == full.family
+        assert smoke.d_model <= 128
+        assert smoke.n_layers <= max(2 * 8, 2)
+        assert (smoke.moe is None) == (full.moe is None)
+        assert (smoke.ssm is None) == (full.ssm is None)

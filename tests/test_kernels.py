@@ -1,0 +1,168 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode on CPU) vs the
+pure-jnp oracles in kernels/ref.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=1e-5, atol=1e-5)
+
+
+def assert_close(a, b, dtype):
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), **_tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# grouped_gemm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("E,M,K,N", [
+    (1, 128, 128, 128),        # single expert, exact tiles
+    (4, 128, 256, 128),        # multi-expert
+    (3, 64, 96, 200),          # padding path on every dim
+    (2, 256, 512, 384),        # multi-tile M/N/K
+    (8, 16, 32, 48),           # tiny (all dims below block)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("order", ["expert_major", "n_major"])
+def test_grouped_gemm(E, M, K, N, dtype, order):
+    k1, k2 = jax.random.split(KEY)
+    lhs = jax.random.normal(k1, (E, M, K), jnp.float32).astype(dtype)
+    rhs = jax.random.normal(k2, (E, K, N), jnp.float32).astype(dtype)
+    got = ops.grouped_gemm(lhs, rhs, order=order, interpret=True)
+    want = ref.grouped_gemm_ref(lhs, rhs)
+    assert got.shape == (E, M, N)
+    assert got.dtype == dtype
+    assert_close(got, want, dtype)
+
+
+def test_grouped_gemm_orders_identical():
+    """The comet n_major traversal changes tile COMPLETION ORDER, not values."""
+    lhs = jax.random.normal(KEY, (3, 128, 128), jnp.float32)
+    rhs = jax.random.normal(KEY, (3, 128, 256), jnp.float32)
+    a = ops.grouped_gemm(lhs, rhs, order="expert_major", interpret=True)
+    b = ops.grouped_gemm(lhs, rhs, order="n_major", interpret=True)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,Hq,Hkv,S,hd", [
+    (1, 4, 4, 128, 64),        # MHA
+    (2, 8, 2, 256, 64),        # GQA 4:1
+    (1, 4, 1, 128, 128),       # MQA
+    (2, 2, 2, 384, 32),        # non-pow2 seq
+])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(B, Hq, Hkv, S, hd, causal, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Hq, S, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (B, Hkv, S, hd), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (B, Hkv, S, hd), jnp.float32).astype(dtype)
+    got = ops.flash_attention(q, k, v, causal=causal, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    assert got.shape == q.shape
+    assert_close(got, want, dtype)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("T,d", [(256, 128), (100, 896), (8, 64), (1024, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm(T, d, dtype):
+    k1, k2 = jax.random.split(KEY)
+    x = jax.random.normal(k1, (T, d), jnp.float32).astype(dtype)
+    s = 1.0 + 0.1 * jax.random.normal(k2, (d,), jnp.float32)
+    got = ops.rmsnorm(x, s, interpret=True)
+    want = ref.rmsnorm_ref(x, s)
+    assert_close(got, want, dtype)
+
+
+# ---------------------------------------------------------------------------
+# topk_combine
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("T,k,d", [(128, 2, 128), (64, 8, 256), (100, 4, 96)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_topk_combine(T, k, d, dtype):
+    k1, k2 = jax.random.split(KEY)
+    rows = jax.random.normal(k1, (T, k, d), jnp.float32).astype(dtype)
+    w = jax.nn.softmax(jax.random.normal(k2, (T, k), jnp.float32), axis=-1)
+    got = ops.topk_combine(rows, w, interpret=True)
+    want = ref.topk_combine_ref(rows, w)
+    assert_close(got, want, dtype)
+
+
+# ---------------------------------------------------------------------------
+# the kernels compose: grouped_gemm(n_major) + topk_combine == MoE layer-1
+# ---------------------------------------------------------------------------
+
+def test_layer1_composition():
+    E, R, K, N, topk = 4, 64, 32, 128, 2
+    ks = jax.random.split(KEY, 3)
+    h = jax.random.normal(ks[0], (E, R, K), jnp.float32)
+    w2 = jax.random.normal(ks[1], (E, K, N), jnp.float32)
+    out = ops.grouped_gemm(h, w2, order="n_major", interpret=True)  # (E,R,N)
+    rows = out.reshape(E * R, N)
+    sel = jax.random.randint(ks[2], (R, topk), 0, E * R)
+    w = jnp.full((R, topk), 0.5, jnp.float32)
+    got = ops.topk_combine(rows[sel.reshape(-1)].reshape(R, topk, N), w,
+                           interpret=True)
+    want = (rows[sel.reshape(-1)].reshape(R, topk, N) * 0.5).sum(axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# ssd_forward (Mamba-2 state-space duality)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,nh,hd,ds,chunk", [
+    (1, 64, 2, 16, 8, 16),       # multi-chunk
+    (2, 128, 4, 32, 16, 64),     # bigger heads/state
+    (1, 32, 1, 8, 4, 32),        # single chunk == whole sequence
+    (2, 96, 2, 16, 8, 32),       # non-pow2 chunk count
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_forward(B, S, nh, hd, ds, chunk, dtype):
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (B, S, nh, hd), jnp.float32).astype(dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, nh), jnp.float32))
+    A = -jnp.exp(jax.random.normal(ks[2], (nh,), jnp.float32) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, ds), jnp.float32)
+    Cm = jax.random.normal(ks[4], (B, S, ds), jnp.float32)
+    D = jnp.full((nh,), 0.5, jnp.float32)
+    got = ops.ssd_forward(x, dt, A, Bm, Cm, D, chunk=chunk, interpret=True)
+    want = ref.ssd_ref(x, dt, A, Bm, Cm, D)
+    assert got.shape == x.shape
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=5e-2 if dtype == jnp.bfloat16 else 5e-4,
+                               atol=5e-2 if dtype == jnp.bfloat16 else 5e-4)
+
+
+def test_ssd_forward_chunk_invariance():
+    ks = jax.random.split(KEY, 5)
+    B, S, nh, hd, ds = 1, 128, 2, 16, 8
+    x = jax.random.normal(ks[0], (B, S, nh, hd), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, nh), jnp.float32))
+    A = -jnp.exp(jax.random.normal(ks[2], (nh,), jnp.float32) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, ds), jnp.float32)
+    Cm = jax.random.normal(ks[4], (B, S, ds), jnp.float32)
+    D = jnp.zeros((nh,), jnp.float32)
+    y32 = ops.ssd_forward(x, dt, A, Bm, Cm, D, chunk=32, interpret=True)
+    y64 = ops.ssd_forward(x, dt, A, Bm, Cm, D, chunk=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(y32), np.asarray(y64),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,112 @@
+"""Roofline layer: analytic kernel-boundary formulas, model FLOPs, and an
+end-to-end analyze() on a real compiled function; hypothesis properties for
+the simulator's physical sanity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.analysis import roofline as RL
+from repro.analysis.simulator import (H100_NVL, MoEShape, sim_comet,
+                                      sim_megatron, sim_tutel)
+from repro.configs.base import LM_SHAPES, ShapeConfig, get_config
+
+SET = settings(max_examples=20, deadline=None)
+
+
+def test_model_flops_train_matches_6nd():
+    cfg = get_config("qwen2-0.5b")
+    shape = LM_SHAPES["train_4k"]
+    tokens = shape.global_batch * shape.seq_len
+    assert RL.model_flops(cfg, shape) == pytest.approx(
+        6.0 * cfg.param_count() * tokens)
+
+
+def test_model_flops_moe_uses_active_params():
+    cfg = get_config("mixtral-8x7b")
+    shape = LM_SHAPES["train_4k"]
+    dense_equiv = 6.0 * cfg.param_count() * shape.global_batch * shape.seq_len
+    got = RL.model_flops(cfg, shape)
+    assert got < 0.5 * dense_equiv            # top-2 of 8 experts
+    assert got == pytest.approx(
+        6.0 * cfg.active_param_count() * shape.global_batch * shape.seq_len)
+
+
+def test_flash_kernel_bytes_scales():
+    cfg = get_config("qwen2-0.5b")
+    t = RL.flash_kernel_bytes(cfg, LM_SHAPES["train_4k"])
+    p = RL.flash_kernel_bytes(cfg, ShapeConfig("p", 4096, 256, "prefill"))
+    assert t == pytest.approx(4 * p)          # train = fwd+remat+bwd(2)
+    d = RL.flash_kernel_bytes(cfg, LM_SHAPES["decode_32k"])
+    # decode reads the whole KV cache once per token per layer
+    a = cfg.attn
+    want = cfg.n_layers * 2 * 2 * 128 * 32768 * a.n_kv_heads * a.head_dim
+    assert d == pytest.approx(want)
+
+
+def test_ssd_kernel_bytes_only_for_ssm():
+    assert RL.ssd_kernel_bytes(get_config("qwen2-0.5b"),
+                               LM_SHAPES["train_4k"]) == 0.0
+    assert RL.ssd_kernel_bytes(get_config("mamba2-780m"),
+                               LM_SHAPES["train_4k"]) > 0.0
+    # jamba: 28 of 32 layers are mamba
+    j = RL.ssd_kernel_bytes(get_config("jamba-v0.1-52b"),
+                            LM_SHAPES["train_4k"])
+    m = RL.ssd_kernel_bytes(get_config("mamba2-780m"), LM_SHAPES["train_4k"])
+    assert j > 0 and m > 0
+
+
+def test_analyze_end_to_end_on_compiled_fn():
+    def f(x, w):
+        return jnp.tanh(x @ w) @ w
+    x = jnp.zeros((256, 256))
+    c = jax.jit(f).lower(x, x).compile()
+    r = RL.analyze(c, n_chips=1)
+    assert r["hlo_flops_per_device"] >= 2 * 2 * 256 ** 3 * 0.99
+    assert r["t_compute_s"] > 0 and r["t_memory_s"] > 0
+    assert r["dominant"] in ("compute", "memory", "collective")
+    assert r["collective_bytes_per_device"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# simulator physical-sanity properties
+# ---------------------------------------------------------------------------
+
+def _shape(M, E=8, topk=2, ep=8):
+    return MoEShape(M=M, N=4096, K=14336, E=E, topk=topk, ep=ep, etp=1)
+
+
+@given(M=st.sampled_from([1024, 4096, 16384, 65536]))
+@SET
+def test_sim_hiding_fraction_bounded(M):
+    for fn in (sim_comet, sim_tutel, sim_megatron):
+        r = fn(H100_NVL, _shape(M))
+        assert 0.0 <= r["overlapped"] <= r["comm"] + 1e-12
+        assert r["total"] > 0
+
+
+@given(M=st.sampled_from([1024, 2048, 8192, 32768]))
+@SET
+def test_sim_total_monotone_in_M(M):
+    for fn in (sim_comet, sim_tutel, sim_megatron):
+        a = fn(H100_NVL, _shape(M))["total"]
+        b = fn(H100_NVL, _shape(2 * M))["total"]
+        assert b > a
+
+
+@given(topk=st.integers(1, 8))
+@SET
+def test_sim_total_monotone_in_topk(topk):
+    a = sim_comet(H100_NVL, _shape(16384, topk=topk))["total"]
+    b = sim_comet(H100_NVL, _shape(16384, topk=topk + 1))["total"]
+    assert b > a
+
+
+@given(M=st.sampled_from([2048, 8192, 32768]))
+@SET
+def test_sim_comet_never_slower_than_serial_parts(M):
+    """comet total ≥ max(compute-only, comm-only) — no free lunch."""
+    s = _shape(M)
+    r = sim_comet(H100_NVL, s)
+    assert r["total"] >= r["comm"] - r["overlapped"] - 1e-12

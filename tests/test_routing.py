@@ -1,0 +1,139 @@
+"""Property-based tests (hypothesis) for the routing / shared-tensor substrate
+— the invariants every transport implementation relies on."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import MoEConfig
+from repro.core import routing as R
+
+SET = settings(max_examples=30, deadline=None)
+
+
+def mcfg(E, k, **kw):
+    return MoEConfig(num_experts=E, top_k=k, d_expert=16, **kw)
+
+
+# ---------------------------------------------------------------------------
+# capacity
+# ---------------------------------------------------------------------------
+
+@given(T=st.integers(1, 4096), k=st.integers(1, 8), E=st.integers(1, 128),
+       f=st.floats(1.0, 4.0))
+@SET
+def test_capacity_properties(T, k, E, f):
+    C = R.capacity(T, k, E, f)
+    assert C % 4 == 0 and C >= 4
+    assert C >= min(T * k / E, 1)          # at least the balanced load
+    # capacity covers the balanced load times the factor
+    assert C * E >= T * k * min(f, 1.0) or C >= 4
+
+
+@given(T=st.integers(1, 512), k=st.integers(1, 4), E=st.integers(1, 32))
+@SET
+def test_capacity_full_factor_never_drops(T, k, E):
+    """factor == E ⇒ C*E ≥ T*k, so no token can ever be dropped."""
+    C = R.capacity(T, k, E, float(E))
+    assert C * E >= T * k
+
+
+# ---------------------------------------------------------------------------
+# dispatch / combine inverse property
+# ---------------------------------------------------------------------------
+
+@given(T=st.integers(2, 64), E=st.integers(2, 16), k=st.integers(1, 4),
+       d=st.sampled_from([8, 16]), seed=st.integers(0, 2**31 - 1))
+@SET
+def test_dispatch_combine_roundtrip(T, E, k, d, seed):
+    """With no-drop capacity, combine(dispatch(x)) with uniform weights must
+    reproduce sum_k x for every token (expert fn = identity)."""
+    k = min(k, E)
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    x = jax.random.normal(k1, (T, d), jnp.float32)
+    # distinct experts per token (top-k semantics)
+    scores = jax.random.normal(k2, (T, E), jnp.float32)
+    _, idx = jax.lax.top_k(scores, k)
+    C = R.capacity(T, k, E, float(E))
+    buf, info = R.build_dispatch(x, idx, E, C)
+    assert buf.shape == (E, C, d)
+    w = jnp.ones((T, k), jnp.float32)
+    y = R.combine(buf.reshape(E * C, d), info, w, E_loc=E, C=C, rot=None, ep=1)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x) * k,
+                               rtol=1e-5, atol=1e-5)
+
+
+@given(T=st.integers(2, 64), E=st.integers(2, 16), seed=st.integers(0, 999))
+@SET
+def test_dispatch_slots_unique_and_ordered(T, E, seed):
+    """Every kept (token, choice) lands in a unique slot; slots within an
+    expert are filled in arrival order (the paper's sort-by-source order)."""
+    k = 2 if E >= 2 else 1
+    key = jax.random.PRNGKey(seed)
+    scores = jax.random.normal(key, (T, E), jnp.float32)
+    _, idx = jax.lax.top_k(scores, k)
+    C = R.capacity(T, k, E, float(E))
+    _, info = R.build_dispatch(jnp.zeros((T, 1), jnp.float32), idx, E, C)
+    flat_e = np.asarray(info.flat_e)
+    pos = np.asarray(info.pos)
+    keep = np.asarray(info.keep)
+    assert keep.all()                       # no-drop capacity
+    slots = flat_e * C + pos
+    assert len(np.unique(slots)) == len(slots)
+    for e in range(E):
+        pe = pos[flat_e == e]
+        assert sorted(pe.tolist()) == list(range(len(pe)))
+
+
+@given(T=st.integers(4, 64), E=st.integers(2, 8), seed=st.integers(0, 999),
+       factor=st.floats(0.1, 1.0))
+@SET
+def test_capacity_drop_is_fifo(T, E, seed, factor):
+    """Dropped tokens are exactly those beyond capacity, in arrival order."""
+    k = 1
+    key = jax.random.PRNGKey(seed)
+    scores = jax.random.normal(key, (T, E), jnp.float32)
+    _, idx = jax.lax.top_k(scores, k)
+    C = R.capacity(T, k, E, factor)
+    _, info = R.build_dispatch(jnp.zeros((T, 1), jnp.float32), idx, E, C)
+    keep = np.asarray(info.keep)
+    pos = np.asarray(info.pos)
+    np.testing.assert_array_equal(keep, pos < C)
+
+
+# ---------------------------------------------------------------------------
+# router
+# ---------------------------------------------------------------------------
+
+def test_router_topk_normalized():
+    m = mcfg(8, 2)
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, (32, 16), jnp.float32)
+    w = jax.random.normal(key, (16, 8), jnp.float32)
+    idx, wts, aux = R.router(x, w, m)
+    assert idx.shape == (32, 2) and wts.shape == (32, 2)
+    np.testing.assert_allclose(np.asarray(wts.sum(-1)), 1.0, rtol=1e-5)
+    assert (np.asarray(idx[:, 0]) != np.asarray(idx[:, 1])).all()
+    assert np.isfinite(float(aux))
+
+
+def test_router_aux_loss_balanced_lower():
+    """Uniform routing must give a lower aux loss than collapsed routing."""
+    m = mcfg(4, 1, aux_loss_coef=1.0)
+    T, d = 256, 8
+    x = jnp.eye(4, d).repeat(T // 4, axis=0)            # 4 distinct inputs
+    w_bal = jnp.eye(d, 4) * 10                          # each input -> own expert
+    w_col = jnp.zeros((d, 4)).at[:, 0].set(10)          # all -> expert 0
+    _, _, aux_bal = R.router(x, w_bal, m)
+    _, _, aux_col = R.router(x, w_col, m)
+    assert float(aux_bal) < float(aux_col)
+    assert abs(float(aux_bal) - 1.0) < 0.05             # E * (1/E*1/E) * E = 1
+
+
+def test_moe_flops_formula():
+    assert R.moe_flops(128, 2, 64, 256, glu=True) == 2 * 128 * 2 * 3 * 64 * 256
+    assert R.moe_flops(128, 2, 64, 256, glu=False) == 2 * 128 * 2 * 2 * 64 * 256

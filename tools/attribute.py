@@ -1,0 +1,107 @@
+"""Attribute per-device FLOPs/bytes/ICI of a compiled cell to op_name buckets.
+
+Usage: PYTHONPATH=src python tools/attribute.py <arch> <shape> [impl]
+"""
+import os, re, sys
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import jax
+from repro.configs.base import get_config, LM_SHAPES
+from repro.launch.train_step import (build_train_step, build_prefill_step,
+                                     build_decode_step)
+from repro.launch.mesh import make_production_mesh
+from repro.analysis.hlo_cost import (HLOCostModel, _COLLECTIVES, _TRIP_BC,
+                                     _COND, _BODY, _CALLS)
+
+KEYWORDS = ("flash", "attn", "rope", "moe", "dispatch", "combine", "xent",
+            "logsumexp", "embed", "silu", "gelu", "ssd", "ssm", "conv",
+            "adamw", "norm", "transpose")
+opname_re = re.compile(r'op_name="([^"]*)"')
+
+
+def bucket_of(name: str) -> str:
+    bwd = "bwd:" if "transpose" in name else ""
+    for kw in KEYWORDS[:-1]:
+        if kw in name:
+            return bwd + kw
+    return bwd + "other"
+
+
+def main():
+    arch, shape_name = sys.argv[1], sys.argv[2]
+    impl = sys.argv[3] if len(sys.argv) > 3 else ""
+    import dataclasses
+    cfg = get_config(arch)
+    if impl and cfg.moe:
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(cfg.moe, impl=impl))
+    mesh = make_production_mesh()
+    shape = LM_SHAPES[shape_name]
+    if shape.kind == "train":
+        built = build_train_step(cfg, shape, mesh)
+        args = (built["state_abstract"], built["batch_structs"])
+    elif shape.kind == "prefill":
+        built = build_prefill_step(cfg, shape, mesh)
+        args = (built["params_abstract"], built["batch_structs"])
+    else:
+        built = build_decode_step(cfg, shape, mesh)
+        args = (built["params_abstract"], built["cache_abstract"],
+                built["tok"], built["pos"])
+    c = built["jit"].lower(*args).compile()
+    m = HLOCostModel(c.as_text())
+
+    # computation multiplicities via while walk (fusion-called comps excluded
+    # from byte attribution on purpose — bytes counted at call sites)
+    mult = {m.entry: 1.0}
+    def walk(cn, mul):
+        comp = m.comps.get(cn)
+        if comp is None:
+            return
+        for ins in comp.instrs:
+            if ins.op == "while":
+                trip = 1
+                mm = _TRIP_BC.search(ins.attrs)
+                if mm:
+                    trip = int(mm.group(1))
+                for rx in (_COND, _BODY):
+                    mb = rx.search(ins.attrs)
+                    if mb:
+                        mult[mb.group(1)] = mult.get(mb.group(1), 0) + mul * trip
+                        walk(mb.group(1), mul * trip)
+    walk(m.entry, 1.0)
+
+    fl, by, ici = {}, {}, {}
+    for cn, mul in mult.items():
+        comp = m.comps[cn]
+        for ins in comp.instrs:
+            mm = opname_re.search(ins.attrs)
+            key = bucket_of(mm.group(1)) if mm else "?"
+            base = ins.op[:-6] if ins.op.endswith("-start") else ins.op
+            if base in _COLLECTIVES and not ins.op.endswith("-done"):
+                ob = m._operand_bytes(comp, ins)
+                ici[key] = ici.get(key, 0.0) + ob * mul
+                continue
+            if ins.op == "fusion":
+                cm = _CALLS.search(ins.attrs)
+                if cm:
+                    sub = m.comp_cost(cm.group(1))
+                    fl[key] = fl.get(key, 0.0) + sub.flops * mul
+                by[key] = by.get(key, 0.0) + \
+                    (m._operand_bytes(comp, ins) + ins.nbytes) * mul
+            elif ins.op == "dot":
+                fl[key] = fl.get(key, 0.0) + m._dot_flops(comp, ins) * mul
+                by[key] = by.get(key, 0.0) + \
+                    (m._operand_bytes(comp, ins) + ins.nbytes) * mul
+            elif ins.op not in ("parameter", "constant", "tuple",
+                                "get-tuple-element", "bitcast", "reshape"):
+                by[key] = by.get(key, 0.0) + \
+                    (m._operand_bytes(comp, ins) + ins.nbytes) * mul
+
+    print(f"{'bucket':16s} {'GFLOP':>10s} {'GB':>10s} {'ici GB':>10s}")
+    keys = sorted(set(fl) | set(by) | set(ici),
+                  key=lambda k: -(by.get(k, 0) + ici.get(k, 0)))
+    for k in keys[:20]:
+        print(f"{k:16s} {fl.get(k,0)/1e9:10.1f} {by.get(k,0)/2**30:10.2f} "
+              f"{ici.get(k,0)/2**30:10.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Hillclimb driver: compile one (arch × shape) cell with config overrides
+and print the three roofline terms — the §Perf iteration tool.
+
+Usage:
+  PYTHONPATH=src python tools/hillclimb.py qwen3-moe-235b-a22b train_4k \
+      ring_group=4 n_col=2 accum=2 remat=full fsdp=1 chunk=64 impl=comet
+"""
+import os, sys
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import dataclasses
+import json
+import time
+
+import jax
+
+from repro.analysis import roofline as RL
+from repro.configs.base import LM_SHAPES, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.train_step import (build_decode_step, build_prefill_step,
+                                     build_train_step)
+
+
+def main():
+    arch, shape_name = sys.argv[1], sys.argv[2]
+    kw = dict(a.split("=", 1) for a in sys.argv[3:])
+    cfg = get_config(arch)
+    over = {}
+    if cfg.moe is not None:
+        moe = cfg.moe
+        if "impl" in kw:
+            moe = dataclasses.replace(moe, impl=kw["impl"])
+        if "ring_group" in kw:
+            moe = dataclasses.replace(moe, ring_group=int(kw["ring_group"]))
+        if "n_col" in kw:
+            moe = dataclasses.replace(moe, n_col_blocks=int(kw["n_col"]))
+        if "ep" in kw:
+            moe = dataclasses.replace(moe, ep=int(kw["ep"]))
+        if "cap" in kw:
+            moe = dataclasses.replace(moe, capacity_factor=float(kw["cap"]))
+        over["moe"] = moe
+    if cfg.ssm is not None and "chunk" in kw:
+        over["ssm"] = dataclasses.replace(cfg.ssm, chunk_size=int(kw["chunk"]))
+    if "remat" in kw:
+        over["remat"] = kw["remat"]
+    if "spres" in kw:
+        over["sp_residual"] = kw["spres"] == "1"
+    if "padheads" in kw and cfg.attn is not None:
+        over["attn"] = dataclasses.replace(cfg.attn,
+                                           pad_heads=kw["padheads"] == "1")
+    if "dtype" in kw:
+        over["compute_dtype"] = kw["dtype"]
+    if over:
+        cfg = dataclasses.replace(cfg, **over)
+
+    mesh = make_production_mesh(multi_pod=kw.get("multipod", "0") == "1")
+    shape = LM_SHAPES[shape_name]
+    accum = int(kw.get("accum", 0))
+    fsdp = kw.get("fsdp", "1") == "1"
+    seq_shard = kw.get("sp", "1") == "1"
+
+    t0 = time.time()
+    if shape.kind == "train":
+        built = build_train_step(cfg, shape, mesh, accum=accum, fsdp=fsdp,
+                                 seq_shard=seq_shard)
+        args = (built["state_abstract"], built["batch_structs"])
+    elif shape.kind == "prefill":
+        built = build_prefill_step(cfg, shape, mesh, fsdp=fsdp)
+        args = (built["params_abstract"], built["batch_structs"])
+    else:
+        built = build_decode_step(cfg, shape, mesh, fsdp=fsdp)
+        args = (built["params_abstract"], built["cache_abstract"],
+                built["tok"], built["pos"])
+    compiled = built["jit"].lower(*args).compile()
+    report = RL.analyze(compiled, mesh.devices.size, cfg=cfg, shape=shape)
+    report["overrides"] = kw
+    report["compile_s"] = time.time() - t0
+    print(RL.fmt_report(f"{arch}/{shape_name} {kw}", report))
+    if kw.get("save"):
+        os.makedirs("experiments/perf", exist_ok=True)
+        fn = (f"experiments/perf/{arch}_{shape_name}_"
+              + "_".join(f"{k}{v}" for k, v in sorted(kw.items())
+                         if k != "save") + ".json")
+        with open(fn, "w") as f:
+            json.dump(report, f, indent=1)
+        print("saved:", fn)
+
+
+if __name__ == "__main__":
+    main()

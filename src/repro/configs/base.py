@@ -34,6 +34,14 @@ class MoEConfig:
     n_col_blocks: int = 0              # layer-1 N-decomposition; 0 = adaptive
     ring_group: int = 1                # source chunks fused per GroupGEMM step
     coarse_chunks: int = 2             # FasterMoE-style pipeline degree
+    # Adaptive transport autotuner (core/adaptive.py): path to a JSON plan
+    # cache; "" disables lookup (the knobs above then apply verbatim). With a
+    # cache configured, plan_override=True is the escape hatch pinning the
+    # explicit knobs anyway.
+    plan_cache: str = ""
+    plan_override: bool = False
+    plan_hw: str = ""                  # hardware key for plan lookup;
+                                       # "" -> $REPRO_PLAN_HW or tpu_v5e
 
 
 @dataclass(frozen=True)

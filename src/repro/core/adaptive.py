@@ -176,6 +176,329 @@ def resolve_n_col(mcfg, cfg_d_model: int, tokens_local: int,
     """Entry used by moe_layer when mcfg.n_col_blocks == 0 (adaptive)."""
     if mcfg.n_col_blocks:
         return mcfg.n_col_blocks
-    s = MoEShape(M=tokens_local, N=cfg_d_model, K=mcfg.d_expert // etp,
-                 E=mcfg.num_experts, topk=mcfg.top_k, ep=ep, etp=etp)
+    s = plan_shape(mcfg, cfg_d_model, tokens_local, ep, etp)
     return choose_n_col(hw, s)
+
+
+# ---------------------------------------------------------------------------
+# Adaptive transport plans (the tentpole): a full schedule — transport impl ×
+# ring_group × n_col_blocks × gemm backend — tuned per shape and persisted.
+# ``tune_plan`` measures real shard_map executions when a timing callback is
+# supplied and falls back to the discrete-event simulator / roofline model
+# otherwise, so the same cache format serves offline (tools/tune.py) and
+# attached-hardware tuning.
+# ---------------------------------------------------------------------------
+
+
+PLAN_CACHE_VERSION = 1
+
+TRANSPORTS = ("naive", "coarse", "comet", "bcast")
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """One concrete MoE-layer schedule. ``measured_s`` is the winning latency
+    under the measure that selected it; ``source`` records whether that was a
+    real timed execution ("measured") or the analytical model ("model")."""
+    impl: str = "comet"
+    ring_group: int = 1
+    n_col_blocks: int = 1
+    gemm_impl: str = "xla"
+    measured_s: float = 0.0
+    source: str = "model"
+
+    def to_json(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d: Dict) -> "Plan":
+        fields = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in fields})
+
+    def apply(self, mcfg):
+        """Return ``mcfg`` running this plan's schedule. Sets
+        ``plan_override`` so nested calls do not re-resolve the plan."""
+        return dataclasses.replace(
+            mcfg, impl=self.impl, ring_group=self.ring_group,
+            n_col_blocks=max(1, self.n_col_blocks), plan_override=True)
+
+
+def plan_shape(mcfg, d_model: int, tokens_local: int, ep: int,
+               etp: int) -> MoEShape:
+    """The (M, d, f, E, topk, ep, etp) key shape for plan lookup — must be
+    built identically by the tuner and by moe_layer's resolution."""
+    return MoEShape(M=tokens_local, N=d_model,
+                    K=mcfg.d_expert // max(1, etp), E=mcfg.num_experts,
+                    topk=mcfg.top_k, ep=ep, etp=etp)
+
+
+class PlanCache:
+    """JSON-backed map  shape-key -> Plan  (Comet's pre-compiled kernel
+    metadata analogue, but holding full transport schedules)."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self.plans: Dict[str, Plan] = {}
+        if path and os.path.exists(path):
+            self.load(path)
+
+    @staticmethod
+    def key(s: MoEShape, hw: Hardware) -> str:
+        return AdaptiveCache.key(s, hw)
+
+    def load(self, path: str):
+        try:
+            with open(path) as f:
+                raw = json.load(f)
+        except (OSError, ValueError) as e:
+            # a corrupt/unreadable cache must not take the run down — behave
+            # like a missing file (analytical fallback) and say so
+            import warnings
+            warnings.warn(f"plan cache {path!r} unreadable ({e}); starting "
+                          "empty — plans fall back to the analytical model",
+                          stacklevel=2)
+            self.plans = {}
+            return
+        table = raw.get("plans", raw) if isinstance(raw, dict) else {}
+        self.plans = {k: Plan.from_json(v) for k, v in table.items()
+                      if isinstance(v, dict) and "impl" in v}
+
+    def save(self, path: Optional[str] = None):
+        path = path or self.path
+        if not path:
+            raise ValueError("PlanCache has no path to save to")
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        # atomic: a concurrent load_plan_cache must never see a torn file
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({"version": PLAN_CACHE_VERSION,
+                       "plans": {k: p.to_json()
+                                 for k, p in sorted(self.plans.items())}},
+                      f, indent=1)
+        os.replace(tmp, path)
+
+    def get(self, s: MoEShape, hw: Hardware) -> Optional[Plan]:
+        return self.plans.get(self.key(s, hw))
+
+    def put(self, s: MoEShape, hw: Hardware, plan: Plan, save: bool = True):
+        self.plans[self.key(s, hw)] = plan
+        if save and self.path:
+            self.save()
+
+
+def candidate_plans(s: MoEShape, max_col_blocks: int = 8,
+                    max_ring_group: int = 4,
+                    gemm_impls: Tuple[str, ...] = ("xla",),
+                    include_bcast: bool = True) -> Iterable[Plan]:
+    """The search space: every transport with its legal knob settings."""
+    n_cols = [n for n in range(1, max_col_blocks + 1)
+              if s.N % n == 0 and s.N // n >= 128] or [1]
+    rings = [g for g in range(1, min(max_ring_group, s.ep) + 1)
+             if s.ep % g == 0] or [1]
+    for gi in gemm_impls:
+        yield Plan("naive", 1, 1, gi)
+        yield Plan("coarse", 1, 1, gi)
+        for rg in rings:
+            for n_col in n_cols:
+                yield Plan("comet", rg, n_col, gi)
+        if include_bcast:
+            yield Plan("bcast", 1, 1, gi)
+
+
+def _weight_read_time(hw: Hardware, s: MoEShape, reads: float) -> float:
+    """HBM time to stream the local expert weights ``reads`` times — the
+    ring_group trade-off (transport_comet docstring): g source chunks fused
+    per GroupGEMM macro-step means ep/g weight reads instead of ep."""
+    n_mats = (2 if s.glu else 1) + 1
+    w_bytes = (s.E / max(1, s.ep)) * n_mats * s.N * s.K * s.bytes_per_elt
+    return reads * w_bytes / hw.hbm_bw
+
+
+def modeled_plan_time(hw: Hardware, s: MoEShape, plan: Plan) -> float:
+    """Analytical latency for one MoE layer under ``plan`` — the fallback
+    measure when no device mesh is attached. Built on the discrete-event
+    simulator (analysis/simulator.py) plus a weight-HBM-traffic term the
+    simulator does not model (it is what differentiates ring_group values)."""
+    from repro.analysis import simulator as SIM  # lazy: simulator imports us
+    tpu = hw.name.startswith("tpu")
+    if plan.impl == "naive":
+        return (SIM.sim_megatron(hw, s)["total"]
+                + _weight_read_time(hw, s, 1))
+    if plan.impl == "coarse":
+        n = 2
+        return (SIM.sim_pipeline(hw, s, n_chunks=n)["total"]
+                + _weight_read_time(hw, s, n))
+    if plan.impl == "bcast":
+        # tokens replicated over the model axis: no dispatch, every rank runs
+        # its expert slice over the full token set, one psum combines.
+        rows = s.M * s.topk / max(1, s.ep)
+        n_l0 = 2 if s.glu else 1
+        t_g = (gemm_time(hw, rows, s.K, s.N, n_l0)
+               + gemm_time(hw, rows, s.N, s.K))
+        W = s.ep * s.etp
+        ar = (2.0 * (W - 1) / W * s.M * s.topk * s.N * s.bytes_per_elt
+              / SIM.link_rate(hw)) if W > 1 else 0.0
+        return t_g + ar + _weight_read_time(hw, s, 1)
+    g = max(1, plan.ring_group)
+    n_steps = max(1, s.ep // g)
+    t = SIM.sim_comet(hw, s, n_col=max(1, plan.n_col_blocks), tpu=tpu)["total"]
+    # ring_group g: ep/g weight reads (macro-step fusion) but a g-hop
+    # pipeline-fill before the first macro-step can start.
+    fill = (g - 1) * layer_times(hw, s)["t_hop"]
+    return t + _weight_read_time(hw, s, n_steps) + fill
+
+
+def tune_plan(s: MoEShape, hw: Hardware, cache: Optional[PlanCache] = None,
+              measure: Optional[Callable[[Plan], float]] = None,
+              candidates: Optional[Iterable[Plan]] = None,
+              force: bool = False) -> Plan:
+    """Pick the fastest plan for ``s`` on ``hw``.
+
+    ``measure`` is a callable Plan -> seconds timing a REAL execution (see
+    ``make_timing_measure``); when None the analytical model ranks the
+    candidates instead. The winner is stored in ``cache`` (if given) under
+    the (M, d, f, E, topk, ep, etp, hw) key and returned."""
+    if cache is not None and not force:
+        hit = cache.get(s, hw)
+        if hit is not None:
+            return hit
+    cands = list(candidates) if candidates is not None \
+        else list(candidate_plans(s))
+    source = "measured" if measure is not None else "model"
+    meas = measure if measure is not None \
+        else (lambda p: modeled_plan_time(hw, s, p))
+    best: Optional[Plan] = None
+    best_t = math.inf
+    failed = []
+    for p in cands:
+        try:
+            t = float(meas(p))
+        except Exception as e:            # illegal candidate for this shape
+            failed.append((p, e))
+            continue
+        if t < best_t:
+            best, best_t = p, t
+    if failed:
+        import warnings
+        p0, e0 = failed[0]
+        warnings.warn(
+            f"tune_plan: {len(failed)}/{len(cands)} candidates failed for "
+            f"{PlanCache.key(s, hw)} (first: {p0.impl} rg{p0.ring_group} "
+            f"nc{p0.n_col_blocks} {p0.gemm_impl}: {e0!r}); the tuned result "
+            "only ranks the surviving candidates", stacklevel=2)
+    if best is None:
+        raise RuntimeError(f"no candidate plan measurable for {s}")
+    best = dataclasses.replace(best, measured_s=best_t, source=source)
+    if cache is not None:
+        cache.put(s, hw, best)
+    return best
+
+
+def analytic_plan(s: MoEShape, hw: Hardware) -> Plan:
+    """Model-ranked plan — what moe_layer falls back to when the configured
+    cache file is missing or has no entry for this shape."""
+    return tune_plan(s, hw, cache=None, measure=None)
+
+
+def make_timing_measure(cfg, mcfg, params, x, ctx, iters: int = 3,
+                        warmup: int = 1) -> Callable[[Plan], float]:
+    """Timing callback over real ``shard_map`` executions of the MoE layer.
+
+    Returns measure(plan) -> mean seconds per forward, compiling the layer
+    with the plan's schedule (impl/ring_group/n_col/gemm backend) under the
+    caller's mesh context. Used by tools/tune.py on attached hardware (or a
+    forced-host-device mesh for functional runs)."""
+    import contextlib
+    import time as _time
+
+    import jax
+
+    from repro.core import transport as T
+    from repro.parallel.compat import use_mesh
+
+    def measure(plan: Plan) -> float:
+        from repro.core.moe_layer import moe_ffn  # lazy: moe_layer imports us
+        m2 = plan.apply(mcfg)
+        old_gemm = T.GEMM_IMPL
+        T.set_gemm_impl(plan.gemm_impl)
+        try:
+            fn = jax.jit(lambda xx: moe_ffn(cfg, m2, params, xx, ctx)[0])
+            cm = use_mesh(ctx.mesh) if ctx.active else contextlib.nullcontext()
+            with cm:
+                for _ in range(max(1, warmup)):
+                    fn(x).block_until_ready()
+                t0 = _time.perf_counter()
+                y = None
+                for _ in range(max(1, iters)):
+                    y = fn(x)
+                y.block_until_ready()
+                return (_time.perf_counter() - t0) / max(1, iters)
+        finally:
+            T.set_gemm_impl(old_gemm)
+
+    return measure
+
+
+# ---------------------------------------------------------------------------
+# Plan resolution (moe_layer entry)
+# ---------------------------------------------------------------------------
+
+_LOADED_CACHES: Dict[str, Tuple[float, PlanCache]] = {}
+
+
+def load_plan_cache(path: str) -> PlanCache:
+    """mtime-memoized cache load; a missing file yields an empty cache (the
+    analytical model then supplies plans), and an external rewrite of the
+    file is picked up on the next lookup."""
+    try:
+        mtime = os.path.getmtime(path)
+    except OSError:
+        mtime = -1.0
+    ent = _LOADED_CACHES.get(path)
+    if ent is not None and ent[0] == mtime:
+        return ent[1]
+    pc = PlanCache(path if mtime >= 0 else None)
+    pc.path = path
+    _LOADED_CACHES[path] = (mtime, pc)
+    return pc
+
+
+def plan_lookup_enabled(mcfg) -> bool:
+    if getattr(mcfg, "plan_override", False):
+        return False
+    return bool(getattr(mcfg, "plan_cache", "")
+                or os.environ.get("REPRO_PLAN_CACHE", ""))
+
+
+def resolve_plan(mcfg, d_model: int, tokens_local: int, ep: int, etp: int,
+                 hw: Optional[Hardware] = None) -> Optional[Plan]:
+    """Schedule lookup for moe_layer. Returns None when plan resolution is
+    disabled (no cache configured, or the explicit-override escape hatch is
+    set); otherwise the cached plan for this shape, falling back to the
+    analytical model when the cache file or entry is absent. The hardware
+    key comes from ``hw`` > ``mcfg.plan_hw`` > $REPRO_PLAN_HW > tpu_v5e."""
+    if not plan_lookup_enabled(mcfg):
+        return None
+    if hw is None:
+        name = getattr(mcfg, "plan_hw", "") \
+            or os.environ.get("REPRO_PLAN_HW", "")
+        if name and name not in HW:
+            import warnings
+            warnings.warn(f"unknown plan hardware {name!r} (have "
+                          f"{sorted(HW)}); using tpu_v5e — tuned plans for "
+                          f"{name!r} will never match", stacklevel=2)
+        hw = HW.get(name, TPU_V5E)
+    path = getattr(mcfg, "plan_cache", "") \
+        or os.environ.get("REPRO_PLAN_CACHE", "")
+    s = plan_shape(mcfg, d_model, tokens_local, ep, etp)
+    cache = load_plan_cache(path)
+    plan = cache.get(s, hw)
+    if plan is None:
+        plan = analytic_plan(s, hw)
+        # memoize in the loaded (in-memory) cache only — repeated traces of
+        # the same shape must not repeat the candidate search, and a later
+        # rewrite of the file invalidates this via the mtime check
+        cache.plans[cache.key(s, hw)] = plan
+    return plan

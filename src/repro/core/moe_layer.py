@@ -17,6 +17,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core import routing as R
 from repro.core import transport as T
 from repro.models.common import ParamDecl, is_glu
+from repro.parallel.compat import shard_map
 from repro.parallel.mesh import AxisCtx
 
 
@@ -145,16 +146,45 @@ def _coarse(cfg, mcfg, ctx, xt, idx, wts, E, w_local):
 # ---------------------------------------------------------------------------
 
 
+def _with_gemm_impl(name: str, thunk):
+    """Trace/run ``thunk`` under a temporarily-switched GroupGEMM backend
+    (the plan's gemm_impl). Safe under jit: the backend choice is baked in at
+    trace time, which happens inside the thunk's dynamic extent."""
+    from repro.core import transport as T
+    old = T.GEMM_IMPL
+    T.set_gemm_impl(name)
+    try:
+        return thunk()
+    finally:
+        T.set_gemm_impl(old)
+
+
 def moe_ffn(cfg, mcfg, params, x, ctx: AxisCtx,
             n_col: int = 0) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """x: (B, S, d) global (under pjit) or local (no mesh). Returns (y, aux).
+
+    Schedule resolution: when ``mcfg.plan_cache`` (or $REPRO_PLAN_CACHE) is
+    set and ``mcfg.plan_override`` is not, the transport/ring_group/n_col/
+    gemm backend all come from the tuned plan cache for this shape (missing
+    cache → analytical model). Otherwise the explicit config knobs apply;
     n_col == 0 → adaptive workload assignment picks the layer-1 column split."""
+    from repro.core import adaptive as A
+    dp = ctx.dp_size if ctx.active else 1
+    toks_local = max(1, x.shape[0] * x.shape[1] // max(1, dp))
+    if A.plan_lookup_enabled(mcfg):
+        plan = A.resolve_plan(mcfg, cfg.d_model, toks_local, ctx.ep, ctx.etp)
+        if plan is not None:
+            mcfg = plan.apply(mcfg)
+            n_col = plan.n_col_blocks
+            if plan.gemm_impl:
+                from repro.core import transport as T
+                if plan.gemm_impl != T.GEMM_IMPL:
+                    return _with_gemm_impl(
+                        plan.gemm_impl,
+                        lambda: moe_ffn(cfg, mcfg, params, x, ctx, n_col))
     if n_col == 0:
-        from repro.core.adaptive import resolve_n_col
-        toks = x.shape[0] * x.shape[1]
-        dp = ctx.dp_size if ctx.active else 1
-        n_col = resolve_n_col(mcfg, cfg.d_model, max(1, toks // max(1, dp)),
-                              ctx.ep, ctx.etp)
+        n_col = A.resolve_n_col(mcfg, cfg.d_model, toks_local,
+                                ctx.ep, ctx.etp)
     router_w = params["router"]
     experts = {k: v for k, v in params["experts"].items()}
 
@@ -176,7 +206,7 @@ def moe_ffn(cfg, mcfg, params, x, ctx: AxisCtx,
         return _moe_body(cfg, mcfg, body_ctx, n_col, x_l, rw, ew)
 
     expert_specs = {k: P(ctx.model_axis, None, None, None) for k in experts}
-    f = jax.shard_map(
+    f = shard_map(
         body, mesh=ctx.mesh,
         in_specs=(x_spec, P(None, None), expert_specs),
         out_specs=(x_spec, P()),

@@ -3,6 +3,8 @@ from __future__ import annotations
 
 import jax
 
+from repro.parallel import compat
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
@@ -10,5 +12,5 @@ def make_production_mesh(*, multi_pod: bool = False):
     try:
         return jax.make_mesh(shape, axes,
                              axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
-    except TypeError:  # older jax without axis_types kw
-        return jax.make_mesh(shape, axes)
+    except (TypeError, AttributeError):  # older jax without axis_types kw
+        return compat.make_mesh(shape, axes)

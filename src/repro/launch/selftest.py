@@ -29,6 +29,7 @@ def main() -> int:
     from repro.core.moe_layer import moe_ffn, pack_expert_weights
     from repro.models.common import init_from_schema
     from repro.core.moe_layer import moe_schema
+    from repro.parallel.compat import use_mesh
     from repro.parallel.mesh import AxisCtx, choose_ep, make_mesh
 
     failures = []
@@ -92,7 +93,7 @@ def main() -> int:
                     c2 = dataclasses.replace(ctx, seq_shard=seq_shard)
                     m2 = dataclasses.replace(mcfg0, impl=impl, ring_group=rg,
                                              n_col_blocks=2 if impl == "comet" else 0)
-                    with jax.set_mesh(mesh):
+                    with use_mesh(mesh):
                         y, aux = jax.jit(
                             lambda xx: moe_ffn(cfg, m2, params, xx, c2))(x)
                     err = float(jnp.max(jnp.abs(y - y_ref)))
@@ -112,7 +113,7 @@ def main() -> int:
                 y, aux = moe_ffn(cfg, m2, params, x, c)
                 return jnp.sum(y ** 2) + aux
 
-            with jax.set_mesh(mesh):
+            with use_mesh(mesh):
                 g_naive = jax.jit(jax.grad(lambda p: loss(p, "naive", ctx)))(params)
                 g_comet = jax.jit(jax.grad(lambda p: loss(p, "comet", ctx)))(params)
             g_local = jax.jit(jax.grad(
@@ -143,7 +144,7 @@ def main() -> int:
         packed = pack_expert_weights(full, ep, etp)
         params = {"router": router_w, "experts": packed}
         m2 = dataclasses.replace(mcfg0, impl="comet")
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             y1, _ = jax.jit(lambda xx: moe_ffn(cfg, m2, params, xx, ctx))(x1)
         err = float(jnp.max(jnp.abs(y1 - y1_ref)))
         s = float(jnp.max(jnp.abs(y1_ref))) + 1e-9

@@ -31,6 +31,17 @@ def _named(mesh, tree):
         is_leaf=lambda x: isinstance(x, P))
 
 
+def _with_plan_cache(cfg: ModelConfig, plan_cache: Optional[str],
+                     plan_hw: str = "") -> ModelConfig:
+    """Thread a tuned-plan cache path into the MoE config so every moe_ffn
+    under this step resolves its transport schedule from the cache."""
+    if not plan_cache or cfg.moe is None:
+        return cfg
+    return dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, plan_cache=plan_cache,
+                                     plan_hw=plan_hw, plan_override=False))
+
+
 def state_specs(cfg: ModelConfig, ctx: AxisCtx, fsdp: bool = True):
     schema = lm.model_schema(cfg, ctx)
     pspecs = param_specs(schema, ctx.mesh, fsdp)
@@ -91,8 +102,10 @@ def make_train_fn(cfg: ModelConfig, ctx: AxisCtx, optim: AdamW, accum: int):
 
 def build_train_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Optional[Mesh],
                      optim: Optional[AdamW] = None, accum: int = 0,
-                     fsdp: bool = True, seq_shard: bool = True):
+                     fsdp: bool = True, seq_shard: bool = True,
+                     plan_cache: Optional[str] = None, plan_hw: str = ""):
     """Returns dict with fn/jitted/in_shardings/abstract inputs."""
+    cfg = _with_plan_cache(cfg, plan_cache, plan_hw)
     optim = optim or AdamW()
     accum = accum or SP.TRAIN_ACCUM.get(shape.name, 1)
     ctx = make_ctx(cfg, mesh, seq_shard=seq_shard)
@@ -122,7 +135,9 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Optional[Mesh],
 
 
 def build_prefill_step(cfg: ModelConfig, shape: ShapeConfig,
-                       mesh: Optional[Mesh], fsdp: bool = True):
+                       mesh: Optional[Mesh], fsdp: bool = True,
+                       plan_cache: Optional[str] = None, plan_hw: str = ""):
+    cfg = _with_plan_cache(cfg, plan_cache, plan_hw)
     ctx = make_ctx(cfg, mesh, seq_shard=True)
 
     def fn(params, batch):
@@ -143,7 +158,9 @@ def build_prefill_step(cfg: ModelConfig, shape: ShapeConfig,
 
 
 def build_decode_step(cfg: ModelConfig, shape: ShapeConfig,
-                      mesh: Optional[Mesh], fsdp: bool = True):
+                      mesh: Optional[Mesh], fsdp: bool = True,
+                      plan_cache: Optional[str] = None, plan_hw: str = ""):
+    cfg = _with_plan_cache(cfg, plan_cache, plan_hw)
     ctx = make_ctx(cfg, mesh, seq_shard=False)
 
     def fn(params, cache, tokens, pos):

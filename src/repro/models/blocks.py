@@ -15,6 +15,7 @@ from repro.models import attention as A
 from repro.models import ssm as S
 from repro.models.common import (apply_norm, ffn_apply, ffn_schema,
                                  norm_schema)
+from repro.parallel.compat import shard_map
 from repro.parallel.mesh import AxisCtx
 
 
@@ -164,7 +165,7 @@ def attn_apply(cfg, p, x, ctx: AxisCtx, positions, causal: bool,
         qp_spec = P(dp, None) if q_sharded else P(dp, mx)
         body = partial(_attn_core, a, causal, use_rope, q_sharded,
                        kv_sharded, mx)
-        o, kc, vc = jax.shard_map(
+        o, kc, vc = shard_map(
             body, mesh=ctx.mesh,
             in_specs=(q_spec, kv_spec, kv_spec, qp_spec, P(dp, None)),
             out_specs=(q_spec, kv_spec, kv_spec),
@@ -266,7 +267,7 @@ def sharded_decode_attention(ctx: AxisCtx, a, q, k_cache, v_cache, t_pos):
             qk = qk.reshape(B, 1, -1, hd)           # (B,1,Hkv_l*rep,hd)
             return A.decode_attention(qk, kc, vc, t_pos)
 
-        o = jax.shard_map(
+        o = shard_map(
             body, mesh=ctx.mesh,
             in_specs=(P(dp, None, mx, None, None),
                       P(dp, None, mx, None), P(dp, None, mx, None)),
@@ -282,7 +283,7 @@ def sharded_decode_attention(ctx: AxisCtx, a, q, k_cache, v_cache, t_pos):
             out = A.merge_decode_partials(mm, ll, acc, mx)   # (B,H,1,hd)
             return out.transpose(0, 2, 1, 3).astype(qf.dtype)
 
-        return jax.shard_map(
+        return shard_map(
             body, mesh=ctx.mesh,
             in_specs=(P(dp, None, None, None),
                       P(dp, mx, None, None), P(dp, mx, None, None)),

@@ -9,6 +9,8 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.parallel import compat
+
 
 def make_mesh(shape: Sequence[int], axes: Sequence[str]) -> Mesh:
     n = math.prod(shape)
@@ -16,7 +18,7 @@ def make_mesh(shape: Sequence[int], axes: Sequence[str]) -> Mesh:
         raise RuntimeError(
             f"mesh {tuple(shape)} needs {n} devices, have {len(jax.devices())}; "
             "the dry-run launcher sets XLA_FLAGS=--xla_force_host_platform_device_count")
-    return jax.make_mesh(tuple(shape), tuple(axes))
+    return compat.make_mesh(tuple(shape), tuple(axes))
 
 
 @dataclass(frozen=True)

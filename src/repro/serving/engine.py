@@ -58,17 +58,23 @@ class GenerateResult:
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params=None, mesh=None,
-                 max_seq: int = 256, batch_size: int = 4, seed: int = 0):
+                 max_seq: int = 256, batch_size: int = 4, seed: int = 0,
+                 plan_cache: Optional[str] = None, plan_hw: str = ""):
         self.cfg = cfg
         self.mesh = mesh
         self.max_seq = max_seq
         self.B = batch_size
+        self.plan_cache = plan_cache
         pshape = ShapeConfig("serve_prefill", seq_len=max_seq,
                              global_batch=batch_size, kind="prefill")
         dshape = ShapeConfig("serve_decode", seq_len=max_seq,
                              global_batch=batch_size, kind="decode")
-        self.prefill = build_prefill_step(cfg, pshape, mesh)
-        self.decode = build_decode_step(cfg, dshape, mesh)
+        self.prefill = build_prefill_step(cfg, pshape, mesh,
+                                          plan_cache=plan_cache,
+                                          plan_hw=plan_hw)
+        self.decode = build_decode_step(cfg, dshape, mesh,
+                                        plan_cache=plan_cache,
+                                        plan_hw=plan_hw)
         if params is None:
             params = lm.init_params(cfg, jax.random.PRNGKey(seed),
                                     self.prefill["ctx"])

@@ -1,0 +1,50 @@
+"""Optional-``hypothesis`` shim: property tests skip cleanly when the
+package is absent, while every plain test in the same module stays
+collectable and runs.
+
+Usage (instead of ``from hypothesis import given, settings, strategies``):
+
+    from tests._hypothesis_compat import given, settings, st
+
+With hypothesis installed this re-exports the real objects. Without it,
+``@given(...)`` replaces the test with a zero-argument function that calls
+``pytest.skip`` — zero-argument so pytest never tries to resolve the
+property's value parameters as fixtures.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on the CPU CI image
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Stand-in for ``hypothesis.strategies``: every attribute is a
+        callable returning an inert placeholder (only ever passed to the
+        stub ``given`` below)."""
+
+        def __getattr__(self, name):
+            def _strategy(*args, **kwargs):
+                return None
+            return _strategy
+
+    st = _AnyStrategy()
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            def skipper():
+                pytest.skip("hypothesis not installed")
+            skipper.__name__ = getattr(fn, "__name__", "property_test")
+            skipper.__doc__ = getattr(fn, "__doc__", None)
+            skipper.__module__ = getattr(fn, "__module__", __name__)
+            return skipper
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+        return deco

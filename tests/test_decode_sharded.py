@@ -68,7 +68,8 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax
 import jax.numpy as jnp
 from repro.configs.base import get_config
-from repro.parallel.mesh import make_mesh, AxisCtx
+from repro.parallel.compat import make_mesh, use_mesh
+from repro.parallel.mesh import AxisCtx
 from repro.parallel.sharding import make_ctx
 from repro.models import lm
 
@@ -102,7 +103,7 @@ for arch, shape in [("granite-moe-3b-a800m-smoke", (2, 4)),
     cache0 = lm.init_cache(cfg, B, S)
     tok = jnp.array([[3], [5]], jnp.int32)
     ref, _ = lm.decode_step(cfg, local, cache0, tok, jnp.int32(4), AxisCtx())
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         got, _ = jax.jit(lambda p, c, t: lm.decode_step(
             cfg, p, c, t, jnp.int32(4), ctx))(params, cache0, tok)
     err = float(jnp.max(jnp.abs(got - ref))) / (float(jnp.max(jnp.abs(ref))) + 1e-9)

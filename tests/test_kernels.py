@@ -11,8 +11,12 @@ KEY = jax.random.PRNGKey(0)
 
 
 def _tol(dtype):
+    # fp32 bound accommodates XLA-CPU reduction-order drift across host
+    # device partitionings: with --xla_force_host_platform_device_count=8
+    # (the CI setting) kernel-vs-oracle differences reach 6.1e-5 abs at
+    # K=512, deterministically; kernel bugs produce O(1) errors.
     return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
-        dict(rtol=1e-5, atol=1e-5)
+        dict(rtol=1e-4, atol=1e-4)
 
 
 def assert_close(a, b, dtype):

@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests._hypothesis_compat import given, settings, st
 
 from repro.analysis import roofline as RL
 from repro.analysis.simulator import (H100_NVL, MoEShape, sim_comet,

@@ -101,7 +101,7 @@ def test_dryrun_one_cell_small_fleet():
             "import repro.launch.dryrun as D;"
             "import jax;"
             "from repro.configs.base import get_config, LM_SHAPES;"
-            "from repro.parallel.mesh import make_mesh;"
+            "from repro.parallel.compat import make_mesh;"
             "mesh = make_mesh((4, 4), ('data', 'model'));"
             "r = D.run_cell(get_config('qwen2-0.5b'), LM_SHAPES['decode_32k'],"
             "               mesh, 16, 'comet');"

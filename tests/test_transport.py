@@ -123,7 +123,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, dataclasses
 import jax.numpy as jnp
 from repro.configs.base import get_config
-from repro.parallel.mesh import make_mesh
+from repro.parallel.compat import make_mesh, use_mesh
 from repro.models import lm
 from repro.parallel.sharding import make_ctx
 for arch in ("mamba2-780m-smoke", "phi3-medium-14b-smoke",
@@ -139,7 +139,7 @@ for arch in ("mamba2-780m-smoke", "phi3-medium-14b-smoke",
     outs = {}
     for sp in (False, True):
         cfg = dataclasses.replace(cfg0, sp_residual=sp)
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             loss, _ = jax.jit(lambda p, b: lm.loss_fn(cfg, p, b, ctx))(params, batch)
             g = jax.jit(jax.grad(
                 lambda p: lm.loss_fn(cfg, p, batch, ctx)[0]))(params)
@@ -172,7 +172,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, dataclasses
 import jax.numpy as jnp
 from repro.configs.base import get_config
-from repro.parallel.mesh import make_mesh
+from repro.parallel.compat import make_mesh, use_mesh
 from repro.models import lm
 from repro.parallel.sharding import make_ctx
 for arch in ("phi3-medium-14b-smoke", "qwen2-0.5b-smoke"):
@@ -188,7 +188,7 @@ for arch in ("phi3-medium-14b-smoke", "qwen2-0.5b-smoke"):
     for pad in (False, True):
         cfg = dataclasses.replace(
             cfg0, attn=dataclasses.replace(cfg0.attn, pad_heads=pad))
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             loss, _ = jax.jit(lambda p, b: lm.loss_fn(cfg, p, b, ctx))(params, batch)
             g = jax.jit(jax.grad(
                 lambda p: lm.loss_fn(cfg, p, batch, ctx)[0]))(params)

@@ -1,0 +1,178 @@
+"""Offline adaptive-plan tuner: populates the JSON plan cache that
+moe_layer / train_step / serving resolve transport schedules from.
+
+Two modes:
+
+* model-backed (default) — ranks every candidate plan with the analytical
+  cost model (analysis/simulator.py + roofline terms); needs no devices.
+  Tunes the paper's Table-2 model shapes over an M grid, plus the smoke
+  shape that `benchmarks/run.py --plan` executes for real.
+* --measured — times REAL shard_map executions of the MoE layer on a
+  forced-host-device mesh (or attached accelerators) and caches the argmin.
+
+Usage:
+  PYTHONPATH=src python tools/tune.py --hw tpu_v5e
+  PYTHONPATH=src python tools/tune.py --hw tpu_v5e --out plans/tpu_v5e.json \
+      --M 1024 4096 16384 --ep 8
+  PYTHONPATH=src python tools/tune.py --hw tpu_v5e --measured --devices 8 \
+      --arch granite-moe-3b-a800m-smoke --batch 4 --seq 32
+"""
+import argparse
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (os.path.join(_ROOT, "src"), _ROOT):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+
+def _print_plan(tag, s, plan):
+    print(f"{tag},M{s.M},N{s.N},K{s.K},E{s.E},k{s.topk},ep{s.ep},etp{s.etp},"
+          f"{plan.impl},rg{plan.ring_group},nc{plan.n_col_blocks},"
+          f"{plan.gemm_impl},{plan.measured_s * 1e3:.4f}ms,{plan.source}")
+
+
+# the (arch, B, S) of the single-device smoke run `benchmarks/run.py --plan`
+# executes for real; its plan-shape key is tuned below so the demo run hits
+# the cache
+SMOKE_ARCH = "granite-moe-3b-a800m-smoke"
+SMOKE_BATCH_SEQ = (2, 16)
+
+
+def smoke_plan_shapes():
+    from repro.configs.base import get_config
+    from repro.core.adaptive import plan_shape
+    cfg = get_config(SMOKE_ARCH)
+    toks = SMOKE_BATCH_SEQ[0] * SMOKE_BATCH_SEQ[1]
+    return [("granite-smoke", cfg.moe,
+             plan_shape(cfg.moe, cfg.d_model, toks, 1, 1))]
+
+
+def tune_model_backed(args, hw, cache):
+    from benchmarks.figures import PAPER_MODELS
+    from repro.core.adaptive import MoEShape, tune_plan
+    n = 0
+    for name, m in PAPER_MODELS.items():
+        for M in args.M:
+            s = MoEShape(M=M, N=m["N"], K=m["K"] // max(1, args.etp),
+                         E=m["E"], topk=m["topk"], ep=args.ep, etp=args.etp)
+            plan = tune_plan(s, hw, cache, force=args.force)
+            _print_plan(name, s, plan)
+            n += 1
+    for tag, _mcfg, s in smoke_plan_shapes():
+        plan = tune_plan(s, hw, cache, force=args.force)
+        _print_plan(tag, s, plan)
+        n += 1
+    return n
+
+
+def tune_measured(args, hw, cache):
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.base import get_config
+    from repro.core.adaptive import (candidate_plans, make_timing_measure,
+                                     plan_shape, tune_plan)
+    from repro.core.moe_layer import pack_expert_weights
+    from repro.models.common import is_glu
+    from repro.parallel.compat import make_mesh
+    from repro.parallel.mesh import AxisCtx
+
+    cfg = get_config(args.arch)
+    mcfg = cfg.moe
+    if mcfg is None:
+        raise SystemExit(f"--measured requires a MoE arch, got {args.arch}")
+    E, d, f = mcfg.num_experts, cfg.d_model, mcfg.d_expert
+
+    n_dev = len(jax.devices())
+    mp = args.ep * args.etp
+    if mp > n_dev or E % args.ep or f % args.etp:
+        raise SystemExit(f"ep={args.ep} etp={args.etp} needs {mp} devices "
+                         f"(have {n_dev}) and must divide E={E}, f={f}")
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    full = {"w_up": jax.random.normal(ks[1], (E, d, f), jnp.float32) * 0.05,
+            "w_down": jax.random.normal(ks[2], (E, f, d), jnp.float32) * 0.05}
+    if is_glu(cfg.activation):
+        full["w_gate"] = \
+            jax.random.normal(ks[0], (E, d, f), jnp.float32) * 0.05
+    router_w = jax.random.normal(ks[3], (d, E), jnp.float32) * 0.1
+    x = jax.random.normal(ks[4], (args.batch, args.seq, d), jnp.float32)
+
+    if mp > 1:
+        dp = max(1, n_dev // mp)
+        mesh = make_mesh((dp, mp), ("data", "model"))
+        ctx = AxisCtx(mesh=mesh, dp_axes=("data",), model_axis="model",
+                      ep=args.ep, etp=args.etp)
+        experts = pack_expert_weights(full, args.ep, args.etp)
+    else:
+        ctx = AxisCtx()
+        experts = {k: v[None] for k, v in full.items()}
+    params = {"router": router_w, "experts": experts}
+
+    # no-drop capacity: every candidate computes identical work
+    mcfg = dataclasses.replace(mcfg, capacity_factor=float(E))
+    measure = make_timing_measure(cfg, mcfg, params, x, ctx,
+                                  iters=args.iters, warmup=1)
+    dpsz = ctx.dp_size if ctx.active else 1
+    toks = max(1, args.batch * args.seq // max(1, dpsz))
+    s = plan_shape(mcfg, d, toks, ctx.ep, ctx.etp)
+    cands = candidate_plans(s, gemm_impls=tuple(args.gemm))
+    plan = tune_plan(s, hw, cache, measure=measure, candidates=cands,
+                     force=args.force)
+    _print_plan(args.arch, s, plan)
+    return 1
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--hw", default="tpu_v5e")
+    ap.add_argument("--out", default=None,
+                    help="plan-cache path (default plans/<hw>.json)")
+    ap.add_argument("--M", type=int, nargs="*", default=[1024, 4096, 16384],
+                    help="per-group token counts to tune (model mode)")
+    ap.add_argument("--ep", type=int, default=8)
+    ap.add_argument("--etp", type=int, default=1)
+    ap.add_argument("--force", action="store_true",
+                    help="re-tune even on a cache hit")
+    ap.add_argument("--measured", action="store_true",
+                    help="time real executions instead of the cost model")
+    ap.add_argument("--devices", type=int, default=8,
+                    help="forced host device count (--measured)")
+    ap.add_argument("--arch", default="granite-moe-3b-a800m-smoke",
+                    help="MoE arch to time (--measured)")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--gemm", nargs="*", default=["xla"],
+                    choices=["xla", "pallas"],
+                    help="GroupGEMM backends to search (--measured; the "
+                         "cost model cannot rank backends)")
+    args = ap.parse_args(argv)
+
+    if args.measured:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices} "
+            + os.environ.get("XLA_FLAGS", ""))
+
+    from repro.core.adaptive import HW, PlanCache
+    if args.hw not in HW:
+        raise SystemExit(f"unknown --hw {args.hw!r}; have {sorted(HW)}")
+    hw = HW[args.hw]
+    out = args.out or os.path.join("plans", f"{args.hw}.json")
+    cache = PlanCache(out)
+
+    print("tag,M,N,K,E,topk,ep,etp,impl,ring_group,n_col,gemm,latency,source")
+    if args.measured:
+        tune_measured(args, hw, cache)
+    else:
+        tune_model_backed(args, hw, cache)
+    cache.save()
+    print(f"\nwrote {len(cache.plans)} plans -> {out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -33,6 +33,10 @@ class MoEConfig:
     ep: int = 0                        # expert-parallel group size; 0 = auto
     n_col_blocks: int = 0              # layer-1 N-decomposition; 0 = adaptive
     ring_group: int = 1                # source chunks fused per GroupGEMM step
+    fused_combine: bool = False        # comet: combine each column block as
+                                       # it arrives (streaming layer-1
+                                       # consumer) instead of after the
+                                       # full-width concatenation
     coarse_chunks: int = 2             # FasterMoE-style pipeline degree
     # Adaptive transport autotuner (core/adaptive.py): path to a JSON plan
     # cache; "" disables lookup (the knobs above then apply verbatim). With a

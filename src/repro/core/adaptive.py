@@ -190,7 +190,10 @@ def resolve_n_col(mcfg, cfg_d_model: int, tokens_local: int,
 # ---------------------------------------------------------------------------
 
 
-PLAN_CACHE_VERSION = 1
+# v2 (PR 2): plans gained ``gemm_impl="pallas_fused"`` and the
+# ``fused_combine`` flag. v1 caches load unchanged — Plan.from_json defaults
+# the missing field to False.
+PLAN_CACHE_VERSION = 2
 
 TRANSPORTS = ("naive", "coarse", "comet", "bcast")
 
@@ -204,6 +207,7 @@ class Plan:
     ring_group: int = 1
     n_col_blocks: int = 1
     gemm_impl: str = "xla"
+    fused_combine: bool = False
     measured_s: float = 0.0
     source: str = "model"
 
@@ -220,7 +224,8 @@ class Plan:
         ``plan_override`` so nested calls do not re-resolve the plan."""
         return dataclasses.replace(
             mcfg, impl=self.impl, ring_group=self.ring_group,
-            n_col_blocks=max(1, self.n_col_blocks), plan_override=True)
+            n_col_blocks=max(1, self.n_col_blocks),
+            fused_combine=self.fused_combine, plan_override=True)
 
 
 def plan_shape(mcfg, d_model: int, tokens_local: int, ep: int,
@@ -290,9 +295,16 @@ class PlanCache:
 
 def candidate_plans(s: MoEShape, max_col_blocks: int = 8,
                     max_ring_group: int = 4,
-                    gemm_impls: Tuple[str, ...] = ("xla",),
+                    gemm_impls: Tuple[str, ...] = ("xla", "pallas_fused"),
                     include_bcast: bool = True) -> Iterable[Plan]:
-    """The search space: every transport with its legal knob settings."""
+    """The search space: every transport with its legal knob settings.
+
+    The default backend set omits ``"pallas"`` — the analytical model rates
+    it identically to ``"xla"`` (same GEMMs, same HBM traffic), so including
+    it only duplicates candidates; measured tuning (tools/tune.py --gemm)
+    can add it. ``"pallas_fused"`` IS modeled (the saved hidden HBM round
+    trip vs. the per-column-block GEMM1 recompute), as is the comet
+    ``fused_combine`` streaming-consumer flag."""
     n_cols = [n for n in range(1, max_col_blocks + 1)
               if s.N % n == 0 and s.N // n >= 128] or [1]
     rings = [g for g in range(1, min(max_ring_group, s.ep) + 1)
@@ -302,7 +314,8 @@ def candidate_plans(s: MoEShape, max_col_blocks: int = 8,
         yield Plan("coarse", 1, 1, gi)
         for rg in rings:
             for n_col in n_cols:
-                yield Plan("comet", rg, n_col, gi)
+                for fc in (False, True):
+                    yield Plan("comet", rg, n_col, gi, fc)
         if include_bcast:
             yield Plan("bcast", 1, 1, gi)
 
@@ -316,20 +329,97 @@ def _weight_read_time(hw: Hardware, s: MoEShape, reads: float) -> float:
     return reads * w_bytes / hw.hbm_bw
 
 
+def _layer0_weight_bytes(s: MoEShape) -> float:
+    """Local layer-0 expert weights (w_gate + w_up), one full read."""
+    n_l0 = 2 if s.glu else 1
+    return (s.E / max(1, s.ep)) * n_l0 * s.N * s.K * s.bytes_per_elt
+
+
+def _hidden_traffic_time(hw: Hardware, s: MoEShape, plan: Plan) -> float:
+    """Time attributable to the inter-GEMM hidden tensor h (rows_total, K).
+
+    Unfused backends (xla / pallas) write h to HBM once and re-read it per
+    GEMM2 call — the comet schedule's N-decomposition re-reads ALL of h for
+    every column block. The fused backend never gives h an HBM address, but
+    each extra column block is a separate col-sliced kernel call that
+    recomputes GEMM1: it re-spends the FLOPs AND re-streams the layer-0
+    weights (whichever bounds) — this term is what lets the tuner rank the
+    backends, and what pushes the fused schedule toward n_col == 1 (where
+    the kernel's n_major traversal supplies the early tile completion)."""
+    rows = s.M * s.topk                     # expert rows per device (a2a paths)
+    if plan.impl == "bcast":
+        rows /= max(1, s.ep)                # each rank only its expert slice
+    n_col = max(1, plan.n_col_blocks) if plan.impl == "comet" else 1
+    if plan.gemm_impl == "pallas_fused":
+        n_l0 = 2 if s.glu else 1
+        n_steps = max(1, s.ep // max(1, plan.ring_group)) \
+            if plan.impl == "comet" else 1
+        recompute = gemm_time(hw, rows, s.K, s.N, n_l0)
+        reread = n_steps * _layer0_weight_bytes(s) / hw.hbm_bw
+        return (n_col - 1) * max(recompute, reread)
+    h_bytes = rows * s.K * s.bytes_per_elt
+    return h_bytes * (1 + n_col) / hw.hbm_bw
+
+
+def _combine_stage_time(hw: Hardware, s: MoEShape, plan: Plan) -> float:
+    """Extra HBM staging for the comet combine: without ``fused_combine``
+    the n_col column blocks are concatenated into a full-width
+    (M·topk, N) buffer (write + read) before one combine; the streaming
+    per-block combine consumes each block in place."""
+    if plan.impl != "comet" or plan.fused_combine \
+            or max(1, plan.n_col_blocks) == 1:
+        return 0.0
+    return 2.0 * s.M * s.topk * s.N * s.bytes_per_elt / hw.hbm_bw
+
+
+def hot_path_hbm_bytes(s: MoEShape, plan: Plan) -> int:
+    """Modeled HBM bytes moved by one MoE layer's hot path under ``plan`` —
+    the figure benchmarks/run.py --json reports so the fused pipeline's
+    traffic saving is visible next to the latency model. Terms: dispatch
+    buffer (write + read), inter-GEMM hidden (0 when fused), expert output
+    (write + combine read), comet combine staging (0 when streaming), and
+    expert-weight reads — ×ep/ring_group macro-steps for comet, with the
+    layer-0 weights re-streamed (n_col - 1) extra times under the fused
+    backend (each col-sliced kernel call recomputes GEMM1). The fused
+    schedule therefore minimizes its bytes at n_col == 1, where the
+    kernel's n_major traversal supplies the early tile completion."""
+    rows = s.M * s.topk
+    if plan.impl == "bcast":
+        rows /= max(1, s.ep)                # matches _hidden_traffic_time
+    bpe = s.bytes_per_elt
+    n_col = max(1, plan.n_col_blocks) if plan.impl == "comet" else 1
+    dispatch = 2 * rows * s.N * bpe
+    hidden = (0 if plan.gemm_impl == "pallas_fused"
+              else rows * s.K * bpe * (1 + n_col))
+    out = 2 * rows * s.N * bpe
+    stage = (0 if plan.impl != "comet" or plan.fused_combine or n_col == 1
+             else 2 * rows * s.N * bpe)
+    n_steps = (max(1, s.ep // max(1, plan.ring_group))
+               if plan.impl == "comet" else 1)
+    n_mats = (2 if s.glu else 1) + 1
+    weights = n_steps * (s.E / max(1, s.ep)) * n_mats * s.N * s.K * bpe
+    if plan.gemm_impl == "pallas_fused":
+        weights += n_steps * (n_col - 1) * _layer0_weight_bytes(s)
+    return int(dispatch + hidden + out + stage + weights)
+
+
 def modeled_plan_time(hw: Hardware, s: MoEShape, plan: Plan) -> float:
     """Analytical latency for one MoE layer under ``plan`` — the fallback
     measure when no device mesh is attached. Built on the discrete-event
-    simulator (analysis/simulator.py) plus a weight-HBM-traffic term the
-    simulator does not model (it is what differentiates ring_group values)."""
+    simulator (analysis/simulator.py) plus HBM-traffic terms the simulator
+    does not model: expert-weight reads (differentiates ring_group), the
+    inter-GEMM hidden round trip (differentiates the fused backend), and
+    the comet combine staging (differentiates ``fused_combine``)."""
     from repro.analysis import simulator as SIM  # lazy: simulator imports us
     tpu = hw.name.startswith("tpu")
+    extra = _hidden_traffic_time(hw, s, plan) + _combine_stage_time(hw, s, plan)
     if plan.impl == "naive":
         return (SIM.sim_megatron(hw, s)["total"]
-                + _weight_read_time(hw, s, 1))
+                + _weight_read_time(hw, s, 1) + extra)
     if plan.impl == "coarse":
         n = 2
         return (SIM.sim_pipeline(hw, s, n_chunks=n)["total"]
-                + _weight_read_time(hw, s, n))
+                + _weight_read_time(hw, s, n) + extra)
     if plan.impl == "bcast":
         # tokens replicated over the model axis: no dispatch, every rank runs
         # its expert slice over the full token set, one psum combines.
@@ -340,14 +430,14 @@ def modeled_plan_time(hw: Hardware, s: MoEShape, plan: Plan) -> float:
         W = s.ep * s.etp
         ar = (2.0 * (W - 1) / W * s.M * s.topk * s.N * s.bytes_per_elt
               / SIM.link_rate(hw)) if W > 1 else 0.0
-        return t_g + ar + _weight_read_time(hw, s, 1)
+        return t_g + ar + _weight_read_time(hw, s, 1) + extra
     g = max(1, plan.ring_group)
     n_steps = max(1, s.ep // g)
     t = SIM.sim_comet(hw, s, n_col=max(1, plan.n_col_blocks), tpu=tpu)["total"]
     # ring_group g: ep/g weight reads (macro-step fusion) but a g-hop
     # pipeline-fill before the first macro-step can start.
     fill = (g - 1) * layer_times(hw, s)["t_hop"]
-    return t + _weight_read_time(hw, s, n_steps) + fill
+    return t + _weight_read_time(hw, s, n_steps) + fill + extra
 
 
 def tune_plan(s: MoEShape, hw: Hardware, cache: Optional[PlanCache] = None,

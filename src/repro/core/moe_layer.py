@@ -90,42 +90,73 @@ def _moe_body(cfg, mcfg, ctx: AxisCtx, n_col: int, x, router_w, experts):
             token_axes = token_axes + (ctx.model_axis,)
     idx, wts, aux = R.router(xt, router_w, mcfg, token_axes)
     C = R.capacity(Tn, mcfg.top_k, E, mcfg.capacity_factor)
-    buf, info = R.build_dispatch(xt, idx, E, C)                     # (E, C, d)
     ep = ctx.ep if ctx.active else 1
     E_loc = E // ep
     w_local = {k: v[0] for k, v in experts.items()}                 # strip shard dim
 
     impl = mcfg.impl
     if impl == "coarse" and ctx.active and ctx.world > 1:
-        y = _coarse(cfg, mcfg, ctx, xt, idx, wts, E, w_local)
-    elif impl == "bcast" or (impl != "dense" and S == 1 and not ctx.seq_shard):
+        # the coarse schedule re-dispatches per token slice — building the
+        # full-batch dispatch here would be pure waste, so it is skipped
+        y = _coarse(cfg, mcfg, ctx, xt, idx, wts, E, C, w_local)
+        return y.reshape(B, S, d), aux
+
+    buf, info = R.build_dispatch(xt, idx, E, C)                     # (E, C, d)
+    if impl == "bcast" or (impl != "dense" and S == 1 and not ctx.seq_shard):
         out = T.transport_bcast(ctx, buf, w_local, cfg.activation)
         y = R.combine(out.reshape(E * C, d), info, wts, E_loc=E, C=C,
                       rot=None, ep=1)
     else:
         send = buf.reshape(ep, E_loc, C, d)
-        if impl == "comet":
-            out, rot = T.transport_comet(ctx, send, w_local, cfg.activation,
-                                         n_col_blocks=n_col,
-                                         ring_group=mcfg.ring_group)
-        else:                                                        # naive / dense
-            out, rot = T.transport_naive(ctx, send, w_local, cfg.activation)
-        y = R.combine(out.reshape(ep * E_loc * C, d), info, wts, E_loc, C,
-                      rot, ep)
+        if impl == "comet" and mcfg.fused_combine:
+            # streaming layer-1 consumer: combine each column block as it
+            # arrives so the weighted reduction overlaps remaining blocks'
+            # compute + return traffic (plan knob ``fused_combine``)
+            blocks, rot = T.transport_comet_blocks(
+                ctx, send, w_local, cfg.activation, n_col_blocks=n_col,
+                ring_group=mcfg.ring_group)
+            parts = [R.combine(b.reshape(ep * E_loc * C, b.shape[-1]), info,
+                               wts, E_loc, C, rot, ep) for b in blocks]
+            y = parts[0] if len(parts) == 1 else \
+                jnp.concatenate(parts, axis=-1)
+        else:
+            if impl == "comet":
+                out, rot = T.transport_comet(ctx, send, w_local,
+                                             cfg.activation,
+                                             n_col_blocks=n_col,
+                                             ring_group=mcfg.ring_group)
+            else:                                                    # naive / dense
+                out, rot = T.transport_naive(ctx, send, w_local,
+                                             cfg.activation)
+            y = R.combine(out.reshape(ep * E_loc * C, d), info, wts, E_loc,
+                          C, rot, ep)
 
     y = y.reshape(B, S, d)
     # aux already pmean'd over token axes inside the router
     return y, aux
 
 
-def _coarse(cfg, mcfg, ctx, xt, idx, wts, E, w_local):
-    """FasterMoE-style: n token slices, each a full (a2a → MLP → a2a) round."""
+def _coarse(cfg, mcfg, ctx, xt, idx, wts, E, C, w_local):
+    """FasterMoE-style: n token slices, each a full (a2a → MLP → a2a) round.
+
+    ``C`` is the full-batch capacity from the outer routing pass; it is
+    reused when no slice-local re-routing happens (n == 1 — the slice IS the
+    batch), with an equivalence assertion that the slice-local computation
+    would have agreed. Only n > 1 recomputes a per-slice capacity."""
     n = max(1, mcfg.coarse_chunks)
     Tn, d = xt.shape
     while Tn % n:
         n -= 1
     Ts = Tn // n
-    Cs = R.capacity(Ts, mcfg.top_k, E, mcfg.capacity_factor)
+    if n == 1:
+        Cs = C
+        # drift guard, not a runtime check: fires if the slicing arithmetic
+        # above ever makes Ts != Tn (or capacity grows new inputs) while
+        # this arm still reuses the outer C
+        assert R.capacity(Ts, mcfg.top_k, E, mcfg.capacity_factor) == C, \
+            "slice-local capacity must equal the outer routing pass's"
+    else:
+        Cs = R.capacity(Ts, mcfg.top_k, E, mcfg.capacity_factor)
     ep = ctx.ep
     E_loc = E // ep
     outs = []

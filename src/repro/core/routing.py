@@ -22,7 +22,6 @@ class DispatchInfo:
     flat_e: jnp.ndarray      # (T*k,) expert id per (token, choice)
     pos: jnp.ndarray         # (T*k,) slot within expert queue
     keep: jnp.ndarray        # (T*k,) bool, False = dropped by capacity
-    weights: jnp.ndarray     # (T, k) combine weights
     T: int
     k: int
 
@@ -59,18 +58,38 @@ def router(x, w_router, mcfg, token_axes=()):
 
 def build_dispatch(x, idx, E: int, C: int) -> Tuple[jnp.ndarray, DispatchInfo]:
     """x: (T, d); idx: (T, k). Builds the shared tensor (E, C, d) with tokens
-    sorted by (expert, arrival order) — slot = position in expert queue."""
+    sorted by (expert, arrival order) — slot = position in expert queue.
+
+    Sort-based slot assignment: ranks come from an argsort over the composite
+    key ``expert_id * T*k + arrival``, so the rank-in-queue of a (token,
+    choice) is its position in the sorted order minus its expert's segment
+    offset — O(T·k·log(T·k)) work instead of the O(T·k·E) one-hot cumsum.
+    The buffer is then filled by ONE (E*C, d) gather through the inverse
+    slot→token map; the (T*k, d) ``jnp.repeat`` copy of all activations the
+    one-hot path needed is never materialized. Bit-identical to the one-hot
+    reference (tests/test_fused_pipeline.py checks exactness)."""
     T, k = idx.shape
     d = x.shape[-1]
-    flat_e = idx.reshape(-1)                                       # (T*k,)
-    oh = (flat_e[:, None] == jnp.arange(E)[None, :]).astype(jnp.int32)
-    pos = jnp.take_along_axis(jnp.cumsum(oh, axis=0) - 1,
-                              flat_e[:, None], axis=1)[:, 0]       # (T*k,)
+    TK = T * k
+    flat_e = idx.reshape(-1).astype(jnp.int32)                     # (T*k,)
+    # jnp.argsort is stable (lax.sort is_stable), so equal expert ids keep
+    # arrival order — no composite key needed (one would overflow int32 at
+    # E*T*k >= 2^31)
+    order = jnp.argsort(flat_e)                                    # (T*k,)
+    counts = jnp.zeros((E,), jnp.int32).at[flat_e].add(1)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                              jnp.cumsum(counts)[:-1]])            # (E,)
+    rank_sorted = jnp.arange(TK, dtype=jnp.int32) - starts[flat_e[order]]
+    pos = jnp.zeros((TK,), jnp.int32).at[order].set(rank_sorted)   # (T*k,)
     keep = pos < C
     slot = jnp.where(keep, flat_e * C + jnp.minimum(pos, C - 1), E * C)
-    x_rep = jnp.repeat(x, k, axis=0)                               # (T*k, d)
-    buf = jnp.zeros((E * C, d), x.dtype).at[slot].set(x_rep, mode="drop")
-    return buf.reshape(E, C, d), DispatchInfo(flat_e, pos, keep, None, T, k)
+    # inverse map slot -> source token row; dropped (token, choice) pairs
+    # scatter to the out-of-bounds slot E*C and vanish under mode="drop"
+    tok = jnp.arange(TK, dtype=jnp.int32) // k
+    src = jnp.zeros((E * C,), jnp.int32).at[slot].set(tok, mode="drop")
+    filled = jnp.zeros((E * C,), jnp.bool_).at[slot].set(True, mode="drop")
+    buf = jnp.where(filled[:, None], x[src], jnp.zeros((), x.dtype))
+    return buf.reshape(E, C, d), DispatchInfo(flat_e, pos, keep, T, k)
 
 
 def combine(recv_flat, info: DispatchInfo, weights, E_loc: int, C: int,
@@ -78,7 +97,16 @@ def combine(recv_flat, info: DispatchInfo, weights, E_loc: int, C: int,
     """recv_flat: (ep*E_loc*C, d) expert outputs; slot layout (s, l, c) where
     chunk index s ↔ destination group g via ``g == s`` (naive; rot None) or
     ``s == (rot - g) % ep`` (comet ring rotation, rot = my group index).
-    Returns (T, d) = top-k weighted sum, dropped slots contribute zero."""
+    Returns (T, d) = top-k weighted sum, dropped slots contribute zero.
+
+    The gather (slot → token rows) stays in XLA's gather engine; the fp32
+    weighted reduction runs in the Pallas ``topk_combine`` kernel (the
+    paper's layer-1 consumer), differentiable via its custom VJP — on TPU,
+    or in interpret mode on CPU. Other backends (e.g. CUDA jax, where the
+    Pallas TPU lowering does not exist) keep the pure-jnp reduction, same
+    numerics. In the comet schedule ``d`` may be a single column block —
+    the reduction is columnwise, so per-block combines concatenate to the
+    full-width result."""
     g = info.flat_e // E_loc
     l = info.flat_e % E_loc
     s_idx = g if rot is None else (rot - g) % ep
@@ -86,6 +114,9 @@ def combine(recv_flat, info: DispatchInfo, weights, E_loc: int, C: int,
     rows = recv_flat[idx]                                          # (T*k, d)
     rows = jnp.where(info.keep[:, None], rows, 0)
     rows = rows.reshape(info.T, info.k, -1)
+    if jax.default_backend() in ("cpu", "tpu"):
+        from repro.kernels import ops
+        return ops.topk_combine_diff(rows, weights)
     w = weights.astype(jnp.float32)[..., None]
     return jnp.sum(rows.astype(jnp.float32) * w, axis=1).astype(recv_flat.dtype)
 

@@ -43,15 +43,21 @@ from repro.parallel.mesh import AxisCtx
 # Expert MLP (GroupGEMM over local experts)
 # ---------------------------------------------------------------------------
 
-# GroupGEMM backend: "xla" (einsum; XLA fuses + reorders freely) or "pallas"
-# (the kernels/grouped_gemm.py kernel with Comet traversal orders — on TPU
-# this pins tile completion order, layer-1 uses order="n_major" per Fig. 6).
+# GroupGEMM backend:
+#   "xla"          — einsum; XLA fuses + reorders freely.
+#   "pallas"       — kernels/grouped_gemm.py with Comet traversal orders (on
+#                    TPU this pins tile completion order; layer-1 uses
+#                    order="n_major" per Fig. 6).
+#   "pallas_fused" — kernels/fused_mlp.py: GEMM1→activation→GEMM2 in one
+#                    kernel, hidden activations VMEM-resident (no
+#                    (E_loc, R, f_loc) HBM round trip).
+GEMM_BACKENDS = ("xla", "pallas", "pallas_fused")
 GEMM_IMPL = "xla"
 
 
 def set_gemm_impl(name: str):
     global GEMM_IMPL
-    assert name in ("xla", "pallas"), name
+    assert name in GEMM_BACKENDS, name
     GEMM_IMPL = name
 
 
@@ -59,8 +65,9 @@ def _gg(rows, w, order="expert_major"):
     if GEMM_IMPL == "pallas":
         from repro.kernels import ops
         return ops.grouped_gemm(rows, w, order=order)
-    contract = "erd,edf->erf" if w.shape[1] == rows.shape[-1] else "erf,efd->erd"
-    return jnp.einsum(contract, rows, w)
+    # one contraction covers both layouts — (E,R,d)@(E,d,f) and
+    # (E,R,f)@(E,f,d) differ only in axis naming
+    return jnp.einsum("erk,ekn->ern", rows, w)
 
 
 def expert_gemm1(rows, w, activation: str):
@@ -81,6 +88,31 @@ def expert_gemm2(h, w, col_slice: Optional[Tuple[int, int]] = None):
     return _gg(h, wd, order="n_major")
 
 
+def _mlp_out(rows, w, activation: str):
+    """Full-width expert MLP under the active backend: one fused kernel call
+    (hidden stays in VMEM) or the two-GEMM pipeline (hidden through HBM)."""
+    if GEMM_IMPL == "pallas_fused":
+        from repro.kernels import ops
+        return ops.fused_mlp(rows, w, activation)
+    return expert_gemm2(expert_gemm1(rows, w, activation), w)
+
+
+def mlp_col_blocks(rows, w, activation: str, n_col: int, blk: int):
+    """Per-column-block expert MLP outputs — the layer-1 producer interface
+    for the comet schedule. Returns a list of ``n_col`` arrays
+    (E_loc, R, blk). Unfused backends share one HBM-resident hidden across
+    the blocks (each GEMM2 call re-reads it); the fused backend issues one
+    col-sliced kernel per block, recomputing the hidden in VMEM — the
+    recompute-vs-HBM-traffic trade the adaptive cost model ranks."""
+    if GEMM_IMPL == "pallas_fused":
+        from repro.kernels import ops
+        return [ops.fused_mlp(rows, w, activation, col_slice=(b * blk, blk),
+                              order="n_major")
+                for b in range(n_col)]
+    h = expert_gemm1(rows, w, activation)
+    return [expert_gemm2(h, w, (b * blk, blk)) for b in range(n_col)]
+
+
 def _etp_psum(ctx: AxisCtx, x):
     if ctx.etp == 1:
         return x
@@ -88,9 +120,7 @@ def _etp_psum(ctx: AxisCtx, x):
 
 
 def expert_mlp(ctx: AxisCtx, rows, w, activation: str):
-    h = expert_gemm1(rows, w, activation)
-    out = expert_gemm2(h, w)
-    return _etp_psum(ctx, out)
+    return _etp_psum(ctx, _mlp_out(rows, w, activation))
 
 
 # ---------------------------------------------------------------------------
@@ -149,10 +179,18 @@ def _perm(ctx: AxisCtx, group_shift: int, tp_shift: int):
     return pairs
 
 
-def transport_comet(ctx: AxisCtx, send, w, activation: str,
-                    n_col_blocks: int = 1, ring_group: int = 1):
-    """Returns (recv_out (ep, E_loc, C, d), rot) — combine() must use the ring
-    rotation: chunk slot s holds outputs for destination group (rot - s) % ep.
+def transport_comet_blocks(ctx: AxisCtx, send, w, activation: str,
+                           n_col_blocks: int = 1, ring_group: int = 1):
+    """The comet ring, exposing the layer-1 N-decomposition to the caller:
+    returns (blocks, rot) where ``blocks`` is a list of ``n_col`` arrays
+    (ep, E_loc, C, blk) — column block b of every chunk's expert output —
+    and chunk slot s holds outputs for destination group (rot - s) % ep.
+
+    This is the streaming-consumer interface: block b's array depends only
+    on block-b compute and return permutes, so a per-block combine (the
+    paper's layer-1 consumer) can start as soon as its block arrives and
+    overlap the remaining blocks' GEMM + return traffic, instead of waiting
+    for the full-width concatenation.
 
     ring_group g: number of source-rank chunks fused into ONE GroupGEMM
     macro-step (ep/g steps total). g=1 is the finest overlap (paper default);
@@ -166,22 +204,25 @@ def transport_comet(ctx: AxisCtx, send, w, activation: str,
     ax = ctx.model_axis
     etp = ctx.etp
 
-    if not ctx.active or ctx.world == 1:
-        out, _ = transport_naive(ctx, send, w, activation)
-        return out, None
-
-    r = lax.axis_index(ax)
-    g_r = r // etp
     n_col = max(1, min(n_col_blocks, 8))
     while d % n_col:
         n_col -= 1
     blk = d // n_col
+
+    if not ctx.active or ctx.world == 1:
+        out, _ = transport_naive(ctx, send, w, activation)
+        return [lax.slice_in_dim(out, b * blk, (b + 1) * blk, axis=-1)
+                for b in range(n_col)], None
+
+    r = lax.axis_index(ax)
+    g_r = r // etp
     g = max(1, min(ring_group, ep))
     while ep % g:
         g -= 1
     n_steps = ep // g
 
-    outs: List[jnp.ndarray] = []
+    # col_blocks[b][s]: (E_loc, C, blk) — filled in ascending chunk-slot order
+    col_blocks: List[List[jnp.ndarray]] = [[] for _ in range(n_col)]
     for step in range(n_steps):
         # ---- dispatch: receive g source groups' chunks ---------------------
         chunk_rows = []
@@ -208,15 +249,13 @@ def transport_comet(ctx: AxisCtx, send, w, activation: str,
         rows = (chunk_rows[0] if g == 1 else
                 jnp.concatenate(chunk_rows, axis=1))   # (E_loc, g*etp*C, d)
 
-        # ---- fused macro-step expert MLP (layer0 consumer) -----------------
-        h = expert_gemm1(rows, w, activation)                       # (E_loc,R,f_loc)
-
-        # ---- layer1: N-decomposed GEMM2, return each column block early ----
+        # ---- macro-step expert MLP, N-decomposed (layer0 + layer1) ---------
+        # fused backend: one VMEM-resident kernel per column block;
+        # unfused: GEMM1 once (hidden through HBM), GEMM2 per block
         Rc = etp * C                                    # rows per source chunk
-        blocks: List[List[jnp.ndarray]] = [[] for _ in range(g)]
-        for b in range(n_col):
-            ob = expert_gemm2(h, w, (b * blk, blk))     # (E_loc, g*Rc, blk)
-            ob = _etp_psum(ctx, ob)
+        for b, ob in enumerate(mlp_col_blocks(rows, w, activation,
+                                              n_col, blk)):
+            ob = _etp_psum(ctx, ob)                     # (E_loc, g*Rc, blk)
             for j in range(g):
                 s = step * g + j
                 obj = lax.slice_in_dim(ob, j * Rc, (j + 1) * Rc, axis=1)
@@ -227,14 +266,24 @@ def transport_comet(ctx: AxisCtx, send, w, activation: str,
                 else:
                     ob_mine = obj
                 if s == 0:
-                    blocks[j].append(ob_mine)
+                    col_blocks[b].append(ob_mine)
                 else:
-                    blocks[j].append(lax.ppermute(ob_mine, ax, _perm(ctx, s, 0)))
-        for j in range(g):
-            outs.append(jnp.concatenate(blocks[j], axis=-1))        # (E_loc,C,d)
+                    col_blocks[b].append(
+                        lax.ppermute(ob_mine, ax, _perm(ctx, s, 0)))
 
-    recv_out = jnp.stack(outs)                                      # (ep,E_loc,C,d)
-    return recv_out, g_r
+    return [jnp.stack(cb) for cb in col_blocks], g_r    # n_col × (ep,E_loc,C,blk)
+
+
+def transport_comet(ctx: AxisCtx, send, w, activation: str,
+                    n_col_blocks: int = 1, ring_group: int = 1):
+    """Full-width comet transport: returns (recv_out (ep, E_loc, C, d), rot).
+    Concatenates the streamed column blocks — callers wanting the per-block
+    overlap (plan knob ``fused_combine``) use ``transport_comet_blocks``."""
+    blocks, rot = transport_comet_blocks(ctx, send, w, activation,
+                                         n_col_blocks=n_col_blocks,
+                                         ring_group=ring_group)
+    out = blocks[0] if len(blocks) == 1 else jnp.concatenate(blocks, axis=-1)
+    return out, rot
 
 
 def _dyn_chunk(send, g):
@@ -261,8 +310,7 @@ def transport_bcast(ctx: AxisCtx, buf_full, w, activation: str):
     r = lax.axis_index(ax)
     g_r = r // ctx.etp
     mine = lax.dynamic_slice_in_dim(buf_full, g_r * E_loc, E_loc, axis=0)
-    h = expert_gemm1(mine, w, activation)
-    out = expert_gemm2(h, w)                                        # partial
+    out = _mlp_out(mine, w, activation)                             # partial
     full = jnp.zeros((E, C, d), out.dtype)
     full = lax.dynamic_update_slice_in_dim(full, out, g_r * E_loc, axis=0)
     return lax.psum(full, ax)

@@ -1,0 +1,200 @@
+"""Fused expert-MLP Pallas-TPU kernel: GEMM1 → activation → GEMM2 in ONE
+``pallas_call`` — the per-tile hidden activations live only in VMEM.
+
+The unfused pipeline (``transport.expert_gemm1`` + ``expert_gemm2``)
+materializes the hidden tensor ``h`` of shape (E_loc, R, f_loc) in HBM
+between the two GroupGEMMs, and every N-decomposed GEMM2 column-block call
+re-reads all of it. This kernel eliminates that round trip entirely: for
+each (expert, row-tile, column-tile) output tile it streams f-chunks of the
+expert weights through VMEM, computes the corresponding hidden chunk
+``act(x @ w_gate[:, fc], x @ w_up[:, fc])`` on the fly, and accumulates
+``h_chunk @ w_down[fc, :]`` into an fp32 VMEM accumulator. ``h`` never has
+an HBM address.
+
+Traversal orders mirror ``grouped_gemm.py`` (paper Fig. 6):
+
+* ``order="expert_major"`` — grid (E, Mt, Nt, Ft): expert 0's output
+  finishes first.
+* ``order="n_major"``     — grid (Nt, E, Mt, Ft): column-block 0 of EVERY
+  expert completes first, so the layer-1 consumer (combine + return
+  traffic) can start after a 1/Nt fraction of the output.
+
+Column-sliced calls (``transport_comet``'s N-decomposed early return) pass
+a pre-sliced ``w_down`` — each per-block call recomputes its GEMM1 chunks
+instead of re-reading an HBM-resident ``h``; the adaptive cost model
+(``core/adaptive.py``) weighs exactly this recompute-vs-traffic trade.
+
+VMEM budget per grid step: x tile (bm, d) + w_gate/w_up chunks (d, bf) +
+w_down chunk (bf, bn) + fp32 accumulator (bm, bn). The d (d_model)
+contraction is NOT chunked — callers with d ≳ 8k should shrink bf/bn.
+
+Gradients: ``pallas_call`` has no automatic VJP, so ``fused_mlp_padded``
+carries a ``jax.custom_vjp`` whose backward pass differentiates the pure-jnp
+oracle (``kernels/ref.fused_mlp_ref``) — rematerialized, numerically the
+same contraction.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.models.common import activate
+
+
+def _fused_kernel(*refs, nf: int, activation: str, glu: bool, n_pos: int):
+    """One (bm, bn) output tile of one expert; F-chunk loop via the grid
+    (innermost dim). ``n_pos`` is the grid position of the N index (2 for
+    expert_major, 0 for n_major) — unused in the body but documents that the
+    F axis (position 3) is the only accumulation axis."""
+    del n_pos
+    if glu:
+        x_ref, wg_ref, wu_ref, wd_ref, out_ref, acc_ref = refs
+    else:
+        x_ref, wu_ref, wd_ref, out_ref, acc_ref = refs
+        wg_ref = None
+    fi = pl.program_id(3)
+
+    @pl.when(fi == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[0]                                            # (bm, d)
+    up = jnp.dot(x, wu_ref[0], preferred_element_type=jnp.float32)
+    if glu:
+        gate = jnp.dot(x, wg_ref[0], preferred_element_type=jnp.float32)
+        h = activate(activation, gate, up)                  # (bm, bf) fp32
+    else:
+        h = activate(activation, None, up)
+    # match the unfused pipeline, which materializes h in the input dtype
+    h = h.astype(x_ref.dtype)
+    acc_ref[...] += jnp.dot(h, wd_ref[0],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(fi == nf - 1)
+    def _flush():
+        out_ref[0] = acc_ref[...].astype(out_ref.dtype)
+
+
+def fused_mlp(rows, w_gate, w_up, w_down, *, activation: str,
+              bm: int = 128, bf: int = 512, bn: int = 0,
+              order: str = "expert_major", out_dtype=None,
+              interpret: bool = False) -> jnp.ndarray:
+    """rows: (E, R, d); w_gate/w_up: (E, d, f) (w_gate None for non-GLU);
+    w_down: (E, f, N) -> (E, R, N). Block sizes must divide the problem
+    (callers pad); ``bn == 0`` means one full-width N tile."""
+    E, R, d = rows.shape
+    f = w_up.shape[-1]
+    N = w_down.shape[-1]
+    glu = w_gate is not None
+    bm, bf = min(bm, R), min(bf, f)
+    bn = N if bn <= 0 else min(bn, N)
+    assert R % bm == 0 and f % bf == 0 and N % bn == 0, \
+        f"blocks ({bm},{bf},{bn}) must divide problem (R={R},f={f},N={N})"
+    mt, nt, ft = R // bm, N // bn, f // bf
+    out_dtype = out_dtype or rows.dtype
+
+    if order == "expert_major":
+        grid = (E, mt, nt, ft)
+        ix = lambda e, m, n, fi: (e, m, 0)
+        iw1 = lambda e, m, n, fi: (e, 0, fi)
+        iwd = lambda e, m, n, fi: (e, fi, n)
+        io = lambda e, m, n, fi: (e, m, n)
+        n_pos = 2
+    elif order == "n_major":
+        grid = (nt, E, mt, ft)
+        ix = lambda n, e, m, fi: (e, m, 0)
+        iw1 = lambda n, e, m, fi: (e, 0, fi)
+        iwd = lambda n, e, m, fi: (e, fi, n)
+        io = lambda n, e, m, fi: (e, m, n)
+        n_pos = 0
+    else:
+        raise ValueError(f"unknown order {order!r}")
+
+    in_specs = [pl.BlockSpec((1, bm, d), ix)]
+    args = [rows]
+    if glu:
+        in_specs.append(pl.BlockSpec((1, d, bf), iw1))
+        args.append(w_gate)
+    in_specs.append(pl.BlockSpec((1, d, bf), iw1))
+    args.append(w_up)
+    in_specs.append(pl.BlockSpec((1, bf, bn), iwd))
+    args.append(w_down)
+
+    kernel = functools.partial(_fused_kernel, nf=ft, activation=activation,
+                               glu=glu, n_pos=n_pos)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, bm, bn), io),
+        out_shape=jax.ShapeDtypeStruct((E, R, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(*args)
+
+
+def _fused_mlp_run(rows, w_gate, w_up, w_down, *, activation, bm, bf, bn,
+                   order, interpret):
+    """Pads R/f/N up to block multiples, runs the kernel, slices back.
+    Zero-padding is exact: padded x rows give zero outputs (sliced off), and
+    padded f columns contribute ``h_pad @ 0`` because w_down's padded rows
+    are zero."""
+    E, R, d = rows.shape
+    f = w_up.shape[-1]
+    N = w_down.shape[-1]
+    pad = lambda x, b: (b - x % b) % b
+    bm_, bf_ = min(bm, max(R, 1)), min(bf, max(f, 1))
+    bn_ = N if bn <= 0 else min(bn, N)
+    pr, pf, pn = pad(R, bm_), pad(f, bf_), pad(N, bn_)
+    if pr:
+        rows = jnp.pad(rows, ((0, 0), (0, pr), (0, 0)))
+    if pf:
+        w_up = jnp.pad(w_up, ((0, 0), (0, 0), (0, pf)))
+        if w_gate is not None:
+            w_gate = jnp.pad(w_gate, ((0, 0), (0, 0), (0, pf)))
+    if pf or pn:
+        w_down = jnp.pad(w_down, ((0, 0), (0, pf), (0, pn)))
+    out = fused_mlp(rows, w_gate, w_up, w_down, activation=activation,
+                    bm=bm_, bf=bf_, bn=bn_, order=order, interpret=interpret)
+    return out[:, :R, :N]
+
+
+@functools.lru_cache(maxsize=None)
+def _diff_fused(activation: str, bm: int, bf: int, bn: int, order: str,
+                interpret: bool):
+    """custom_vjp closure per static config: forward = Pallas kernel,
+    backward = VJP of the jnp oracle (rematerializes the hidden chunk)."""
+    from repro.kernels import ref as _ref
+
+    def ref_fn(rows, w_gate, w_up, w_down):
+        return _ref.fused_mlp_ref(rows, w_gate, w_up, w_down, activation)
+
+    @jax.custom_vjp
+    def f(rows, w_gate, w_up, w_down):
+        return _fused_mlp_run(rows, w_gate, w_up, w_down,
+                              activation=activation, bm=bm, bf=bf, bn=bn,
+                              order=order, interpret=interpret)
+
+    def fwd(rows, w_gate, w_up, w_down):
+        return f(rows, w_gate, w_up, w_down), (rows, w_gate, w_up, w_down)
+
+    def bwd(res, ct):
+        _, vjp = jax.vjp(ref_fn, *res)
+        return vjp(ct)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def fused_mlp_padded(rows, w_gate, w_up, w_down, *, activation: str,
+                     bm: int = 128, bf: int = 512, bn: int = 0,
+                     order: str = "expert_major",
+                     interpret: bool = False) -> jnp.ndarray:
+    """Differentiable padded entry point (see module docstring)."""
+    fn = _diff_fused(activation, bm, bf, bn, order, bool(interpret))
+    return fn(rows, w_gate, w_up, w_down)

@@ -53,6 +53,38 @@ def topk_combine(rows, weights, bt: int = 256,
     return _tc.topk_combine(rows, weights, bt=bt, interpret=_interp(interpret))
 
 
+@functools.partial(jax.jit, static_argnames=("bt", "interpret"))
+def topk_combine_diff(rows, weights, bt: int = 256,
+                      interpret: Optional[bool] = None):
+    """Differentiable combine kernel (custom_vjp) — what routing.combine
+    calls inside the MoE layer."""
+    return _tc.topk_combine_diff(rows, weights, bt=bt,
+                                 interpret=_interp(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "col_slice",
+                                             "order", "bm", "bf", "bn",
+                                             "interpret"))
+def fused_mlp(rows, w, activation: str,
+              col_slice: Optional[tuple] = None, order: str = "expert_major",
+              bm: int = 128, bf: int = 512, bn: int = 0,
+              interpret: Optional[bool] = None):
+    """Fused GEMM1→activation→GEMM2 expert MLP (kernels/fused_mlp.py) — the
+    ``"pallas_fused"`` GroupGEMM backend. ``w`` is the expert-weight dict
+    (w_gate optional, w_up, w_down); ``col_slice=(start, width)`` computes
+    only that output-column block (transport_comet's layer-1 decomposition),
+    recomputing the hidden in VMEM instead of re-reading it from HBM."""
+    from jax import lax
+
+    from repro.kernels import fused_mlp as _fm
+    wd = w["w_down"]
+    if col_slice is not None:
+        wd = lax.dynamic_slice_in_dim(wd, col_slice[0], col_slice[1], axis=2)
+    return _fm.fused_mlp_padded(rows, w.get("w_gate"), w["w_up"], wd,
+                                activation=activation, bm=bm, bf=bf, bn=bn,
+                                order=order, interpret=_interp(interpret))
+
+
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def ssd_forward(x, dt, A, Bm, Cm, D, chunk: int = 64,
                 interpret: Optional[bool] = None):

@@ -37,6 +37,20 @@ def rmsnorm_ref(x, scale, eps=1e-5):
             ).astype(x.dtype)
 
 
+def fused_mlp_ref(rows, w_gate, w_up, w_down, activation):
+    """Unfused oracle for the fused expert-MLP kernel: GEMM1 -> activation ->
+    GEMM2 with the hidden materialized, numerics matching the xla backend
+    (einsum in the input dtype). rows: (E, R, d) -> (E, R, N)."""
+    from repro.models.common import activate
+    up = jnp.einsum("erd,edf->erf", rows, w_up)
+    if w_gate is not None:
+        gate = jnp.einsum("erd,edf->erf", rows, w_gate)
+        h = activate(activation, gate, up)
+    else:
+        h = activate(activation, None, up)
+    return jnp.einsum("erf,efn->ern", h.astype(rows.dtype), w_down)
+
+
 def topk_combine_ref(rows, weights):
     out = jnp.einsum("tkd,tk->td", rows.astype(jnp.float32),
                      weights.astype(jnp.float32))

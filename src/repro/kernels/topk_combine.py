@@ -22,6 +22,38 @@ def _combine_kernel(rows_ref, w_ref, o_ref):
     o_ref[...] = jnp.einsum("tkd,tk->td", rows, w).astype(o_ref.dtype)
 
 
+@functools.lru_cache(maxsize=None)
+def _diff_combine(bt: int, interpret: bool):
+    """custom_vjp closure (``pallas_call`` has no automatic VJP): forward =
+    kernel, backward = the analytic fp32 gradients of the weighted sum —
+    routing.combine differentiates through this inside the MoE layer."""
+
+    @jax.custom_vjp
+    def f(rows, weights):
+        return topk_combine(rows, weights, bt=bt, interpret=interpret)
+
+    def fwd(rows, weights):
+        return f(rows, weights), (rows, weights)
+
+    def bwd(res, ct):
+        rows, weights = res
+        g = ct.astype(jnp.float32)[:, None, :]                # (T, 1, d)
+        d_rows = (weights.astype(jnp.float32)[..., None] * g
+                  ).astype(rows.dtype)                        # (T, k, d)
+        d_w = jnp.sum(rows.astype(jnp.float32) * g, axis=-1
+                      ).astype(weights.dtype)                 # (T, k)
+        return d_rows, d_w
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def topk_combine_diff(rows, weights, *, bt: int = 256,
+                      interpret: bool = False):
+    """Differentiable entry point for the combine kernel."""
+    return _diff_combine(bt, bool(interpret))(rows, weights)
+
+
 def topk_combine(rows: jnp.ndarray, weights: jnp.ndarray, *,
                  bt: int = 256, interpret: bool = False) -> jnp.ndarray:
     """rows: (T, k, d) expert outputs per (token, choice); weights: (T, k).

@@ -1,0 +1,447 @@
+"""Fused shared-tensor kernel pipeline (PR 2): the VMEM-resident fused
+expert MLP vs the unfused ``"xla"`` backend, sort-based dispatch vs the seed
+one-hot reference (bit-exact), the kernel-backed combine and its VJP, the
+streaming per-block comet combine, and the v2 plan-cache schema."""
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core import adaptive as A
+from repro.core import routing as R
+from repro.core import transport as T
+from repro.core.moe_layer import _with_gemm_impl, moe_ffn
+from repro.kernels import ops, ref
+from repro.parallel.mesh import AxisCtx
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=1e-4, atol=1e-4)
+
+
+def _expert_w(E, d, f, activation, dtype=jnp.float32, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    w = {"w_up": (jax.random.normal(ks[1], (E, d, f), jnp.float32)
+                  * 0.1).astype(dtype),
+         "w_down": (jax.random.normal(ks[2], (E, f, d), jnp.float32)
+                    * 0.1).astype(dtype)}
+    if activation in ("swiglu", "geglu"):
+        w["w_gate"] = (jax.random.normal(ks[0], (E, d, f), jnp.float32)
+                       * 0.1).astype(dtype)
+    return w
+
+
+# ---------------------------------------------------------------------------
+# fused_mlp kernel vs oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("E,R,d,f", [
+    (2, 128, 64, 128),         # exact tiles
+    (3, 37, 19, 29),           # odd/unpadded on every dim
+    (1, 130, 64, 200),         # padding on R and f
+    (4, 16, 8, 520),           # f crosses the default bf chunk
+])
+@pytest.mark.parametrize("activation", ["swiglu", "gelu"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_mlp_matches_ref(E, R, d, f, activation, dtype):
+    rows = jax.random.normal(KEY, (E, R, d), jnp.float32).astype(dtype)
+    w = _expert_w(E, d, f, activation, dtype)
+    got = ops.fused_mlp(rows, w, activation, interpret=True)
+    want = ref.fused_mlp_ref(rows, w.get("w_gate"), w["w_up"], w["w_down"],
+                             activation)
+    assert got.shape == (E, R, d)
+    assert got.dtype == dtype
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("activation", ["geglu", "relu2"])
+def test_fused_mlp_other_activations(activation):
+    rows = jax.random.normal(KEY, (2, 24, 16), jnp.float32)
+    w = _expert_w(2, 16, 40, activation)
+    got = ops.fused_mlp(rows, w, activation, interpret=True)
+    want = ref.fused_mlp_ref(rows, w.get("w_gate"), w["w_up"], w["w_down"],
+                             activation)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_fused_mlp_orders_and_col_slice():
+    """n_major traversal changes tile completion order, not values; a
+    col-sliced call equals the corresponding slice of the full output —
+    transport_comet's N-decomposed early return."""
+    rows = jax.random.normal(KEY, (3, 40, 32), jnp.float32)
+    w = _expert_w(3, 32, 48, "swiglu")
+    full_em = ops.fused_mlp(rows, w, "swiglu", order="expert_major",
+                            interpret=True)
+    full_nm = ops.fused_mlp(rows, w, "swiglu", order="n_major", bn=16,
+                            interpret=True)
+    np.testing.assert_allclose(np.asarray(full_em), np.asarray(full_nm),
+                               rtol=1e-5, atol=1e-6)
+    for start, width in ((0, 8), (8, 8), (5, 11)):
+        blk = ops.fused_mlp(rows, w, "swiglu", col_slice=(start, width),
+                            order="n_major", interpret=True)
+        np.testing.assert_allclose(np.asarray(blk),
+                                   np.asarray(full_em)[..., start:start + width],
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_fused_mlp_grads_match_ref():
+    """The custom VJP (backward = oracle VJP) must agree with jnp autodiff."""
+    rows = jax.random.normal(KEY, (2, 8, 16), jnp.float32)
+    w = _expert_w(2, 16, 24, "swiglu")
+
+    def loss_kernel(w_):
+        return jnp.sum(ops.fused_mlp(rows, w_, "swiglu", interpret=True) ** 2)
+
+    def loss_ref(w_):
+        return jnp.sum(ref.fused_mlp_ref(rows, w_["w_gate"], w_["w_up"],
+                                         w_["w_down"], "swiglu") ** 2)
+
+    g = jax.grad(loss_kernel)(w)
+    g_ref = jax.grad(loss_ref)(w)
+    for k in w:
+        np.testing.assert_allclose(np.asarray(g[k]), np.asarray(g_ref[k]),
+                                   rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# sort-based dispatch vs the seed one-hot implementation (bit-exact)
+# ---------------------------------------------------------------------------
+
+def _build_dispatch_onehot(x, idx, E, C):
+    """The seed implementation, verbatim: O(T·k·E) one-hot cumsum ranking
+    plus a (T*k, d) jnp.repeat materialization."""
+    T, k = idx.shape
+    d = x.shape[-1]
+    flat_e = idx.reshape(-1)
+    oh = (flat_e[:, None] == jnp.arange(E)[None, :]).astype(jnp.int32)
+    pos = jnp.take_along_axis(jnp.cumsum(oh, axis=0) - 1,
+                              flat_e[:, None], axis=1)[:, 0]
+    keep = pos < C
+    slot = jnp.where(keep, flat_e * C + jnp.minimum(pos, C - 1), E * C)
+    x_rep = jnp.repeat(x, k, axis=0)
+    buf = jnp.zeros((E * C, d), x.dtype).at[slot].set(x_rep, mode="drop")
+    return buf.reshape(E, C, d), flat_e, pos, keep
+
+
+@pytest.mark.parametrize("T,E,k,factor", [
+    (64, 8, 2, 8.0),           # no-drop
+    (37, 6, 3, 0.5),           # capacity drops, odd T
+    (128, 16, 1, 1.0),
+    (16, 4, 4, 0.25),          # heavy drops
+])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_sort_dispatch_bit_exact_vs_onehot(T, E, k, factor, seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    d = 16
+    x = jax.random.normal(k1, (T, d), jnp.float32)
+    scores = jax.random.normal(k2, (T, E), jnp.float32)
+    _, idx = jax.lax.top_k(scores, k)
+    C = R.capacity(T, k, E, factor)
+    buf, info = R.build_dispatch(x, idx, E, C)
+    buf_ref, flat_e, pos, keep = _build_dispatch_onehot(x, idx, E, C)
+    np.testing.assert_array_equal(np.asarray(buf), np.asarray(buf_ref))
+    np.testing.assert_array_equal(np.asarray(info.flat_e), np.asarray(flat_e))
+    np.testing.assert_array_equal(np.asarray(info.pos), np.asarray(pos))
+    np.testing.assert_array_equal(np.asarray(info.keep), np.asarray(keep))
+
+
+# ---------------------------------------------------------------------------
+# kernel-backed combine: values + gradients
+# ---------------------------------------------------------------------------
+
+def test_combine_kernel_matches_jnp_and_grads():
+    T, E, k, d, C = 37, 6, 2, 16, 8
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, (T, d), jnp.float32)
+    _, idx = jax.lax.top_k(jax.random.normal(key, (T, E)), k)
+    _, info = R.build_dispatch(x, idx, E, C)
+    w = jax.nn.softmax(jax.random.normal(key, (T, k)), axis=-1)
+    recv = jax.random.normal(key, (E * C, d), jnp.float32)
+
+    def jnp_ref(rv, ww):
+        rows = rv[(info.flat_e) * C + jnp.minimum(info.pos, C - 1)]
+        rows = jnp.where(info.keep[:, None], rows, 0).reshape(T, k, d)
+        return jnp.einsum("tkd,tk->td", rows, ww)
+
+    y = R.combine(recv, info, w, E_loc=E, C=C, rot=None, ep=1)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(jnp_ref(recv, w)),
+                               rtol=1e-5, atol=1e-6)
+    g = jax.grad(lambda rv, ww: jnp.sum(
+        R.combine(rv, info, ww, E, C, None, 1) ** 2), argnums=(0, 1))(recv, w)
+    g_ref = jax.grad(lambda rv, ww: jnp.sum(jnp_ref(rv, ww) ** 2),
+                     argnums=(0, 1))(recv, w)
+    for a, b in zip(g, g_ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# layer-level: pallas_fused backend == xla backend, all transports
+# ---------------------------------------------------------------------------
+
+def _problem(activation="swiglu", E=8, d=64, f=33, B=2, S=16, k=2,
+             capacity_factor=None, dtype=jnp.float32, seed=0):
+    cfg = get_config("granite-moe-3b-a800m-smoke")
+    cfg = dataclasses.replace(cfg, d_model=d, activation=activation)
+    mcfg = dataclasses.replace(
+        cfg.moe, num_experts=E, d_expert=f, top_k=k,
+        capacity_factor=capacity_factor if capacity_factor else float(E))
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    full = _expert_w(E, d, f, activation, dtype, seed)
+    params = {"router": jax.random.normal(ks[3], (d, E), jnp.float32) * 0.1,
+              "experts": {kk: v[None] for kk, v in full.items()}}
+    x = (jax.random.normal(ks[4], (B, S, d), jnp.float32)).astype(dtype)
+    return cfg, mcfg, params, x
+
+
+@pytest.mark.parametrize("impl", ["naive", "comet", "coarse", "bcast"])
+@pytest.mark.parametrize("activation", ["swiglu", "gelu"])
+def test_fused_backend_matches_xla(impl, activation):
+    cfg, mcfg, params, x = _problem(activation)
+    m = dataclasses.replace(mcfg, impl=impl)
+    y_ref, aux_ref = moe_ffn(cfg, m, params, x, AxisCtx())
+    y, aux = _with_gemm_impl(
+        "pallas_fused", lambda: moe_ffn(cfg, m, params, x, AxisCtx()))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(float(aux), float(aux_ref), rtol=1e-6)
+
+
+def test_fused_backend_matches_xla_capacity_drop():
+    cfg, mcfg, params, x = _problem(capacity_factor=0.5)
+    m = dataclasses.replace(mcfg, impl="comet")
+    y_ref, _ = moe_ffn(cfg, m, params, x, AxisCtx())
+    y, _ = _with_gemm_impl(
+        "pallas_fused", lambda: moe_ffn(cfg, m, params, x, AxisCtx()))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_fused_backend_matches_xla_bf16():
+    cfg, mcfg, params, x = _problem(dtype=jnp.bfloat16)
+    m = dataclasses.replace(mcfg, impl="naive")
+    y_ref, _ = moe_ffn(cfg, m, params, x, AxisCtx())
+    y, _ = _with_gemm_impl(
+        "pallas_fused", lambda: moe_ffn(cfg, m, params, x, AxisCtx()))
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+# ---------------------------------------------------------------------------
+# streaming per-block combine (fused_combine plan knob)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_col", [1, 2, 4])
+@pytest.mark.parametrize("gemm", ["xla", "pallas_fused"])
+def test_fused_combine_matches_monolithic(n_col, gemm):
+    cfg, mcfg, params, x = _problem()
+    m0 = dataclasses.replace(mcfg, impl="comet", n_col_blocks=n_col)
+    m1 = dataclasses.replace(m0, fused_combine=True)
+    y0, _ = _with_gemm_impl(
+        gemm, lambda: moe_ffn(cfg, m0, params, x, AxisCtx(), n_col=n_col))
+    y1, _ = _with_gemm_impl(
+        gemm, lambda: moe_ffn(cfg, m1, params, x, AxisCtx(), n_col=n_col))
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_transport_comet_blocks_concat_equals_full():
+    """The streaming-block interface concatenates to exactly the full-width
+    transport output (single-device fallback path)."""
+    cfg, mcfg, params, x = _problem()
+    d = cfg.d_model
+    E = mcfg.num_experts
+    Tn = x.shape[0] * x.shape[1]
+    xt = x.reshape(Tn, d)
+    idx, wts, _ = R.router(xt, params["router"], mcfg)
+    C = R.capacity(Tn, mcfg.top_k, E, mcfg.capacity_factor)
+    buf, info = R.build_dispatch(xt, idx, E, C)
+    w_local = {k: v[0] for k, v in params["experts"].items()}
+    send = buf.reshape(1, E, C, d)
+    blocks, rot = T.transport_comet_blocks(AxisCtx(), send, w_local,
+                                           cfg.activation, n_col_blocks=4)
+    full, rot2 = T.transport_comet(AxisCtx(), send, w_local, cfg.activation,
+                                   n_col_blocks=4)
+    assert rot is None and rot2 is None
+    assert len(blocks) == 4
+    np.testing.assert_array_equal(
+        np.asarray(jnp.concatenate(blocks, axis=-1)), np.asarray(full))
+
+
+# ---------------------------------------------------------------------------
+# plan schema v2: search space, cost model, cache round-trip + v1 compat
+# ---------------------------------------------------------------------------
+
+def test_candidate_space_includes_fused_knobs():
+    s = A.MoEShape(M=4096, N=4096, K=14336, E=8, topk=2, ep=8, etp=1)
+    cands = list(A.candidate_plans(s))
+    assert {p.gemm_impl for p in cands} == {"xla", "pallas_fused"}
+    assert {p.fused_combine for p in cands if p.impl == "comet"} \
+        == {False, True}
+    assert all(not p.fused_combine for p in cands if p.impl != "comet")
+
+
+def test_modeled_fused_terms_rank_sanely():
+    """Fused hidden traffic beats unfused at n_col=1 (pure saving); the
+    streaming combine is never modeled slower than staging."""
+    s = A.MoEShape(M=16384, N=2048, K=1408, E=64, topk=4, ep=8, etp=1)
+    for hw in (A.TPU_V5E, A.H100_NVL):
+        base = A.Plan("comet", 1, 1, "xla")
+        fused = A.Plan("comet", 1, 1, "pallas_fused")
+        assert A.modeled_plan_time(hw, s, fused) \
+            < A.modeled_plan_time(hw, s, base)
+        nc = A.Plan("comet", 1, 4, "xla")
+        nc_fc = A.Plan("comet", 1, 4, "xla", fused_combine=True)
+        assert A.modeled_plan_time(hw, s, nc_fc) \
+            <= A.modeled_plan_time(hw, s, nc)
+
+
+def test_hot_path_hbm_bytes_fused_strictly_lower():
+    """Acceptance: modeled hot-path HBM bytes for the fused schedule
+    (n_col=1 — early completion from the kernel's n_major traversal) are
+    strictly below the unfused schedule at the paper's layer shapes, at
+    every unfused N-decomposition."""
+    from benchmarks.figures import PAPER_MODELS
+    for m in PAPER_MODELS.values():
+        s = A.MoEShape(M=8192, N=m["N"], K=m["K"], E=m["E"], topk=m["topk"],
+                       ep=8, etp=1)
+        fused = A.hot_path_hbm_bytes(
+            s, A.Plan("comet", 1, 1, "pallas_fused", fused_combine=True))
+        for n_col in (1, 2, 4):
+            unfused = A.hot_path_hbm_bytes(
+                s, A.Plan("comet", 1, n_col, "xla"))
+            assert fused < unfused, (m, n_col)
+
+
+def test_hot_path_hbm_bytes_fused_counts_weight_rereads():
+    """Honesty check: at n_col > 1 the fused backend's per-column-block
+    GEMM1 recompute re-streams the layer-0 weights — the model must charge
+    for it (fused bytes grow with n_col)."""
+    s = A.MoEShape(M=8192, N=4096, K=14336, E=8, topk=2, ep=8, etp=1)
+    b1 = A.hot_path_hbm_bytes(s, A.Plan("comet", 1, 1, "pallas_fused"))
+    b4 = A.hot_path_hbm_bytes(s, A.Plan("comet", 1, 4, "pallas_fused"))
+    assert b4 > b1
+
+
+def test_plan_cache_v2_roundtrip_with_fused_fields(tmp_path):
+    """tune_plan over the grown search space persists pallas_fused +
+    fused_combine and reloads them identically (acceptance criterion)."""
+    path = str(tmp_path / "plans.json")
+    s = A.MoEShape(M=16384, N=2048, K=1408, E=64, topk=4, ep=8, etp=1)
+    cache = A.PlanCache(path)
+    plan = A.tune_plan(s, A.TPU_V5E, cache)
+    assert plan.gemm_impl == "pallas_fused"     # hidden-traffic term wins
+    with open(path) as f:
+        raw = json.load(f)
+    assert raw["version"] == A.PLAN_CACHE_VERSION == 2
+    entry = raw["plans"][A.PlanCache.key(s, A.TPU_V5E)]
+    assert "fused_combine" in entry and "gemm_impl" in entry
+    re = A.PlanCache(path)
+    assert re.get(s, A.TPU_V5E) == plan
+
+
+def test_plan_cache_v1_backward_compat(tmp_path):
+    """A PR-1 (v1) cache file — no fused_combine field — loads cleanly with
+    the new field defaulted."""
+    path = str(tmp_path / "v1.json")
+    s = A.MoEShape(M=1024, N=2048, K=1408, E=64, topk=4, ep=8, etp=1)
+    key = A.PlanCache.key(s, A.TPU_V5E)
+    with open(path, "w") as f:
+        json.dump({"version": 1,
+                   "plans": {key: {"impl": "comet", "ring_group": 2,
+                                   "n_col_blocks": 4, "gemm_impl": "xla",
+                                   "measured_s": 1e-3,
+                                   "source": "measured"}}}, f)
+    cache = A.PlanCache(path)
+    plan = cache.get(s, A.TPU_V5E)
+    assert plan is not None and plan.fused_combine is False
+    assert plan.ring_group == 2 and plan.n_col_blocks == 4
+    cache.save()                                # rewrites as v2
+    with open(path) as f:
+        assert json.load(f)["version"] == 2
+
+
+def test_fused_plan_applies_in_moe_layer(tmp_path):
+    """A cached pallas_fused + fused_combine plan resolves inside moe_ffn
+    and produces the xla-backend result."""
+    cfg, mcfg, params, x = _problem(d=128, f=64)
+    path = str(tmp_path / "plans.json")
+    toks = x.shape[0] * x.shape[1]
+    s = A.plan_shape(mcfg, cfg.d_model, toks, 1, 1)
+    cache = A.PlanCache(path)
+    cache.put(s, A.TPU_V5E,
+              A.Plan("comet", 1, 1, "pallas_fused", True,
+                     measured_s=1e-6, source="measured"))
+    m2 = dataclasses.replace(mcfg, impl="naive", plan_cache=path)
+    y, _ = moe_ffn(cfg, m2, params, x, AxisCtx())
+    y_ref, _ = moe_ffn(cfg, dataclasses.replace(mcfg, impl="comet"),
+                       params, x, AxisCtx())
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# coarse capacity reuse (multi-device; subprocess with 2 forced host devices)
+# ---------------------------------------------------------------------------
+
+def test_coarse_capacity_reuse_on_mesh():
+    """coarse_chunks=1 takes the reuse-outer-dispatch arm (with its
+    capacity-equivalence assertion) and must match naive exactly; chunks=2
+    still matches within capacity semantics."""
+    import subprocess
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import dataclasses
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.configs.base import get_config
+from repro.core.moe_layer import moe_ffn, pack_expert_weights
+from repro.parallel.compat import make_mesh, use_mesh
+from repro.parallel.mesh import AxisCtx
+
+cfg = get_config("granite-moe-3b-a800m-smoke")
+cfg = dataclasses.replace(cfg, d_model=32)
+E, d, f = cfg.moe.num_experts, 32, 16
+mcfg = dataclasses.replace(cfg.moe, d_expert=f, capacity_factor=float(E))
+ks = jax.random.split(jax.random.PRNGKey(0), 5)
+full = {"w_gate": jax.random.normal(ks[0], (E, d, f)) * 0.05,
+        "w_up": jax.random.normal(ks[1], (E, d, f)) * 0.05,
+        "w_down": jax.random.normal(ks[2], (E, f, d)) * 0.05}
+params = {"router": jax.random.normal(ks[3], (d, E)) * 0.1,
+          "experts": pack_expert_weights(full, 2, 1)}
+x = jax.random.normal(ks[4], (2, 16, d))
+mesh = make_mesh((1, 2), ("data", "model"))
+ctx = AxisCtx(mesh=mesh, dp_axes=("data",), model_axis="model", ep=2, etp=1)
+outs = {}
+with use_mesh(mesh):
+    for impl, chunks in (("naive", 2), ("coarse", 1), ("coarse", 2)):
+        m = dataclasses.replace(mcfg, impl=impl, coarse_chunks=chunks)
+        y, _ = moe_ffn(cfg, m, params, x, ctx)
+        outs[(impl, chunks)] = np.asarray(y)
+np.testing.assert_allclose(outs[("coarse", 1)], outs[("naive", 2)],
+                           rtol=1e-5, atol=1e-6)
+np.testing.assert_allclose(outs[("coarse", 2)], outs[("naive", 2)],
+                           rtol=1e-5, atol=1e-6)
+print("OK coarse")
+"""
+    import sys
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=600, env=env)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-3000:]
+    assert "OK coarse" in r.stdout

@@ -30,7 +30,8 @@ for _p in (os.path.join(_ROOT, "src"), _ROOT):
 def _print_plan(tag, s, plan):
     print(f"{tag},M{s.M},N{s.N},K{s.K},E{s.E},k{s.topk},ep{s.ep},etp{s.etp},"
           f"{plan.impl},rg{plan.ring_group},nc{plan.n_col_blocks},"
-          f"{plan.gemm_impl},{plan.measured_s * 1e3:.4f}ms,{plan.source}")
+          f"{plan.gemm_impl},fc{int(plan.fused_combine)},"
+          f"{plan.measured_s * 1e3:.4f}ms,{plan.source}")
 
 
 # the (arch, B, S) of the single-device smoke run `benchmarks/run.py --plan`
@@ -146,10 +147,12 @@ def main(argv=None) -> int:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=32)
     ap.add_argument("--iters", type=int, default=3)
-    ap.add_argument("--gemm", nargs="*", default=["xla"],
-                    choices=["xla", "pallas"],
-                    help="GroupGEMM backends to search (--measured; the "
-                         "cost model cannot rank backends)")
+    ap.add_argument("--gemm", nargs="*", default=["xla", "pallas_fused"],
+                    choices=["xla", "pallas", "pallas_fused"],
+                    help="GroupGEMM backends to search (--measured). The "
+                         "model-backed mode always searches xla + "
+                         "pallas_fused (it can rank those via the hidden-"
+                         "HBM-traffic term, but not xla vs pallas)")
     args = ap.parse_args(argv)
 
     if args.measured:
@@ -164,7 +167,8 @@ def main(argv=None) -> int:
     out = args.out or os.path.join("plans", f"{args.hw}.json")
     cache = PlanCache(out)
 
-    print("tag,M,N,K,E,topk,ep,etp,impl,ring_group,n_col,gemm,latency,source")
+    print("tag,M,N,K,E,topk,ep,etp,impl,ring_group,n_col,gemm,fused_combine,"
+          "latency,source")
     if args.measured:
         tune_measured(args, hw, cache)
     else:

@@ -7,15 +7,17 @@ numbers against the bands the paper reports. Exit code reflects validation.
 Run:  PYTHONPATH=src python -m benchmarks.run                 # figures
       PYTHONPATH=src python -m benchmarks.run --tune          # populate plans
       PYTHONPATH=src python -m benchmarks.run --plan plans/tpu_v5e.json
-      PYTHONPATH=src python -m benchmarks.run --json BENCH_pr2.json
+      PYTHONPATH=src python -m benchmarks.run --json BENCH_pr3.json
 The --plan mode resolves each shape's transport schedule from the tuned plan
 cache (missing file/entry → the analytical model), reports the tuned plan's
 modeled latency against the non-overlapped naive baseline, and executes one
 real moe_layer forward with the cache-resolved schedule.
 The --json mode additionally writes machine-readable per-figure results,
-kernel microbenchmarks (dispatch build / combine / fused MLP — real timed
-executions), and the modeled hot-path HBM bytes of the fused vs unfused
-schedule at the paper's layer shapes — the perf-trajectory artifact.
+kernel microbenchmarks (dispatch build / combine / fused MLP and its
+dgrad/wgrad backward kernels — real timed executions), the modeled hot-path
+HBM bytes of the fused vs unfused schedule, and the fwd+bwd step figures:
+the custom-VJP comet backward ring vs the XLA-autodiff transposed baseline
+at the paper's layer shapes — the perf-trajectory artifact.
 """
 from __future__ import annotations
 
@@ -182,7 +184,7 @@ def kernel_microbench(reps: int = 5):
 
     T_, k, E, d, f = 512, 2, 8, 256, 128
     key = jax.random.PRNGKey(0)
-    ks = jax.random.split(key, 6)
+    ks = jax.random.split(key, 7)
     x = jax.random.normal(ks[0], (T_, d), jnp.float32)
     scores = jax.random.normal(ks[1], (T_, E), jnp.float32)
     _, idx = jax.lax.top_k(scores, k)
@@ -211,6 +213,11 @@ def kernel_microbench(reps: int = 5):
     fused = jax.jit(lambda rr: ops.fused_mlp(rr, w, "swiglu", interpret=True))
     unfused = jax.jit(lambda rr: T.expert_gemm2(
         T.expert_gemm1(rr, w, "swiglu"), w))
+    dy = jax.random.normal(ks[6], (E, C, d), jnp.float32)
+    dgrad = jax.jit(lambda rr, dd: ops.fused_mlp_dgrad(
+        rr, w, dd, "swiglu", interpret=True))
+    wgrad = jax.jit(lambda rr, dd: ops.fused_mlp_wgrad(
+        rr, w, dd, "swiglu", interpret=True))
     micro = {
         "dispatch_build": {"best_s": timed(dispatch, x, idx),
                            "shape": f"T{T_} k{k} E{E} d{d} C{C}"},
@@ -220,6 +227,10 @@ def kernel_microbench(reps: int = 5):
                                 "shape": f"E{E} R{C} d{d} f{f}"},
         "unfused_mlp_xla": {"best_s": timed(unfused, rows),
                             "shape": f"E{E} R{C} d{d} f{f}"},
+        "fused_mlp_dgrad_interpret": {"best_s": timed(dgrad, rows, dy),
+                                      "shape": f"E{E} R{C} d{d} f{f}"},
+        "fused_mlp_wgrad_interpret": {"best_s": timed(wgrad, rows, dy),
+                                      "shape": f"E{E} R{C} d{d} f{f}"},
     }
     print("\n# kernel_microbench (CPU; interpret-mode Pallas)")
     for name, r in micro.items():
@@ -257,6 +268,70 @@ def hbm_hot_path_table(Ms=(8192,), ep: int = 8, n_col: int = 4):
             }
             print(f"{name},{M},{unfused / 2**20:.0f},{fused / 2**20:.0f},"
                   f"{1.0 - fused / unfused:.3f}")
+    return table
+
+
+def bwd_overlap_table(Ms=(8192,), ep: int = 8):
+    """The PR 3 acceptance artifact: one MoE layer's modeled BACKWARD under
+    the custom-VJP comet ring (dY chunks on the reverse permutes overlapping
+    per-chunk dgrad/wgrad, hidden rematerialized in VMEM, dW flushed per
+    macro-step) vs the XLA-autodiff transposed baseline (every reverse
+    ppermute serialized after the forward, hidden re-read from HBM, dW
+    accumulator round-tripped per chunk). Backward hot-path HBM bytes and
+    exposed reverse-collective time must be STRICTLY below the baseline at
+    every paper shape; the fwd+bwd step figure rides along."""
+    from benchmarks.figures import PAPER_MODELS
+    from repro.core import adaptive as A
+
+    hw = A.TPU_V5E
+    table = {}
+    print(f"\n# bwd_overlap (custom-VJP comet ring vs autodiff baseline, "
+          f"EP={ep})")
+    print("model,M,bwd_custom_ms,bwd_autodiff_ms,bwd_speedup,"
+          "exposed_custom_ms,exposed_autodiff_ms,hbm_custom_MB,"
+          "hbm_autodiff_MB,step_ms,step_autodiff_ms")
+    for name, m in PAPER_MODELS.items():
+        for M in Ms:
+            s = A.MoEShape(M=M, N=m["N"], K=m["K"], E=m["E"], topk=m["topk"],
+                           ep=ep, etp=1)
+            # the comet ring at its best backward operating point among the
+            # configurations that structurally cut backward HBM traffic:
+            # ring_group > 1 amortizes the dW flushes, pallas_fused keeps
+            # the hidden out of HBM entirely (rg=1 + xla would merely match
+            # the baseline's traffic while overlapping its comm)
+            plan = min((A.legalize_plan(p, s.N, s.ep)
+                        for p in A.candidate_plans(s) if p.impl == "comet"
+                        and (p.ring_group > 1
+                             or p.gemm_impl == "pallas_fused")),
+                       key=lambda p: A.modeled_plan_time_bwd(hw, s, p))
+            t_bwd = A.modeled_plan_time_bwd(hw, s, plan)
+            t_auto = A.autodiff_bwd_time(hw, s)
+            exp_c = A.bwd_exposed_comm_time(hw, s, plan)
+            exp_a = 2.0 * s.ep * A.layer_times(hw, s)["t_hop"]
+            hbm_c = A.hot_path_hbm_bytes_bwd(s, plan)
+            hbm_a = A.autodiff_bwd_hbm_bytes(s)
+            t_fwd = A.modeled_plan_time(hw, s, plan)
+            step = t_fwd + t_bwd
+            step_auto = t_fwd + t_auto
+            table[f"{name}@M{M}"] = {
+                "bwd_custom_s": t_bwd, "bwd_autodiff_s": t_auto,
+                "bwd_speedup": t_auto / t_bwd,
+                "exposed_comm_custom_s": exp_c,
+                "exposed_comm_autodiff_s": exp_a,
+                "hbm_bwd_custom_bytes": hbm_c,
+                "hbm_bwd_autodiff_bytes": hbm_a,
+                "step_custom_s": step, "step_autodiff_s": step_auto,
+            }
+            print(f"{name},{M},{t_bwd * 1e3:.3f},{t_auto * 1e3:.3f},"
+                  f"{t_auto / t_bwd:.2f},{exp_c * 1e3:.3f},"
+                  f"{exp_a * 1e3:.3f},{hbm_c / 2**20:.0f},"
+                  f"{hbm_a / 2**20:.0f},{step * 1e3:.3f},"
+                  f"{step_auto * 1e3:.3f}")
+    ok = all(r["hbm_bwd_custom_bytes"] < r["hbm_bwd_autodiff_bytes"]
+             and r["exposed_comm_custom_s"] < r["exposed_comm_autodiff_s"]
+             for r in table.values())
+    print(f"[{'PASS' if ok else 'FAIL'}] comet backward hot-path HBM bytes "
+          "+ exposed comm strictly below the autodiff baseline")
     return table
 
 
@@ -306,6 +381,7 @@ def main(argv=None) -> int:
             "figures": _jsonable(results),
             "micro": _jsonable(kernel_microbench()),
             "hbm_hot_path": _jsonable(hbm_hot_path_table()),
+            "bwd_overlap": _jsonable(bwd_overlap_table()),
             "validation_failures": fails,
         }
         with open(args.json, "w") as f:

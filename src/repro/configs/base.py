@@ -37,6 +37,11 @@ class MoEConfig:
                                        # it arrives (streaming layer-1
                                        # consumer) instead of after the
                                        # full-width concatenation
+    gemm_impl: str = ""                # GroupGEMM backend (xla | pallas |
+                                       # pallas_fused); "" = the ambient
+                                       # transport.GEMM_IMPL default. Set by
+                                       # Plan.apply — threaded explicitly,
+                                       # never via a module global.
     coarse_chunks: int = 2             # FasterMoE-style pipeline degree
     # Adaptive transport autotuner (core/adaptive.py): path to a JSON plan
     # cache; "" disables lookup (the knobs above then apply verbatim). With a

@@ -86,19 +86,67 @@ def gemm_time(hw: Hardware, rows: int, n: int, k: int, n_mats: int = 1) -> float
 
 
 def layer_times(hw: Hardware, s: MoEShape) -> Dict[str, float]:
-    """Per-chunk / per-hop costs for the comet schedule."""
+    """Per-chunk / per-hop costs for the comet schedule (fwd and bwd)."""
     rows_per_chunk = s.M * s.topk / s.ep          # expert rows from one source group
     n_l0 = 2 if s.glu else 1                       # gate+up vs up
     t_gemm1 = gemm_time(hw, rows_per_chunk, s.K, s.N, n_l0)
     t_gemm2 = gemm_time(hw, rows_per_chunk, s.N, s.K)
     chunk_bytes = rows_per_chunk * s.N * s.bytes_per_elt
     t_hop = HOP_LATENCY_S + chunk_bytes / (hw.link_bw * hw.links)
+    # backward per-chunk GEMM work: dgrad (dh = dY·w_downᵀ, dX = dh·w_l0ᵀ)
+    # + wgrad (dw_down = hᵀ·dY, dw_l0 = xᵀ·dh) ≈ 2× forward. The fused
+    # backend's in-VMEM hidden recompute is an extra t_gemm1 charged where
+    # the backend is known (unfused backends save the pre-activations).
+    t_bwd_gemm = 2.0 * (t_gemm1 + t_gemm2)
     return {
         "t_gemm1": t_gemm1, "t_gemm2": t_gemm2,
         "t_chunk_compute": t_gemm1 + t_gemm2,
         "t_hop": t_hop,
         "dispatch_balance": t_hop / max(t_gemm1 + t_gemm2, 1e-12),
+        "t_bwd_gemm": t_bwd_gemm,
+        # reverse-hop balance: each backward chunk moves dY in AND dX out
+        "bwd_balance": 2.0 * t_hop / max(t_bwd_gemm, 1e-12),
     }
+
+
+# ---------------------------------------------------------------------------
+# Knob legalization — the ONE place transport geometry is made legal. Both
+# the tuner (before ranking/persisting) and the transports (at trace time)
+# use these, so the cost model, hot_path_hbm_bytes and execution can never
+# disagree about the knobs that actually run.
+# ---------------------------------------------------------------------------
+
+MAX_COL_BLOCKS = 8
+
+
+def legalize_n_col(d_model: int, n_col: int,
+                   max_blocks: int = MAX_COL_BLOCKS) -> int:
+    """Largest legal layer-1 column split ≤ the requested one: clamped to
+    [1, max_blocks] and decremented until it divides d_model."""
+    n = max(1, min(int(n_col), max_blocks))
+    while d_model % n:
+        n -= 1
+    return n
+
+
+def legalize_ring_group(ep: int, ring_group: int) -> int:
+    """Largest legal macro-step fusion ≤ the requested one: clamped to
+    [1, ep] and decremented until it divides ep."""
+    ep = max(1, ep)
+    g = max(1, min(int(ring_group), ep))
+    while ep % g:
+        g -= 1
+    return g
+
+
+def legalize_plan(plan: "Plan", d_model: int, ep: int) -> "Plan":
+    """Return ``plan`` with executable knobs — what transport_comet_blocks
+    will actually run for this (d_model, ep)."""
+    n = legalize_n_col(d_model, plan.n_col_blocks)
+    g = legalize_ring_group(ep, plan.ring_group)
+    if n == plan.n_col_blocks and g == plan.ring_group:
+        return plan
+    return dataclasses.replace(plan, n_col_blocks=n, ring_group=g)
 
 
 def choose_n_col(hw: Hardware, s: MoEShape, max_blocks: int = 8,
@@ -190,10 +238,16 @@ def resolve_n_col(mcfg, cfg_d_model: int, tokens_local: int,
 # ---------------------------------------------------------------------------
 
 
-# v2 (PR 2): plans gained ``gemm_impl="pallas_fused"`` and the
-# ``fused_combine`` flag. v1 caches load unchanged — Plan.from_json defaults
-# the missing field to False.
-PLAN_CACHE_VERSION = 2
+# Schema history:
+#   v2 (PR 2) — plans gained ``gemm_impl="pallas_fused"`` and the
+#     ``fused_combine`` flag.
+#   v3 (PR 3) — plans are ranked on FORWARD + BACKWARD step time (the
+#     custom-VJP comet backward ring); ``measured_s`` is the fwd+bwd total,
+#     ``t_bwd_s`` its backward component (0 when only the total was timed),
+#     and ``objective`` records what the ranking covered. Knobs are stored
+#     LEGALIZED (see ``legalize_plan``). v1/v2 caches load unchanged —
+#     ``Plan.from_json`` defaults the missing fields (objective="fwd").
+PLAN_CACHE_VERSION = 3
 
 TRANSPORTS = ("naive", "coarse", "comet", "bcast")
 
@@ -210,6 +264,8 @@ class Plan:
     fused_combine: bool = False
     measured_s: float = 0.0
     source: str = "model"
+    t_bwd_s: float = 0.0               # backward component of measured_s
+    objective: str = "fwd_bwd"         # what measured_s ranked: fwd | fwd_bwd
 
     def to_json(self) -> Dict:
         return dataclasses.asdict(self)
@@ -217,7 +273,11 @@ class Plan:
     @classmethod
     def from_json(cls, d: Dict) -> "Plan":
         fields = {f.name for f in dataclasses.fields(cls)}
-        return cls(**{k: v for k, v in d.items() if k in fields})
+        kw = {k: v for k, v in d.items() if k in fields}
+        # pre-v3 entries were ranked on forward time only; say so rather
+        # than defaulting to the v3 objective
+        kw.setdefault("objective", "fwd")
+        return cls(**kw)
 
     def apply(self, mcfg):
         """Return ``mcfg`` running this plan's schedule. Sets
@@ -225,7 +285,8 @@ class Plan:
         return dataclasses.replace(
             mcfg, impl=self.impl, ring_group=self.ring_group,
             n_col_blocks=max(1, self.n_col_blocks),
-            fused_combine=self.fused_combine, plan_override=True)
+            fused_combine=self.fused_combine, gemm_impl=self.gemm_impl,
+            plan_override=True)
 
 
 def plan_shape(mcfg, d_model: int, tokens_local: int, ep: int,
@@ -440,25 +501,204 @@ def modeled_plan_time(hw: Hardware, s: MoEShape, plan: Plan) -> float:
     return t + _weight_read_time(hw, s, n_steps) + fill + extra
 
 
+# ---------------------------------------------------------------------------
+# Backward-pass cost model (the custom-VJP comet ring vs the XLA-autodiff
+# transposed baseline). Plans are ranked on fwd + bwd: the training step is
+# the north-star workload and ~2/3 of it is backward.
+# ---------------------------------------------------------------------------
+
+
+def _dw_accum_time(hw: Hardware, s: MoEShape, n_flushes: int) -> float:
+    """HBM time for the fp32 dW accumulators: each flush reads + writes the
+    local expert-weight footprint. The comet custom VJP flushes once per
+    macro-step (×ep/ring_group); the autodiff baseline flushes per chunk
+    (×ep) because every reverse step is a separate transposed GroupGEMM."""
+    n_mats = (2 if s.glu else 1) + 1
+    dw_bytes = (s.E / max(1, s.ep)) * n_mats * s.N * s.K * 4       # fp32
+    return n_flushes * 2.0 * dw_bytes / hw.hbm_bw
+
+
+def _bwd_hidden_time(hw: Hardware, s: MoEShape, plan: Plan) -> float:
+    """Hidden-tensor HBM traffic during the custom-VJP backward. The fused
+    backend recomputes h inside the dgrad/wgrad kernels (VMEM-resident —
+    charged as FLOPs where the backend is known); unfused backends re-read
+    the SAVED layer-0 pre-activations and stream the dh accumulator."""
+    if plan.gemm_impl == "pallas_fused":
+        return 0.0
+    rows = s.M * s.topk
+    n_l0 = 2 if s.glu else 1
+    return (1 + n_l0) * rows * s.K * s.bytes_per_elt / hw.hbm_bw
+
+
+def modeled_plan_time_bwd(hw: Hardware, s: MoEShape, plan: Plan) -> float:
+    """Analytical backward latency of one MoE layer under ``plan``.
+
+    comet runs the custom-VJP ring: dY chunks travel the reverse permutes
+    while the per-chunk dgrad/wgrad GEMMs (with VMEM/HBM hidden remat) and
+    the next hop overlap — the forward's pipeline geometry with two comm
+    streams (dY in, dX out) — and dW flushes once per macro-step.
+
+    naive/coarse keep XLA autodiff: the transposed all_to_all schedule,
+    fully serialized, hidden SAVED by the forward and re-read (plus the dh
+    round trip) instead of recomputed — except under the fused backend,
+    whose dgrad/wgrad kernels recompute in VMEM everywhere.
+
+    bcast's backward is modeled at TRAINING semantics (backward only exists
+    in training): every token must be resident on every model rank, so each
+    rank back-propagates its expert slice of ALL ep groups' tokens (×ep the
+    a2a paths' per-chunk rows) and the dX psum moves the full replicated
+    buffer. This is what keeps the tuner from "winning" a training shape
+    with the decode path; at decode-sized M the constant terms dominate and
+    bcast stays competitive."""
+    lt = layer_times(hw, s)
+    # the fused dgrad/wgrad kernels recompute the hidden in VMEM (extra
+    # GEMM1 FLOPs); unfused custom-VJP paths re-read saved pre-activations
+    recomp = lt["t_gemm1"] if plan.gemm_impl == "pallas_fused" else 0.0
+    t_chunk_bwd = lt["t_bwd_gemm"] + recomp
+    if plan.impl == "bcast":
+        W = s.ep * s.etp
+        full_bytes = s.ep * s.M * s.topk * s.N * s.bytes_per_elt
+        ar = (2.0 * (W - 1) / W * full_bytes / _a2a_rate(hw)) if W > 1 else 0.0
+        return (s.ep * t_chunk_bwd + ar + _dw_accum_time(hw, s, 1)
+                + _weight_read_time(hw, s, 1) + _bwd_hidden_time(hw, s, plan))
+    if plan.impl in ("naive", "coarse", "dense"):
+        rows = s.M * s.topk
+        W = s.ep * s.etp
+        t_comm = (2.0 * rows * s.N * s.bytes_per_elt / _a2a_rate(hw)
+                  if W > 1 else 0.0)
+        if plan.gemm_impl == "pallas_fused":
+            t_h = 0.0
+        else:
+            # autodiff: saved h re-read + the dh round trip
+            t_h = 2.0 * s.M * s.topk * s.K * s.bytes_per_elt / hw.hbm_bw
+        n = 2 if plan.impl == "coarse" else 1
+        return (t_comm + s.ep * t_chunk_bwd + t_h + _dw_accum_time(hw, s, n)
+                + _weight_read_time(hw, s, n))
+    g = max(1, plan.ring_group)
+    n_steps = max(1, s.ep // g)
+    t_macro_comp = g * t_chunk_bwd
+    t_macro_comm = g * 2.0 * lt["t_hop"]               # dY in + dX out
+    steady = n_steps * max(t_macro_comp, t_macro_comm)
+    fill = min(t_macro_comp, t_macro_comm) + (g - 1) * lt["t_hop"]
+    return (steady + fill + _dw_accum_time(hw, s, n_steps)
+            + _weight_read_time(hw, s, n_steps)
+            + _bwd_hidden_time(hw, s, plan))
+
+
+def bwd_exposed_comm_time(hw: Hardware, s: MoEShape, plan: Plan) -> float:
+    """Backward communication NOT hidden behind compute. comet: the pipeline
+    fill plus any steady-state comm residual; naive (and the autodiff
+    baseline) expose the full reverse collectives."""
+    lt = layer_times(hw, s)
+    if plan.impl == "bcast":
+        return 0.0
+    if plan.impl != "comet":
+        return 2.0 * s.M * s.topk * s.N * s.bytes_per_elt / _a2a_rate(hw)
+    g = max(1, plan.ring_group)
+    n_steps = max(1, s.ep // g)
+    recomp = lt["t_gemm1"] if plan.gemm_impl == "pallas_fused" else 0.0
+    t_macro_comp = g * (lt["t_bwd_gemm"] + recomp)
+    t_macro_comm = g * 2.0 * lt["t_hop"]
+    return (g * lt["t_hop"]
+            + n_steps * max(0.0, t_macro_comm - t_macro_comp))
+
+
+def autodiff_bwd_time(hw: Hardware, s: MoEShape) -> float:
+    """The XLA-autodiff baseline the custom VJP replaces: the transposed
+    ring serializes ALL reverse ppermutes after the forward completes
+    (nothing overlaps them), re-reads the saved hidden from HBM, and
+    round-trips the fp32 dW accumulator per chunk."""
+    lt = layer_times(hw, s)
+    t_comm = 2.0 * s.ep * lt["t_hop"]                  # dY + dX, exposed
+    t_comp = s.ep * 2.0 * (lt["t_gemm1"] + lt["t_gemm2"])
+    h_read = s.M * s.topk * s.K * s.bytes_per_elt / hw.hbm_bw
+    return (t_comm + t_comp + h_read + _dw_accum_time(hw, s, s.ep)
+            + _weight_read_time(hw, s, s.ep))
+
+
+def hot_path_hbm_bytes_bwd(s: MoEShape, plan: Plan) -> int:
+    """Modeled HBM bytes of one MoE layer's backward under the custom-VJP
+    schedule: dY read + dX write, the saved dispatch rows re-read for the
+    recompute/wgrad, hidden remat traffic (0 when fused — dgrad/wgrad
+    recompute it in VMEM), per-macro-step weight reads, and the fp32 dW
+    accumulator round trips ×(ep/ring_group)."""
+    rows = s.M * s.topk
+    bpe = s.bytes_per_elt
+    n_l0 = 2 if s.glu else 1
+    n_mats = n_l0 + 1
+    dy_dx = 2 * rows * s.N * bpe
+    saved = rows * s.N * bpe
+    hidden = (0 if plan.gemm_impl == "pallas_fused"
+              else (1 + n_l0) * rows * s.K * bpe)
+    if plan.impl == "comet":
+        n_steps = max(1, s.ep // max(1, plan.ring_group))
+    else:
+        n_steps = 2 if plan.impl == "coarse" else 1
+    w_bytes = (s.E / max(1, s.ep)) * n_mats * s.N * s.K
+    weights = n_steps * w_bytes * bpe
+    dw = n_steps * 2 * w_bytes * 4
+    return int(dy_dx + saved + hidden + weights + dw)
+
+
+def autodiff_bwd_hbm_bytes(s: MoEShape) -> int:
+    """HBM bytes of the autodiff baseline backward: hidden saved by the
+    forward is re-read, every reverse chunk re-reads the weights and
+    round-trips the dW accumulator."""
+    rows = s.M * s.topk
+    bpe = s.bytes_per_elt
+    n_l0 = 2 if s.glu else 1
+    n_mats = n_l0 + 1
+    w_bytes = (s.E / max(1, s.ep)) * n_mats * s.N * s.K
+    return int(2 * rows * s.N * bpe + rows * s.N * bpe
+               + (1 + n_l0) * rows * s.K * bpe
+               + s.ep * w_bytes * bpe + s.ep * 2 * w_bytes * 4)
+
+
+def _a2a_rate(hw: Hardware) -> float:
+    from repro.analysis import simulator as SIM  # lazy: simulator imports us
+    return SIM.link_rate(hw)
+
+
+def modeled_step_time(hw: Hardware, s: MoEShape, plan: Plan) -> float:
+    """The v3 ranking metric: one MoE layer's forward + backward."""
+    return modeled_plan_time(hw, s, plan) + modeled_plan_time_bwd(hw, s, plan)
+
+
 def tune_plan(s: MoEShape, hw: Hardware, cache: Optional[PlanCache] = None,
               measure: Optional[Callable[[Plan], float]] = None,
               candidates: Optional[Iterable[Plan]] = None,
-              force: bool = False) -> Plan:
+              force: bool = False, objective: str = "fwd_bwd") -> Plan:
     """Pick the fastest plan for ``s`` on ``hw``.
 
     ``measure`` is a callable Plan -> seconds timing a REAL execution (see
-    ``make_timing_measure``); when None the analytical model ranks the
-    candidates instead. The winner is stored in ``cache`` (if given) under
-    the (M, d, f, E, topk, ep, etp, hw) key and returned."""
+    ``make_timing_measure``, which can time a full fwd+bwd); when None the
+    analytical model ranks the candidates on modeled FORWARD + BACKWARD
+    time. ``objective`` records what the supplied measure covered — pass
+    "fwd" with a forward-only measure so the persisted provenance is
+    truthful. Candidates are legalized (``legalize_plan``) before ranking
+    and the winner is stored LEGALIZED in ``cache`` (if given) under the
+    (M, d, f, E, topk, ep, etp, hw) key and returned."""
     if cache is not None and not force:
         hit = cache.get(s, hw)
         if hit is not None:
             return hit
     cands = list(candidates) if candidates is not None \
         else list(candidate_plans(s))
+    # legalize BEFORE ranking so the knobs measured are the knobs that run,
+    # then dedupe (legalization can collapse distinct candidates)
+    seen = set()
+    uniq = []
+    for p in cands:
+        p = legalize_plan(p, s.N, s.ep)
+        k = (p.impl, p.ring_group, p.n_col_blocks, p.gemm_impl,
+             p.fused_combine)
+        if k not in seen:
+            seen.add(k)
+            uniq.append(p)
+    cands = uniq
     source = "measured" if measure is not None else "model"
     meas = measure if measure is not None \
-        else (lambda p: modeled_plan_time(hw, s, p))
+        else (lambda p: modeled_step_time(hw, s, p))
     best: Optional[Plan] = None
     best_t = math.inf
     failed = []
@@ -480,7 +720,9 @@ def tune_plan(s: MoEShape, hw: Hardware, cache: Optional[PlanCache] = None,
             "only ranks the surviving candidates", stacklevel=2)
     if best is None:
         raise RuntimeError(f"no candidate plan measurable for {s}")
-    best = dataclasses.replace(best, measured_s=best_t, source=source)
+    t_bwd = modeled_plan_time_bwd(hw, s, best) if measure is None else 0.0
+    best = dataclasses.replace(best, measured_s=best_t, source=source,
+                               t_bwd_s=t_bwd, objective=objective)
     if cache is not None:
         cache.put(s, hw, best)
     return best
@@ -493,40 +735,47 @@ def analytic_plan(s: MoEShape, hw: Hardware) -> Plan:
 
 
 def make_timing_measure(cfg, mcfg, params, x, ctx, iters: int = 3,
-                        warmup: int = 1) -> Callable[[Plan], float]:
+                        warmup: int = 1,
+                        grad: bool = False) -> Callable[[Plan], float]:
     """Timing callback over real ``shard_map`` executions of the MoE layer.
 
-    Returns measure(plan) -> mean seconds per forward, compiling the layer
-    with the plan's schedule (impl/ring_group/n_col/gemm backend) under the
-    caller's mesh context. Used by tools/tune.py on attached hardware (or a
-    forced-host-device mesh for functional runs)."""
+    Returns measure(plan) -> mean seconds per step, compiling the layer with
+    the plan's schedule (impl/ring_group/n_col/gemm backend — carried
+    entirely by ``plan.apply``; no module-global backend switching) under
+    the caller's mesh context. ``grad=True`` times a full forward+backward
+    (``jax.value_and_grad`` through the layer w.r.t. the expert weights) —
+    the v3 ranking objective. Used by tools/tune.py on attached hardware
+    (or a forced-host-device mesh for functional runs)."""
     import contextlib
     import time as _time
 
     import jax
+    import jax.numpy as jnp
 
-    from repro.core import transport as T
     from repro.parallel.compat import use_mesh
 
     def measure(plan: Plan) -> float:
         from repro.core.moe_layer import moe_ffn  # lazy: moe_layer imports us
         m2 = plan.apply(mcfg)
-        old_gemm = T.GEMM_IMPL
-        T.set_gemm_impl(plan.gemm_impl)
-        try:
+        if grad:
+            def loss(pp, xx):
+                y, aux = moe_ffn(cfg, m2, pp, xx, ctx)
+                return jnp.sum(y.astype(jnp.float32) ** 2) + aux
+
+            g_fn = jax.jit(jax.value_and_grad(loss))
+            fn = lambda xx: g_fn(params, xx)[0]
+        else:
             fn = jax.jit(lambda xx: moe_ffn(cfg, m2, params, xx, ctx)[0])
-            cm = use_mesh(ctx.mesh) if ctx.active else contextlib.nullcontext()
-            with cm:
-                for _ in range(max(1, warmup)):
-                    fn(x).block_until_ready()
-                t0 = _time.perf_counter()
-                y = None
-                for _ in range(max(1, iters)):
-                    y = fn(x)
-                y.block_until_ready()
-                return (_time.perf_counter() - t0) / max(1, iters)
-        finally:
-            T.set_gemm_impl(old_gemm)
+        cm = use_mesh(ctx.mesh) if ctx.active else contextlib.nullcontext()
+        with cm:
+            for _ in range(max(1, warmup)):
+                fn(x).block_until_ready()
+            t0 = _time.perf_counter()
+            y = None
+            for _ in range(max(1, iters)):
+                y = fn(x)
+            y.block_until_ready()
+            return (_time.perf_counter() - t0) / max(1, iters)
 
     return measure
 
@@ -591,4 +840,7 @@ def resolve_plan(mcfg, d_model: int, tokens_local: int, ep: int, etp: int,
         # the same shape must not repeat the candidate search, and a later
         # rewrite of the file invalidates this via the mtime check
         cache.plans[cache.key(s, hw)] = plan
-    return plan
+    # pre-v3 (or hand-written) cache entries may carry knobs the transport
+    # would silently re-legalize; resolve to the executable schedule HERE so
+    # the applied plan and the cost model agree with what runs
+    return legalize_plan(plan, d_model, max(1, ep))

@@ -77,8 +77,11 @@ def pack_expert_weights(full: Dict[str, jnp.ndarray], ep: int, etp: int) -> Dict
 # ---------------------------------------------------------------------------
 
 
-def _moe_body(cfg, mcfg, ctx: AxisCtx, n_col: int, x, router_w, experts):
-    """x: (B_loc, S_loc, d) local tokens. Returns (y, aux)."""
+def _moe_body(cfg, mcfg, ctx: AxisCtx, n_col: int, gemm_impl, x, router_w,
+              experts):
+    """x: (B_loc, S_loc, d) local tokens. Returns (y, aux). ``gemm_impl``
+    is the resolved GroupGEMM backend, threaded explicitly to every
+    transport (no module-global switching)."""
     B, S, d = x.shape
     xt = x.reshape(B * S, d)
     Tn = B * S
@@ -98,12 +101,12 @@ def _moe_body(cfg, mcfg, ctx: AxisCtx, n_col: int, x, router_w, experts):
     if impl == "coarse" and ctx.active and ctx.world > 1:
         # the coarse schedule re-dispatches per token slice — building the
         # full-batch dispatch here would be pure waste, so it is skipped
-        y = _coarse(cfg, mcfg, ctx, xt, idx, wts, E, C, w_local)
+        y = _coarse(cfg, mcfg, ctx, xt, idx, wts, E, C, w_local, gemm_impl)
         return y.reshape(B, S, d), aux
 
     buf, info = R.build_dispatch(xt, idx, E, C)                     # (E, C, d)
     if impl == "bcast" or (impl != "dense" and S == 1 and not ctx.seq_shard):
-        out = T.transport_bcast(ctx, buf, w_local, cfg.activation)
+        out = T.transport_bcast(ctx, buf, w_local, cfg.activation, gemm_impl)
         y = R.combine(out.reshape(E * C, d), info, wts, E_loc=E, C=C,
                       rot=None, ep=1)
     else:
@@ -114,7 +117,7 @@ def _moe_body(cfg, mcfg, ctx: AxisCtx, n_col: int, x, router_w, experts):
             # compute + return traffic (plan knob ``fused_combine``)
             blocks, rot = T.transport_comet_blocks(
                 ctx, send, w_local, cfg.activation, n_col_blocks=n_col,
-                ring_group=mcfg.ring_group)
+                ring_group=mcfg.ring_group, gemm_impl=gemm_impl)
             parts = [R.combine(b.reshape(ep * E_loc * C, b.shape[-1]), info,
                                wts, E_loc, C, rot, ep) for b in blocks]
             y = parts[0] if len(parts) == 1 else \
@@ -124,10 +127,11 @@ def _moe_body(cfg, mcfg, ctx: AxisCtx, n_col: int, x, router_w, experts):
                 out, rot = T.transport_comet(ctx, send, w_local,
                                              cfg.activation,
                                              n_col_blocks=n_col,
-                                             ring_group=mcfg.ring_group)
+                                             ring_group=mcfg.ring_group,
+                                             gemm_impl=gemm_impl)
             else:                                                    # naive / dense
                 out, rot = T.transport_naive(ctx, send, w_local,
-                                             cfg.activation)
+                                             cfg.activation, gemm_impl)
             y = R.combine(out.reshape(ep * E_loc * C, d), info, wts, E_loc,
                           C, rot, ep)
 
@@ -136,7 +140,7 @@ def _moe_body(cfg, mcfg, ctx: AxisCtx, n_col: int, x, router_w, experts):
     return y, aux
 
 
-def _coarse(cfg, mcfg, ctx, xt, idx, wts, E, C, w_local):
+def _coarse(cfg, mcfg, ctx, xt, idx, wts, E, C, w_local, gemm_impl=None):
     """FasterMoE-style: n token slices, each a full (a2a → MLP → a2a) round.
 
     ``C`` is the full-batch capacity from the outer routing pass; it is
@@ -166,7 +170,8 @@ def _coarse(cfg, mcfg, ctx, xt, idx, wts, E, C, w_local):
         ws = wts[i * Ts:(i + 1) * Ts]
         buf, info = R.build_dispatch(xs, ids, E, Cs)
         send = buf.reshape(ep, E_loc, Cs, d)
-        out, _ = T.transport_naive(ctx, send, w_local, cfg.activation)
+        out, _ = T.transport_naive(ctx, send, w_local, cfg.activation,
+                                   gemm_impl)
         outs.append(R.combine(out.reshape(ep * E_loc * Cs, d), info, ws,
                               E_loc, Cs, None, ep))
     return jnp.concatenate(outs, axis=0)
@@ -177,17 +182,28 @@ def _coarse(cfg, mcfg, ctx, xt, idx, wts, E, C, w_local):
 # ---------------------------------------------------------------------------
 
 
-def _with_gemm_impl(name: str, thunk):
-    """Trace/run ``thunk`` under a temporarily-switched GroupGEMM backend
-    (the plan's gemm_impl). Safe under jit: the backend choice is baked in at
-    trace time, which happens inside the thunk's dynamic extent."""
-    from repro.core import transport as T
-    old = T.GEMM_IMPL
-    T.set_gemm_impl(name)
-    try:
-        return thunk()
-    finally:
-        T.set_gemm_impl(old)
+def resolve_token_sharding(ctx: AxisCtx, B: int, S: int):
+    """(seq_sharded, dp_axes) for a (B, S) input — the ONE place the body's
+    token sharding is decided. Sequence sharding needs S divisible by the
+    model axis; a batch indivisible by dp is REPLICATED over dp (e.g.
+    long-context decode with B=1) instead of sharded."""
+    if not ctx.active:
+        return False, ()
+    seq_sharded = ctx.seq_shard and S > 1 and S % ctx.model_size == 0
+    dp_axes = (ctx.dp_axes
+               if ctx.dp_size > 1 and B % ctx.dp_size == 0 else ())
+    return seq_sharded, dp_axes
+
+
+def local_token_count(ctx: AxisCtx, B: int, S: int) -> int:
+    """Tokens per model-axis group — the M of the plan-shape key, derived
+    from ``resolve_token_sharding`` so the key always matches the sharding
+    the body actually runs under. tools/tune.py keys its measured plans
+    with this too."""
+    seq_sharded, dp_axes = resolve_token_sharding(ctx, B, S)
+    dp = ctx.dp_size if dp_axes else 1
+    ms = ctx.model_size if seq_sharded else 1
+    return max(1, B * S // (dp * ms))
 
 
 def moe_ffn(cfg, mcfg, params, x, ctx: AxisCtx,
@@ -198,43 +214,40 @@ def moe_ffn(cfg, mcfg, params, x, ctx: AxisCtx,
     set and ``mcfg.plan_override`` is not, the transport/ring_group/n_col/
     gemm backend all come from the tuned plan cache for this shape (missing
     cache → analytical model). Otherwise the explicit config knobs apply;
-    n_col == 0 → adaptive workload assignment picks the layer-1 column split."""
+    n_col == 0 → adaptive workload assignment picks the layer-1 column
+    split. The plan's gemm backend rides ``mcfg.gemm_impl`` into the body —
+    an explicit argument end to end, never a module global."""
     from repro.core import adaptive as A
-    dp = ctx.dp_size if ctx.active else 1
-    toks_local = max(1, x.shape[0] * x.shape[1] // max(1, dp))
+    from repro.core import transport as T
+    B, S = x.shape[0], x.shape[1]
+    # the sharding the body will actually run under — resolved once by
+    # resolve_token_sharding, used for both the plan key (via
+    # local_token_count) and the shard_map specs below
+    seq_sharded, dp_axes = resolve_token_sharding(ctx, B, S)
+    toks_local = local_token_count(ctx, B, S)
     if A.plan_lookup_enabled(mcfg):
         plan = A.resolve_plan(mcfg, cfg.d_model, toks_local, ctx.ep, ctx.etp)
         if plan is not None:
             mcfg = plan.apply(mcfg)
             n_col = plan.n_col_blocks
-            if plan.gemm_impl:
-                from repro.core import transport as T
-                if plan.gemm_impl != T.GEMM_IMPL:
-                    return _with_gemm_impl(
-                        plan.gemm_impl,
-                        lambda: moe_ffn(cfg, mcfg, params, x, ctx, n_col))
     if n_col == 0:
         n_col = A.resolve_n_col(mcfg, cfg.d_model, toks_local,
                                 ctx.ep, ctx.etp)
+    gemm_impl = mcfg.gemm_impl or T.GEMM_IMPL
     router_w = params["router"]
     experts = {k: v for k, v in params["experts"].items()}
 
     if not ctx.active:
-        return _moe_body(cfg, mcfg, AxisCtx(), n_col, x, router_w, experts)
+        return _moe_body(cfg, mcfg, AxisCtx(), n_col, gemm_impl, x,
+                         router_w, experts)
 
-    S = x.shape[1]
-    seq_sharded = ctx.seq_shard and S > 1 and S % ctx.model_size == 0
-    # batch below the dp size (e.g. long-context decode with B=1): replicate
-    # over dp instead of sharding it
-    dp_axes = (ctx.dp_axes
-               if ctx.dp_size > 1 and x.shape[0] % ctx.dp_size == 0 else ())
     x_spec = P(dp_axes or None,
                ctx.model_axis if seq_sharded else None, None)
     body_ctx = dataclasses.replace(ctx, seq_shard=seq_sharded,
                                    dp_axes=dp_axes)
 
     def body(x_l, rw, ew):
-        return _moe_body(cfg, mcfg, body_ctx, n_col, x_l, rw, ew)
+        return _moe_body(cfg, mcfg, body_ctx, n_col, gemm_impl, x_l, rw, ew)
 
     expert_specs = {k: P(ctx.model_axis, None, None, None) for k in experts}
     f = shard_map(

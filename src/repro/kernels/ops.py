@@ -85,6 +85,46 @@ def fused_mlp(rows, w, activation: str,
                                 order=order, interpret=_interp(interpret))
 
 
+def _sliced_wd(w, col_slice):
+    from jax import lax
+    wd = w["w_down"]
+    if col_slice is not None:
+        wd = lax.dynamic_slice_in_dim(wd, col_slice[0], col_slice[1], axis=2)
+    return wd
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "col_slice",
+                                             "bm", "bf", "interpret"))
+def fused_mlp_dgrad(rows, w, dy, activation: str,
+                    col_slice: Optional[tuple] = None,
+                    bm: int = 128, bf: int = 512,
+                    interpret: Optional[bool] = None):
+    """Explicit dgrad of the fused expert MLP (kernels/fused_mlp.py):
+    dX from a (possibly column-sliced) dY, hidden recomputed in VMEM.
+    Per-block calls sum to the full dX (linearity in dY) — the comet
+    backward ring's per-column-block dY consumption."""
+    from repro.kernels import fused_mlp as _fm
+    return _fm.fused_mlp_dgrad_padded(
+        rows, w.get("w_gate"), w["w_up"], _sliced_wd(w, col_slice), dy,
+        activation=activation, bm=bm, bf=bf, interpret=_interp(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "col_slice",
+                                             "bm", "bf", "interpret"))
+def fused_mlp_wgrad(rows, w, dy, activation: str,
+                    col_slice: Optional[tuple] = None,
+                    bm: int = 128, bf: int = 512,
+                    interpret: Optional[bool] = None):
+    """Explicit wgrad of the fused expert MLP: (dw_gate|None, dw_up,
+    dw_down). With ``col_slice`` the returned dw_down covers only that
+    column block; dw_up/dw_gate are the block's partials (they sum over
+    blocks to the full gradient)."""
+    from repro.kernels import fused_mlp as _fm
+    return _fm.fused_mlp_wgrad_padded(
+        rows, w.get("w_gate"), w["w_up"], _sliced_wd(w, col_slice), dy,
+        activation=activation, bm=bm, bf=bf, interpret=_interp(interpret))
+
+
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def ssd_forward(x, dt, A, Bm, Cm, D, chunk: int = 64,
                 interpret: Optional[bool] = None):

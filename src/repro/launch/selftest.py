@@ -107,28 +107,37 @@ def main() -> int:
                           abs(float(aux - aux_ref)) < 1e-4,
                           f"aux={float(aux):.5f} ref={float(aux_ref):.5f}")
 
-            # ---- gradient equivalence (comet vs naive vs local) ------------
-            def loss(params, impl, c):
-                m2 = dataclasses.replace(mcfg0, impl=impl)
+            # ---- gradient equivalence (comet custom-VJP ring vs naive vs
+            # local) — "comet" covers the default backward ring, "cometbwd"
+            # the streamed variant (ring_group=2, n_col=2, fused_combine)
+            def loss(params, m2, c):
                 y, aux = moe_ffn(cfg, m2, params, x, c)
                 return jnp.sum(y ** 2) + aux
 
+            m_naive = dataclasses.replace(mcfg0, impl="naive")
+            m_comet = dataclasses.replace(mcfg0, impl="comet")
+            m_cbwd = dataclasses.replace(mcfg0, impl="comet", ring_group=2,
+                                         n_col_blocks=2, fused_combine=True)
             with use_mesh(mesh):
-                g_naive = jax.jit(jax.grad(lambda p: loss(p, "naive", ctx)))(params)
-                g_comet = jax.jit(jax.grad(lambda p: loss(p, "comet", ctx)))(params)
+                g_naive = jax.jit(jax.grad(lambda p: loss(p, m_naive, ctx)))(params)
+                g_comet = jax.jit(jax.grad(lambda p: loss(p, m_comet, ctx)))(params)
+                g_cbwd = jax.jit(jax.grad(lambda p: loss(p, m_cbwd, ctx)))(params)
             g_local = jax.jit(jax.grad(
-                lambda p: loss(p, "naive", AxisCtx())))(params_local)
+                lambda p: loss(p, m_naive, AxisCtx())))(params_local)
             gl_packed = pack_expert_weights(
                 {k: v[0] for k, v in g_local["experts"].items()}, ep, etp)
 
             for k in packed:
                 e1 = float(jnp.max(jnp.abs(g_naive["experts"][k] - gl_packed[k])))
                 e2 = float(jnp.max(jnp.abs(g_comet["experts"][k] - gl_packed[k])))
+                e3 = float(jnp.max(jnp.abs(g_cbwd["experts"][k] - gl_packed[k])))
                 s = float(jnp.max(jnp.abs(gl_packed[k]))) + 1e-9
                 check(f"moe_grad[{k}] ep{ep} etp{etp} naive-vs-local", e1 / s < 5e-5,
                       f"rel={e1/s:.2e}")
                 check(f"moe_grad[{k}] ep{ep} etp{etp} comet-vs-local", e2 / s < 5e-5,
                       f"rel={e2/s:.2e}")
+                check(f"moe_grad[{k}] ep{ep} etp{etp} cometbwd-vs-local",
+                      e3 / s < 5e-5, f"rel={e3/s:.2e}")
             er = float(jnp.max(jnp.abs(g_naive["router"] - g_local["router"])))
             sr = float(jnp.max(jnp.abs(g_local["router"]))) + 1e-9
             check(f"moe_grad[router] ep{ep} etp{etp}", er / sr < 5e-5,

@@ -25,6 +25,11 @@ def main():
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--impl", default="",
                     help="MoE transport override: naive|coarse|comet")
+    ap.add_argument("--plan-cache", default="",
+                    help="tuned adaptive-transport plan cache (JSON); the "
+                         "train step resolves fwd+bwd MoE schedules from it")
+    ap.add_argument("--plan-hw", default="",
+                    help="hardware key for plan lookup (default tpu_v5e)")
     ap.add_argument("--sp-residual", action="store_true")
     ap.add_argument("--distributed", action="store_true",
                     help="call jax.distributed.initialize() (TPU fleet)")
@@ -54,7 +59,8 @@ def main():
 
     shape = ShapeConfig("train", seq_len=args.seq, global_batch=args.batch,
                         kind="train")
-    tcfg = TrainerConfig(ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every)
+    tcfg = TrainerConfig(ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+                         plan_cache=args.plan_cache, plan_hw=args.plan_hw)
     out = Trainer(cfg, shape, mesh, tcfg).run(args.steps)
     ls = [m["loss"] for m in out["metrics"]]
     print(f"final_step={out['final_step']} restarts={out['restarts']} "

@@ -85,6 +85,13 @@ class TrainerConfig:
     straggler_factor: float = 2.5
     seed: int = 0
     max_restarts: int = 3
+    # tuned adaptive-transport plans (core/adaptive.py): every moe_ffn under
+    # the jitted train step resolves its schedule — transport, ring_group,
+    # n_col, gemm backend, AND the custom-VJP backward ring geometry — from
+    # this cache, so tuned fwd+bwd schedules apply to training, not just to
+    # the forward-only serving paths.
+    plan_cache: str = ""
+    plan_hw: str = ""
 
 
 class Trainer:
@@ -99,7 +106,9 @@ class Trainer:
         self.optim = optim or AdamW()
         self.fsdp = fsdp
         self.fault_hook = fault_hook          # tests inject failures here
-        self.built = build_train_step(cfg, shape, mesh, self.optim, fsdp=fsdp)
+        self.built = build_train_step(cfg, shape, mesh, self.optim, fsdp=fsdp,
+                                      plan_cache=tcfg.plan_cache,
+                                      plan_hw=tcfg.plan_hw)
         self.ckpt = CheckpointManager(tcfg.ckpt_dir, keep=tcfg.keep)
         self.monitor = StragglerMonitor(tcfg.straggler_factor)
         self.metrics_log: List[Dict[str, float]] = []
@@ -195,8 +204,12 @@ class Trainer:
         """Re-mesh a live state (e.g. after losing a slice) and rebuild the
         step function. Returns the re-placed state."""
         self.mesh = new_mesh
+        # the new mesh may imply a different (ep, etp) and local-token shape
+        # — plan resolution re-keys automatically via the same cache
         self.built = build_train_step(self.cfg, self.shape, new_mesh,
-                                      self.optim, fsdp=self.fsdp)
+                                      self.optim, fsdp=self.fsdp,
+                                      plan_cache=self.tcfg.plan_cache,
+                                      plan_hw=self.tcfg.plan_hw)
         if new_mesh is None:
             return jax.tree_util.tree_map(
                 lambda x: jax.numpy.asarray(np.asarray(jax.device_get(x))), state)

@@ -72,11 +72,11 @@ def test_plan_cache_roundtrip_and_moe_layer_pickup(tmp_path, monkeypatch):
     seen = {}
     real = T.transport_comet
 
-    def spy(ctx, send, w, act, n_col_blocks=1, ring_group=1):
+    def spy(ctx, send, w, act, n_col_blocks=1, ring_group=1, **kw):
         seen["n_col"] = n_col_blocks
         seen["ring_group"] = ring_group
         return real(ctx, send, w, act, n_col_blocks=n_col_blocks,
-                    ring_group=ring_group)
+                    ring_group=ring_group, **kw)
 
     monkeypatch.setattr(T, "transport_comet", spy)
     import repro.core.moe_layer as ML

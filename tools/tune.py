@@ -115,14 +115,18 @@ def tune_measured(args, hw, cache):
 
     # no-drop capacity: every candidate computes identical work
     mcfg = dataclasses.replace(mcfg, capacity_factor=float(E))
+    # time the full fwd+bwd step (the v3 ranking objective) unless asked not
+    # to, and key the plan with the SAME token resolution moe_ffn uses
     measure = make_timing_measure(cfg, mcfg, params, x, ctx,
-                                  iters=args.iters, warmup=1)
-    dpsz = ctx.dp_size if ctx.active else 1
-    toks = max(1, args.batch * args.seq // max(1, dpsz))
+                                  iters=args.iters, warmup=1,
+                                  grad=not args.fwd_only)
+    from repro.core.moe_layer import local_token_count
+    toks = local_token_count(ctx, args.batch, args.seq)
     s = plan_shape(mcfg, d, toks, ctx.ep, ctx.etp)
     cands = candidate_plans(s, gemm_impls=tuple(args.gemm))
     plan = tune_plan(s, hw, cache, measure=measure, candidates=cands,
-                     force=args.force)
+                     force=args.force,
+                     objective="fwd" if args.fwd_only else "fwd_bwd")
     _print_plan(args.arch, s, plan)
     return 1
 
@@ -147,6 +151,9 @@ def main(argv=None) -> int:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=32)
     ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--fwd-only", action="store_true",
+                    help="time only the forward (--measured); default times "
+                         "the full fwd+bwd step, matching the v3 objective")
     ap.add_argument("--gemm", nargs="*", default=["xla", "pallas_fused"],
                     choices=["xla", "pallas", "pallas_fused"],
                     help="GroupGEMM backends to search (--measured). The "

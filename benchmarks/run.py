@@ -7,7 +7,7 @@ numbers against the bands the paper reports. Exit code reflects validation.
 Run:  PYTHONPATH=src python -m benchmarks.run                 # figures
       PYTHONPATH=src python -m benchmarks.run --tune          # populate plans
       PYTHONPATH=src python -m benchmarks.run --plan plans/tpu_v5e.json
-      PYTHONPATH=src python -m benchmarks.run --json BENCH_pr3.json
+      PYTHONPATH=src python -m benchmarks.run --json BENCH_pr4.json
 The --plan mode resolves each shape's transport schedule from the tuned plan
 cache (missing file/entry → the analytical model), reports the tuned plan's
 modeled latency against the non-overlapped naive baseline, and executes one
@@ -15,9 +15,12 @@ real moe_layer forward with the cache-resolved schedule.
 The --json mode additionally writes machine-readable per-figure results,
 kernel microbenchmarks (dispatch build / combine / fused MLP and its
 dgrad/wgrad backward kernels — real timed executions), the modeled hot-path
-HBM bytes of the fused vs unfused schedule, and the fwd+bwd step figures:
-the custom-VJP comet backward ring vs the XLA-autodiff transposed baseline
-at the paper's layer shapes — the perf-trajectory artifact.
+HBM bytes of the fused vs unfused schedule, the fwd+bwd step figures (the
+custom-VJP comet backward ring vs the XLA-autodiff transposed baseline),
+and the SERVING figure set: decode-phase plan quality (latency-objective
+tuned plan vs naive at every decode batch size) plus TTFT / per-token decode
+latency / tokens-per-second from a real Poisson-arrival continuous-batching
+trace — the perf-trajectory artifact.
 """
 from __future__ import annotations
 
@@ -335,6 +338,111 @@ def bwd_overlap_table(Ms=(8192,), ep: int = 8):
     return table
 
 
+def serving_decode_plan_table(Ms=(8, 32, 128, 512), ep: int = 8):
+    """Decode-phase plan quality at the paper's layer shapes: the tuned
+    decode plan (phase="decode" — ranked on the fwd-only per-step latency
+    objective) must be no slower than the naive transport on the modeled
+    path at every decode batch size. Tiny M legalizes toward bcast / small
+    ring groups — exactly the paper's observation that the right overlap
+    schedule depends on the workload shape."""
+    from benchmarks.figures import PAPER_MODELS
+    from repro.core import adaptive as A
+
+    hw = A.TPU_V5E
+    table = {}
+    print(f"\n# serving_decode_plans (fwd-only latency objective, EP={ep})")
+    print("model,M,impl,ring_group,n_col,gemm,t_decode_ms,t_naive_ms,speedup")
+    for name, m in PAPER_MODELS.items():
+        for M in Ms:
+            s = A.MoEShape(M=M, N=m["N"], K=m["K"], E=m["E"], topk=m["topk"],
+                           ep=ep, etp=1)
+            plan = A.tune_plan(s, hw, cache=None, phase="decode")
+            t_plan = A.modeled_plan_time(hw, s, plan)
+            t_naive = A.modeled_plan_time(hw, s, A.Plan("naive"))
+            table[f"{name}@M{M}"] = {
+                "impl": plan.impl, "ring_group": plan.ring_group,
+                "n_col_blocks": plan.n_col_blocks,
+                "gemm_impl": plan.gemm_impl,
+                "t_decode_s": t_plan, "t_naive_s": t_naive,
+                "speedup": t_naive / t_plan,
+            }
+            print(f"{name},{M},{plan.impl},{plan.ring_group},"
+                  f"{plan.n_col_blocks},{plan.gemm_impl},"
+                  f"{t_plan * 1e3:.4f},{t_naive * 1e3:.4f},"
+                  f"{t_naive / t_plan:.2f}")
+    ok = all(r["t_decode_s"] <= r["t_naive_s"] * (1 + 1e-9)
+             for r in table.values())
+    print(f"[{'PASS' if ok else 'FAIL'}] tuned decode plan no slower than "
+          "naive at every decode shape")
+    return {"rows": table, "tuned_no_slower_than_naive": ok}
+
+
+def serving_trace_bench(n_requests: int = 8, slots: int = 2,
+                        mean_interarrival_steps: float = 2.0,
+                        max_new: int = 8, seed: int = 0):
+    """Real continuous-batching run on the smoke MoE arch (CPU): a Poisson
+    arrival trace with mixed prompt lengths drives the slot scheduler —
+    requests submitted as the decode clock passes their arrival step, late
+    arrivals admitted into freed slots via chunked prefill. Reports TTFT,
+    per-token decode latency, and end-to-end tokens/s. Wall-clock numbers
+    track CPU code-path cost across PRs, not TPU throughput."""
+    import numpy as np
+
+    from repro.configs.base import get_config
+    from repro.serving import ServeEngine
+
+    cfg = get_config("granite-moe-3b-a800m-smoke")
+    eng = ServeEngine(cfg, max_seq=64, batch_size=slots, seed=seed, chunk=8)
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(mean_interarrival_steps,
+                                         size=n_requests)).astype(int)
+    prompts = [rng.integers(1, cfg.vocab_size,
+                            size=int(rng.integers(3, 17))).tolist()
+               for _ in range(n_requests)]
+
+    import time
+    t0 = time.perf_counter()
+    nxt = 0
+    while nxt < n_requests or eng.pending:
+        while nxt < n_requests and arrivals[nxt] <= eng.decode_steps:
+            eng.submit(prompts[nxt], max_new=max_new)
+            nxt += 1
+        if not eng.pending:                      # idle gap in the trace
+            eng.submit(prompts[nxt], max_new=max_new)
+            nxt += 1
+        eng.step()
+    wall = time.perf_counter() - t0
+
+    ttfts = [r.ttft_s for r in eng.finished.values()]
+    total_new = sum(len(r.tokens) for r in eng.finished.values())
+    res = {
+        "n_requests": n_requests, "slots": slots,
+        "prefill_tokens": eng.prefill_tokens,
+        "decode_steps": eng.decode_steps,
+        "generated_tokens": total_new,
+        "ttft_s_mean": float(np.mean(ttfts)),
+        "ttft_s_max": float(np.max(ttfts)),
+        "decode_tok_latency_s": eng.decode_s / max(1, eng.decode_tokens),
+        "tokens_per_s": (eng.prefill_tokens + total_new) / wall,
+        "prefill_s": eng.prefill_s, "decode_s": eng.decode_s,
+        "wall_s": wall,
+    }
+    print(f"\n# serving_trace (Poisson arrivals, {slots} slots, "
+          f"{n_requests} requests, CPU smoke arch)")
+    print(f"ttft mean {res['ttft_s_mean']*1e3:.1f}ms  per-token decode "
+          f"{res['decode_tok_latency_s']*1e3:.1f}ms  "
+          f"{res['tokens_per_s']:.0f} tok/s  "
+          f"({eng.prefill_tokens} prefill + {total_new} decoded)")
+    return res
+
+
+def serving_bench():
+    """The PR 4 serving figure set: modeled decode-plan quality + a real
+    Poisson-trace run through the continuous-batching engine."""
+    return {"decode_plans": serving_decode_plan_table(),
+            "trace": serving_trace_bench()}
+
+
 def _jsonable(obj):
     """Figures return numpy scalars/tuple keys — normalize for json.dump."""
     if isinstance(obj, dict):
@@ -382,6 +490,7 @@ def main(argv=None) -> int:
             "micro": _jsonable(kernel_microbench()),
             "hbm_hot_path": _jsonable(hbm_hot_path_table()),
             "bwd_overlap": _jsonable(bwd_overlap_table()),
+            "serving": _jsonable(serving_bench()),
             "validation_failures": fails,
         }
         with open(args.json, "w") as f:

@@ -1,6 +1,7 @@
-"""Batched serving example: prefill a batch of prompts through a small MoE
-model, then greedy-decode with the KV-cache decode step (the path the
-decode_32k / long_500k dry-run cells lower at production scale).
+"""Continuous-batching serving example: requests are SUBMITTED at staggered
+times while the engine decodes, late arrivals are admitted into slots freed
+by finished requests (chunked prefill into the slot's cache region), and the
+decode batch advances every live slot at its own position.
 
 Run:  PYTHONPATH=src python examples/serve_batched.py --arch granite-moe-3b-a800m-smoke
 """
@@ -16,29 +17,65 @@ from repro.serving import ServeEngine
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-moe-3b-a800m-smoke")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--max-new", type=int, default=24)
-    ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--slots", type=int, default=2,
+                    help="decode slots — fewer than requests, so the "
+                         "example shows mid-flight slot reuse")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--max-seq", type=int, default=64)
+    ap.add_argument("--chunk", type=int, default=8)
+    ap.add_argument("--arrival-every", type=int, default=3,
+                    help="submit a new request every N decode steps")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     print(f"serving {cfg.name} (vocab={cfg.vocab_size}, "
-          f"{cfg.param_count()/1e6:.1f}M params)")
-    eng = ServeEngine(cfg, max_seq=args.max_seq, batch_size=args.batch)
+          f"{cfg.param_count()/1e6:.1f}M params) — {args.slots} slots, "
+          f"{args.requests} requests, chunked prefill x{args.chunk}")
+    eng = ServeEngine(cfg, max_seq=args.max_seq, batch_size=args.slots,
+                      chunk=args.chunk)
 
     rng = np.random.default_rng(0)
     prompts = [rng.integers(1, cfg.vocab_size,
-                            size=rng.integers(4, 17)).tolist()
-               for _ in range(args.batch)]
+                            size=int(rng.integers(4, 17))).tolist()
+               for _ in range(args.requests)]
+
+    # staggered arrivals: one new request every --arrival-every decode
+    # steps — late requests land in slots freed by earlier ones
     t0 = time.perf_counter()
-    res = eng.generate(prompts, max_new=args.max_new)
+    submitted = {}
+    next_req = 0
+    while next_req < len(prompts) or eng.pending:
+        # idle gap in the arrival schedule (everything drained before the
+        # next threshold): admit the next request now, decode_steps only
+        # advances while slots are live
+        if next_req < len(prompts) and (
+                not eng.pending or eng.decode_steps >=
+                next_req * args.arrival_every):
+            rid = eng.submit(prompts[next_req], max_new=args.max_new)
+            submitted[rid] = next_req
+            print(f"  t={eng.decode_steps:3d} steps: submit req{next_req} "
+                  f"[{len(prompts[next_req])} toks]")
+            next_req += 1
+        was = [None if s is None else s.rid for s in eng.slot_req]
+        eng.step()
+        for slot, req in enumerate(eng.slot_req):
+            if req is not None and was[slot] != req.rid:
+                reused = " (reused)" if eng.admissions > args.slots else ""
+                print(f"  t={eng.decode_steps:3d} steps: "
+                      f"req{submitted[req.rid]} -> slot {slot}{reused}")
     dt = time.perf_counter() - t0
 
-    for i, (p, row) in enumerate(zip(prompts, res.tokens)):
-        print(f"req{i}: prompt[{len(p)} toks] -> {row[:10].tolist()}...")
-    tput = (res.prefill_tokens + res.decode_steps * args.batch) / dt
-    print(f"\nprefill {res.prefill_tokens} toks + {res.decode_steps} decode "
-          f"steps x{args.batch} in {dt:.2f}s  ({tput:.0f} tok/s on CPU)")
+    print()
+    for rid, req in sorted(eng.finished.items()):
+        i = submitted[rid]
+        print(f"req{i}: prompt[{len(prompts[i])} toks] -> "
+              f"{req.tokens[:8]}...  ttft {req.ttft_s*1e3:.0f}ms")
+    tput = (eng.prefill_tokens + eng.decode_tokens) / dt
+    print(f"\n{eng.admissions} admissions into {args.slots} slots, "
+          f"{eng.prefill_tokens} prefill toks + {eng.decode_steps} decode "
+          f"steps in {dt:.2f}s  ({tput:.0f} tok/s on CPU; prefill "
+          f"{eng.prefill_s:.2f}s / decode {eng.decode_s:.2f}s)")
 
 
 if __name__ == "__main__":

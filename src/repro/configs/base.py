@@ -38,10 +38,10 @@ class MoEConfig:
                                        # consumer) instead of after the
                                        # full-width concatenation
     gemm_impl: str = ""                # GroupGEMM backend (xla | pallas |
-                                       # pallas_fused); "" = the ambient
-                                       # transport.GEMM_IMPL default. Set by
-                                       # Plan.apply — threaded explicitly,
-                                       # never via a module global.
+                                       # pallas_fused); "" = the static
+                                       # "xla" default. Set by Plan.apply —
+                                       # threaded explicitly, never via a
+                                       # module global.
     coarse_chunks: int = 2             # FasterMoE-style pipeline degree
     # Adaptive transport autotuner (core/adaptive.py): path to a JSON plan
     # cache; "" disables lookup (the knobs above then apply verbatim). With a
@@ -51,6 +51,11 @@ class MoEConfig:
     plan_override: bool = False
     plan_hw: str = ""                  # hardware key for plan lookup;
                                        # "" -> $REPRO_PLAN_HW or tpu_v5e
+    plan_phase: str = "train"          # latency phase for plan lookup
+                                       # (train | prefill | decode): serving
+                                       # step builders set it so decode
+                                       # resolves latency-ranked plans,
+                                       # prefill chunk-throughput ones
 
 
 @dataclass(frozen=True)

@@ -184,8 +184,12 @@ class AdaptiveCache:
                 self.table = json.load(f)
 
     @staticmethod
-    def key(s: MoEShape, hw: Hardware) -> str:
-        return f"{hw.name}:M{s.M}:N{s.N}:K{s.K}:E{s.E}:k{s.topk}:ep{s.ep}:etp{s.etp}"
+    def key(s: MoEShape, hw: Hardware, phase: str = "train") -> str:
+        base = (f"{hw.name}:M{s.M}:N{s.N}:K{s.K}:E{s.E}:k{s.topk}"
+                f":ep{s.ep}:etp{s.etp}")
+        # the train phase keeps the historical unqualified key so every
+        # pre-v4 cache entry keeps resolving; serving phases qualify it
+        return base if phase in ("", "train") else f"{base}:ph{phase}"
 
     def get(self, s: MoEShape, hw: Hardware) -> Optional[Dict]:
         return self.table.get(self.key(s, hw))
@@ -247,9 +251,21 @@ def resolve_n_col(mcfg, cfg_d_model: int, tokens_local: int,
 #     and ``objective`` records what the ranking covered. Knobs are stored
 #     LEGALIZED (see ``legalize_plan``). v1/v2 caches load unchanged —
 #     ``Plan.from_json`` defaults the missing fields (objective="fwd").
-PLAN_CACHE_VERSION = 3
+#   v4 (PR 4) — keys gained a LATENCY PHASE: ``train`` plans keep the
+#     unqualified v3 key (ranked fwd+bwd as before, so every pre-v4 cache
+#     still loads and resolves), while ``:phprefill`` / ``:phdecode``
+#     entries rank on forward-only objectives — decode on per-step latency
+#     (tiny-M shapes where the constant terms legalize toward bcast /
+#     small ring groups; no backward exists at inference), prefill on
+#     chunk throughput. ``Plan.phase`` records which ranking produced it.
+PLAN_CACHE_VERSION = 4
 
 TRANSPORTS = ("naive", "coarse", "comet", "bcast")
+PLAN_PHASES = ("train", "prefill", "decode")
+
+# what each phase's ranking objective covers (persisted in Plan.objective)
+PHASE_OBJECTIVES = {"train": "fwd_bwd", "prefill": "prefill_tput",
+                    "decode": "decode_latency"}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -265,7 +281,9 @@ class Plan:
     measured_s: float = 0.0
     source: str = "model"
     t_bwd_s: float = 0.0               # backward component of measured_s
-    objective: str = "fwd_bwd"         # what measured_s ranked: fwd | fwd_bwd
+    objective: str = "fwd_bwd"         # what measured_s ranked: fwd |
+                                       # fwd_bwd | prefill_tput | decode_latency
+    phase: str = "train"               # latency phase the plan was ranked for
 
     def to_json(self) -> Dict:
         return dataclasses.asdict(self)
@@ -309,8 +327,8 @@ class PlanCache:
             self.load(path)
 
     @staticmethod
-    def key(s: MoEShape, hw: Hardware) -> str:
-        return AdaptiveCache.key(s, hw)
+    def key(s: MoEShape, hw: Hardware, phase: str = "train") -> str:
+        return AdaptiveCache.key(s, hw, phase)
 
     def load(self, path: str):
         try:
@@ -345,11 +363,13 @@ class PlanCache:
                       f, indent=1)
         os.replace(tmp, path)
 
-    def get(self, s: MoEShape, hw: Hardware) -> Optional[Plan]:
-        return self.plans.get(self.key(s, hw))
+    def get(self, s: MoEShape, hw: Hardware,
+            phase: str = "train") -> Optional[Plan]:
+        return self.plans.get(self.key(s, hw, phase))
 
-    def put(self, s: MoEShape, hw: Hardware, plan: Plan, save: bool = True):
-        self.plans[self.key(s, hw)] = plan
+    def put(self, s: MoEShape, hw: Hardware, plan: Plan, save: bool = True,
+            phase: str = "train"):
+        self.plans[self.key(s, hw, phase)] = plan
         if save and self.path:
             self.save()
 
@@ -660,26 +680,44 @@ def _a2a_rate(hw: Hardware) -> float:
 
 
 def modeled_step_time(hw: Hardware, s: MoEShape, plan: Plan) -> float:
-    """The v3 ranking metric: one MoE layer's forward + backward."""
+    """The train-phase ranking metric: one MoE layer's forward + backward."""
     return modeled_plan_time(hw, s, plan) + modeled_plan_time_bwd(hw, s, plan)
+
+
+def phase_measure(hw: Hardware, s: MoEShape,
+                  phase: str) -> Callable[[Plan], float]:
+    """The analytical ranking objective for a latency phase: training ranks
+    fwd+bwd (~2/3 of a step is backward); serving phases rank FORWARD ONLY —
+    decode on per-step latency (no backward exists at inference; at tiny M
+    the constant terms push toward bcast / small ring groups), prefill on
+    chunk walltime (throughput = chunk tokens / this)."""
+    if phase == "train":
+        return lambda p: modeled_step_time(hw, s, p)
+    return lambda p: modeled_plan_time(hw, s, p)
 
 
 def tune_plan(s: MoEShape, hw: Hardware, cache: Optional[PlanCache] = None,
               measure: Optional[Callable[[Plan], float]] = None,
               candidates: Optional[Iterable[Plan]] = None,
-              force: bool = False, objective: str = "fwd_bwd") -> Plan:
-    """Pick the fastest plan for ``s`` on ``hw``.
+              force: bool = False, objective: Optional[str] = None,
+              phase: str = "train") -> Plan:
+    """Pick the fastest plan for ``s`` on ``hw`` for a latency ``phase``.
 
     ``measure`` is a callable Plan -> seconds timing a REAL execution (see
     ``make_timing_measure``, which can time a full fwd+bwd); when None the
-    analytical model ranks the candidates on modeled FORWARD + BACKWARD
-    time. ``objective`` records what the supplied measure covered — pass
-    "fwd" with a forward-only measure so the persisted provenance is
-    truthful. Candidates are legalized (``legalize_plan``) before ranking
-    and the winner is stored LEGALIZED in ``cache`` (if given) under the
-    (M, d, f, E, topk, ep, etp, hw) key and returned."""
+    analytical model ranks the candidates on the phase objective
+    (``phase_measure``: train = fwd+bwd, prefill/decode = fwd-only).
+    ``objective`` records what the supplied measure covered — pass "fwd"
+    with a forward-only measure so the persisted provenance is truthful;
+    None defaults to the phase's objective name. Candidates are legalized
+    (``legalize_plan``) before ranking and the winner is stored LEGALIZED
+    in ``cache`` (if given) under the phase-qualified
+    (M, d, f, E, topk, ep, etp, hw[, phase]) key and returned."""
+    assert phase in PLAN_PHASES, phase
+    if objective is None:
+        objective = PHASE_OBJECTIVES[phase]
     if cache is not None and not force:
-        hit = cache.get(s, hw)
+        hit = cache.get(s, hw, phase)
         if hit is not None:
             return hit
     cands = list(candidates) if candidates is not None \
@@ -697,8 +735,7 @@ def tune_plan(s: MoEShape, hw: Hardware, cache: Optional[PlanCache] = None,
             uniq.append(p)
     cands = uniq
     source = "measured" if measure is not None else "model"
-    meas = measure if measure is not None \
-        else (lambda p: modeled_step_time(hw, s, p))
+    meas = measure if measure is not None else phase_measure(hw, s, phase)
     best: Optional[Plan] = None
     best_t = math.inf
     failed = []
@@ -715,23 +752,26 @@ def tune_plan(s: MoEShape, hw: Hardware, cache: Optional[PlanCache] = None,
         p0, e0 = failed[0]
         warnings.warn(
             f"tune_plan: {len(failed)}/{len(cands)} candidates failed for "
-            f"{PlanCache.key(s, hw)} (first: {p0.impl} rg{p0.ring_group} "
-            f"nc{p0.n_col_blocks} {p0.gemm_impl}: {e0!r}); the tuned result "
-            "only ranks the surviving candidates", stacklevel=2)
+            f"{PlanCache.key(s, hw, phase)} (first: {p0.impl} "
+            f"rg{p0.ring_group} nc{p0.n_col_blocks} {p0.gemm_impl}: {e0!r}); "
+            "the tuned result only ranks the surviving candidates",
+            stacklevel=2)
     if best is None:
         raise RuntimeError(f"no candidate plan measurable for {s}")
-    t_bwd = modeled_plan_time_bwd(hw, s, best) if measure is None else 0.0
+    t_bwd = (modeled_plan_time_bwd(hw, s, best)
+             if measure is None and phase == "train" else 0.0)
     best = dataclasses.replace(best, measured_s=best_t, source=source,
-                               t_bwd_s=t_bwd, objective=objective)
+                               t_bwd_s=t_bwd, objective=objective,
+                               phase=phase)
     if cache is not None:
-        cache.put(s, hw, best)
+        cache.put(s, hw, best, phase=phase)
     return best
 
 
-def analytic_plan(s: MoEShape, hw: Hardware) -> Plan:
+def analytic_plan(s: MoEShape, hw: Hardware, phase: str = "train") -> Plan:
     """Model-ranked plan — what moe_layer falls back to when the configured
     cache file is missing or has no entry for this shape."""
-    return tune_plan(s, hw, cache=None, measure=None)
+    return tune_plan(s, hw, cache=None, measure=None, phase=phase)
 
 
 def make_timing_measure(cfg, mcfg, params, x, ctx, iters: int = 3,
@@ -812,14 +852,20 @@ def plan_lookup_enabled(mcfg) -> bool:
 
 
 def resolve_plan(mcfg, d_model: int, tokens_local: int, ep: int, etp: int,
-                 hw: Optional[Hardware] = None) -> Optional[Plan]:
+                 hw: Optional[Hardware] = None,
+                 phase: Optional[str] = None) -> Optional[Plan]:
     """Schedule lookup for moe_layer. Returns None when plan resolution is
     disabled (no cache configured, or the explicit-override escape hatch is
-    set); otherwise the cached plan for this shape, falling back to the
-    analytical model when the cache file or entry is absent. The hardware
-    key comes from ``hw`` > ``mcfg.plan_hw`` > $REPRO_PLAN_HW > tpu_v5e."""
+    set); otherwise the cached plan for this shape and latency phase,
+    falling back to the analytical model (phase objective) when the cache
+    file or entry is absent. The phase comes from ``phase`` >
+    ``mcfg.plan_phase`` > "train" (pre-v4 caches hold only unqualified
+    train keys, which keep resolving); the hardware key from ``hw`` >
+    ``mcfg.plan_hw`` > $REPRO_PLAN_HW > tpu_v5e."""
     if not plan_lookup_enabled(mcfg):
         return None
+    if phase is None:
+        phase = getattr(mcfg, "plan_phase", "") or "train"
     if hw is None:
         name = getattr(mcfg, "plan_hw", "") \
             or os.environ.get("REPRO_PLAN_HW", "")
@@ -833,13 +879,13 @@ def resolve_plan(mcfg, d_model: int, tokens_local: int, ep: int, etp: int,
         or os.environ.get("REPRO_PLAN_CACHE", "")
     s = plan_shape(mcfg, d_model, tokens_local, ep, etp)
     cache = load_plan_cache(path)
-    plan = cache.get(s, hw)
+    plan = cache.get(s, hw, phase)
     if plan is None:
-        plan = analytic_plan(s, hw)
+        plan = analytic_plan(s, hw, phase)
         # memoize in the loaded (in-memory) cache only — repeated traces of
         # the same shape must not repeat the candidate search, and a later
         # rewrite of the file invalidates this via the mtime check
-        cache.plans[cache.key(s, hw)] = plan
+        cache.plans[cache.key(s, hw, phase)] = plan
     # pre-v3 (or hand-written) cache entries may carry knobs the transport
     # would silently re-legalize; resolve to the executable schedule HERE so
     # the applied plan and the cost model agree with what runs

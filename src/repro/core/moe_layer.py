@@ -233,7 +233,7 @@ def moe_ffn(cfg, mcfg, params, x, ctx: AxisCtx,
     if n_col == 0:
         n_col = A.resolve_n_col(mcfg, cfg.d_model, toks_local,
                                 ctx.ep, ctx.etp)
-    gemm_impl = mcfg.gemm_impl or T.GEMM_IMPL
+    gemm_impl = T._impl(mcfg.gemm_impl)
     router_w = params["router"]
     experts = {k: v for k, v in params["experts"].items()}
 

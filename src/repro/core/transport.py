@@ -42,8 +42,8 @@ backends additionally save the layer-0 pre-activations (exactly what XLA
 autodiff would save), so their backward spends no GEMM recompute.
 
 The GroupGEMM backend is threaded EXPLICITLY (``gemm_impl=``) through every
-entry point; ``GEMM_IMPL`` is only the ambient default for callers that do
-not choose — library code never mutates it.
+entry point; a caller that does not choose gets the static ``"xla"``
+default (``DEFAULT_GEMM_IMPL`` — a constant, not a mutable global).
 """
 from __future__ import annotations
 
@@ -71,21 +71,15 @@ from repro.parallel.mesh import AxisCtx
 #                    kernel, hidden activations VMEM-resident (no
 #                    (E_loc, R, f_loc) HBM round trip).
 GEMM_BACKENDS = ("xla", "pallas", "pallas_fused")
-GEMM_IMPL = "xla"
-
-
-def set_gemm_impl(name: str):
-    """Set the ambient DEFAULT backend (used when a caller passes
-    gemm_impl=None). Plan-driven callers thread the backend explicitly via
-    ``MoEConfig.gemm_impl`` instead of mutating this."""
-    global GEMM_IMPL
-    assert name in GEMM_BACKENDS, name
-    GEMM_IMPL = name
+DEFAULT_GEMM_IMPL = "xla"
 
 
 def _impl(gemm_impl: Optional[str]) -> str:
+    """Resolve a caller's backend choice; None/"" is the STATIC "xla"
+    default — there is no mutable ambient global, the backend is always
+    either explicit (MoEConfig.gemm_impl, set by Plan.apply) or "xla"."""
     if gemm_impl is None or gemm_impl == "":
-        return GEMM_IMPL
+        return DEFAULT_GEMM_IMPL
     assert gemm_impl in GEMM_BACKENDS, gemm_impl
     return gemm_impl
 

@@ -58,7 +58,7 @@ def run_cell(cfg, shape, mesh, n_chips, impl, out_dir=None, verbose=True):
     else:  # decode: serve_step = one new token against a seq_len KV cache
         built = build_decode_step(cfg, shape, mesh)
         args = (built["params_abstract"], built["cache_abstract"],
-                built["tok"], built["pos"])
+                built["tok"], built["pos"], built["live"])
         jitted = built["jit"]
 
     lowered = jitted.lower(*args)

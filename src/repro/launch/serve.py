@@ -1,7 +1,8 @@
-"""Serving launcher CLI: batched prefill + greedy decode.
+"""Serving launcher CLI: continuous-batching engine (chunked prefill +
+slot-based decode), with tuned per-phase plans.
 
   PYTHONPATH=src python -m repro.launch.serve --arch granite-moe-3b-a800m-smoke \
-      --batch 4 --max-new 16
+      --batch 4 --max-new 16 --plan-cache plans/tpu_v5e.json --plan-hw tpu_v5e
 """
 import argparse
 import time
@@ -12,11 +13,21 @@ import numpy as np
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="decode slots (requests in flight)")
+    ap.add_argument("--requests", type=int, default=0,
+                    help="total requests to serve (default: --batch)")
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--chunk", type=int, default=0,
+                    help="prefill chunk size (0 = min(32, max_seq))")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--plan-cache", default=None,
+                    help="tuned plan cache JSON; phase-qualified entries "
+                         "(:phprefill/:phdecode) schedule the serving steps")
+    ap.add_argument("--plan-hw", default="",
+                    help="hardware key for plan lookup (default tpu_v5e)")
     args = ap.parse_args()
 
     from repro.configs.base import get_config
@@ -24,17 +35,25 @@ def main():
 
     cfg = get_config(args.arch)
     eng = ServeEngine(cfg, max_seq=args.max_seq, batch_size=args.batch,
-                      seed=args.seed)
+                      seed=args.seed, plan_cache=args.plan_cache,
+                      plan_hw=args.plan_hw, chunk=args.chunk)
     rng = np.random.default_rng(args.seed)
+    n_req = args.requests or args.batch
     prompts = [rng.integers(1, cfg.vocab_size, size=args.prompt_len).tolist()
-               for _ in range(args.batch)]
+               for _ in range(n_req)]
     t0 = time.perf_counter()
     res = eng.generate(prompts, max_new=args.max_new)
     dt = time.perf_counter() - t0
     for i, row in enumerate(res.tokens):
         print(f"req{i}: {row.tolist()}")
+    tput = (res.prefill_tokens + eng.decode_tokens) / dt
     print(f"{res.prefill_tokens} prefill toks + {res.decode_steps} decode "
-          f"steps x{args.batch} in {dt:.2f}s")
+          f"steps ({eng.decode_tokens} toks) across {args.batch} slots / "
+          f"{n_req} requests in {dt:.2f}s  ({tput:.0f} tok/s)")
+    print(f"phase timings: prefill {eng.prefill_s:.2f}s "
+          f"({eng.prefill_tokens / max(eng.prefill_s, 1e-9):.0f} tok/s), "
+          f"decode {eng.decode_s:.2f}s "
+          f"({eng.decode_s / max(eng.decode_steps, 1) * 1e3:.1f} ms/step)")
 
 
 if __name__ == "__main__":

@@ -32,14 +32,18 @@ def _named(mesh, tree):
 
 
 def _with_plan_cache(cfg: ModelConfig, plan_cache: Optional[str],
-                     plan_hw: str = "") -> ModelConfig:
-    """Thread a tuned-plan cache path into the MoE config so every moe_ffn
-    under this step resolves its transport schedule from the cache."""
+                     plan_hw: str = "",
+                     phase: str = "train") -> ModelConfig:
+    """Thread a tuned-plan cache path + latency phase into the MoE config so
+    every moe_ffn under this step resolves its transport schedule from the
+    phase-qualified cache entry (decode steps get latency-ranked plans,
+    prefill chunk-throughput ones, train fwd+bwd)."""
     if not plan_cache or cfg.moe is None:
         return cfg
     return dataclasses.replace(
         cfg, moe=dataclasses.replace(cfg.moe, plan_cache=plan_cache,
-                                     plan_hw=plan_hw, plan_override=False))
+                                     plan_hw=plan_hw, plan_override=False,
+                                     plan_phase=phase))
 
 
 def state_specs(cfg: ModelConfig, ctx: AxisCtx, fsdp: bool = True):
@@ -137,7 +141,7 @@ def build_train_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Optional[Mesh],
 def build_prefill_step(cfg: ModelConfig, shape: ShapeConfig,
                        mesh: Optional[Mesh], fsdp: bool = True,
                        plan_cache: Optional[str] = None, plan_hw: str = ""):
-    cfg = _with_plan_cache(cfg, plan_cache, plan_hw)
+    cfg = _with_plan_cache(cfg, plan_cache, plan_hw, phase="prefill")
     ctx = make_ctx(cfg, mesh, seq_shard=True)
 
     def fn(params, batch):
@@ -157,32 +161,87 @@ def build_prefill_step(cfg: ModelConfig, shape: ShapeConfig,
             "params_abstract": params_abs, "param_pspecs": pspecs, "ctx": ctx}
 
 
+def build_prefill_chunk_step(cfg: ModelConfig, shape: ShapeConfig,
+                             mesh: Optional[Mesh], chunk: int = 0,
+                             fsdp: bool = True,
+                             plan_cache: Optional[str] = None,
+                             plan_hw: str = ""):
+    """Chunked-prefill step for the continuous-batching engine: one prompt
+    chunk (``chunk`` tokens, batch 1; 0 = min(32, seq_len)) against one
+    SLOT of the decode cache described by ``shape`` — the SAME
+    (global_batch slots, seq_len cache) geometry as ``build_decode_step``,
+    so on a mesh both steps compile identical shardings for the donated
+    cache they share. The slot index is a traced argument, so a single
+    compiled function admits requests into any slot. Prefill-phase plans
+    (chunk-throughput objective) resolve from the cache when threaded in."""
+    cfg = _with_plan_cache(cfg, plan_cache, plan_hw, phase="prefill")
+    ctx = make_ctx(cfg, mesh, seq_shard=False)
+    C = chunk or min(32, shape.seq_len)
+
+    def fn(params, cache, tokens, pos_off, valid_len, slot):
+        return lm.prefill_chunk(cfg, params, cache, tokens, pos_off,
+                                valid_len, ctx, slot=slot)
+
+    cache_abs, cspecs, _tok, _tok_spec = SP.decode_inputs(cfg, shape, ctx)
+    params_abs = lm.abstract_params(cfg, ctx)
+    tokens = SP.sds((1, C), jnp.int32)
+    scalar = jax.ShapeDtypeStruct((), jnp.int32)
+    base = {"fn": fn, "cache_abstract": cache_abs, "tokens": tokens,
+            "params_abstract": params_abs, "ctx": ctx, "chunk": C,
+            "scalar": scalar}
+    if mesh is None:
+        base["jit"] = jax.jit(fn, donate_argnums=1)
+        return base
+    schema = lm.model_schema(cfg, ctx)
+    pspecs = param_specs(schema, mesh, fsdp)
+    cache_sh = _named(mesh, SP.cache_leaf_specs(cache_abs, cspecs))
+    rep = NamedSharding(mesh, P())
+    in_sh = (_named(mesh, pspecs), cache_sh,
+             NamedSharding(mesh, P(None, None)), rep, rep, rep)
+    out_sh = (NamedSharding(mesh, P(None, None)), cache_sh)
+    base["jit"] = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                          donate_argnums=1)
+    base["param_pspecs"] = pspecs
+    base["cache_pspecs"] = cspecs
+    return base
+
+
 def build_decode_step(cfg: ModelConfig, shape: ShapeConfig,
                       mesh: Optional[Mesh], fsdp: bool = True,
                       plan_cache: Optional[str] = None, plan_hw: str = ""):
-    cfg = _with_plan_cache(cfg, plan_cache, plan_hw)
+    """Slot-based decode step: per-row positions (every in-flight request at
+    its own sequence index), a live-slot mask (retired/free slots emit token
+    0 and are ignored by the scheduler), donated cache. Decode-phase plans
+    (latency objective) resolve from the cache when one is threaded in."""
+    cfg = _with_plan_cache(cfg, plan_cache, plan_hw, phase="decode")
     ctx = make_ctx(cfg, mesh, seq_shard=False)
+    B = shape.global_batch
 
-    def fn(params, cache, tokens, pos):
-        logits, new_cache = lm.decode_step(cfg, params, cache, tokens, pos, ctx)
+    def fn(params, cache, tokens, pos, live):
+        logits, new_cache = lm.decode_step(cfg, params, cache, tokens, pos,
+                                           ctx)
         next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        next_tok = jnp.where(live[:, None], next_tok, 0)
         return next_tok, logits, new_cache
 
     cache_abs, cspecs, tok, tok_spec = SP.decode_inputs(cfg, shape, ctx)
     params_abs = lm.abstract_params(cfg, ctx)
-    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    pos = jax.ShapeDtypeStruct((B,), jnp.int32)
+    live = jax.ShapeDtypeStruct((B,), jnp.bool_)
     if mesh is None:
         return {"fn": fn, "jit": jax.jit(fn, donate_argnums=1),
                 "cache_abstract": cache_abs, "tok": tok,
-                "params_abstract": params_abs, "ctx": ctx, "pos": pos}
+                "params_abstract": params_abs, "ctx": ctx, "pos": pos,
+                "live": live}
     schema = lm.model_schema(cfg, ctx)
     pspecs = param_specs(schema, mesh, fsdp)
     cache_sh = _named(mesh, SP.cache_leaf_specs(cache_abs, cspecs))
+    row_spec = NamedSharding(mesh, P(*tok_spec[:1]))
     in_sh = (_named(mesh, pspecs), cache_sh, NamedSharding(mesh, tok_spec),
-             NamedSharding(mesh, P()))
+             row_spec, row_spec)
     out_sh = (NamedSharding(mesh, tok_spec), None, cache_sh)
     jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
                      donate_argnums=1)
     return {"fn": fn, "jit": jitted, "cache_abstract": cache_abs, "tok": tok,
             "params_abstract": params_abs, "param_pspecs": pspecs,
-            "cache_pspecs": cspecs, "ctx": ctx, "pos": pos}
+            "cache_pspecs": cspecs, "ctx": ctx, "pos": pos, "live": live}

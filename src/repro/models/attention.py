@@ -96,16 +96,19 @@ def dense_attention(q, k, v, causal: bool, q_offset: int = 0,
 
 
 def chunked_attention(q, k, v, causal: bool, q_block: int, kv_block: int,
-                      q_offset: int = 0, q_pos=None, kv_pos=None) -> jnp.ndarray:
+                      q_offset: int = 0, q_pos=None, kv_pos=None,
+                      kv_mask=None) -> jnp.ndarray:
     """Flash-style two-level scan: outer over q blocks, inner over kv blocks
-    with running (max, sum, acc). Memory O(q_block * kv_block)."""
+    with running (max, sum, acc). Memory O(q_block * kv_block).
+    kv_mask: optional (B, Sk) validity — masked kv columns are excluded
+    (pad-token exclusion for mixed-length batched prefill)."""
     B, Sq, H, hd = q.shape
     Sk = k.shape[1]
     q_block = min(q_block, Sq)
     kv_block = min(kv_block, Sk)
     if Sq % q_block or Sk % kv_block:
         return dense_attention(q, k, v, causal, q_offset,
-                               q_pos=q_pos, kv_pos=kv_pos)
+                               kv_mask=kv_mask, q_pos=q_pos, kv_pos=kv_pos)
     k = _expand_kv(k, H)
     v = _expand_kv(v, H)
     scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
@@ -120,6 +123,11 @@ def chunked_attention(q, k, v, causal: bool, q_block: int, kv_block: int,
     vb = v.reshape(B, nk, kv_block, H, hd).transpose(1, 0, 3, 2, 4)
     qpb = q_pos.reshape(B, nq, q_block).swapaxes(0, 1)               # (nq,B,qb)
     kpb = kv_pos.reshape(B, nk, kv_block).swapaxes(0, 1)             # (nk,B,kb)
+    # the pad-mask select is only scanned in when a mask is actually passed
+    # — the maskless training/prefill hot path keeps its pre-serving shape
+    kmb = (None if kv_mask is None else
+           jnp.broadcast_to(kv_mask, (B, Sk))
+           .reshape(B, nk, kv_block).swapaxes(0, 1))                 # (nk,B,kb)
 
     def q_step(_, qi_and_block):
         qpos, qblk = qi_and_block
@@ -130,11 +138,16 @@ def chunked_attention(q, k, v, causal: bool, q_block: int, kv_block: int,
 
         def kv_step(carry, ki_and_block):
             m, l, acc = carry
-            kpos, kblk, vblk = ki_and_block
+            if kmb is None:
+                kpos, kblk, vblk = ki_and_block
+            else:
+                kpos, kmask, kblk, vblk = ki_and_block
             s = jnp.einsum("bhqd,bhkd->bhqk", qblk, kblk.astype(jnp.float32))
             if causal:
                 mask = kpos[:, None, None, :] <= qpos[:, None, :, None]
                 s = jnp.where(mask, s, NEG_INF)
+            if kmb is not None:
+                s = jnp.where(kmask[:, None, None, :], s, NEG_INF)
             m_new = jnp.maximum(m, jnp.max(s, axis=-1))
             p = jnp.exp(s - m_new[..., None])
             corr = jnp.exp(m - m_new)
@@ -143,7 +156,8 @@ def chunked_attention(q, k, v, causal: bool, q_block: int, kv_block: int,
                 "bhqk,bhkd->bhqd", p, vblk.astype(jnp.float32))
             return (m_new, l_new, acc_new), None
 
-        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (kpb, kb, vb))
+        xs = (kpb, kb, vb) if kmb is None else (kpb, kmb, kb, vb)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), xs)
         out = acc / jnp.maximum(l[..., None], 1e-30)
         return None, out
 
@@ -154,13 +168,13 @@ def chunked_attention(q, k, v, causal: bool, q_block: int, kv_block: int,
 
 def attention(q, k, v, causal: bool, q_block: int = 512, kv_block: int = 1024,
               q_offset: int = 0, dense_threshold: int = 1024,
-              q_pos=None, kv_pos=None) -> jnp.ndarray:
+              q_pos=None, kv_pos=None, kv_mask=None) -> jnp.ndarray:
     Sq, Sk = q.shape[1], k.shape[1]
     if Sq * Sk <= dense_threshold * dense_threshold:
-        return dense_attention(q, k, v, causal, q_offset,
+        return dense_attention(q, k, v, causal, q_offset, kv_mask=kv_mask,
                                q_pos=q_pos, kv_pos=kv_pos)
     return chunked_attention(q, k, v, causal, q_block, kv_block, q_offset,
-                             q_pos=q_pos, kv_pos=kv_pos)
+                             q_pos=q_pos, kv_pos=kv_pos, kv_mask=kv_mask)
 
 
 # ---------------------------------------------------------------------------
@@ -168,10 +182,19 @@ def attention(q, k, v, causal: bool, q_block: int = 512, kv_block: int = 1024,
 # ---------------------------------------------------------------------------
 
 
-def decode_attention(q, k_cache, v_cache, pos) -> jnp.ndarray:
-    """q: (B, 1, H, hd); caches: (B, S, Hkv, hd); pos: () current index.
-    Attends over cache[: pos+1] via masking (fixed-size cache = production
-    decode; the memory-roofline term reads the full cache, as real HW does)."""
+def _pos_col(pos):
+    """Normalize a ()/(B,) position to broadcast against (B, ·, ·, S)."""
+    pos = jnp.asarray(pos)
+    return pos.reshape((-1, 1, 1, 1)) if pos.ndim else pos
+
+
+def decode_attention(q, k_cache, v_cache, pos, kv_start=None) -> jnp.ndarray:
+    """q: (B, 1, H, hd); caches: (B, S, Hkv, hd); pos: () or (B,) per-row
+    current index (continuous batching decodes every slot at its OWN
+    position). Attends over cache[kv_start : pos+1] via masking (fixed-size
+    cache = production decode; the memory-roofline term reads the full
+    cache, as real HW does). kv_start: optional ()/(B,) first valid cache
+    index — left-padded rows exclude their pad region exactly."""
     B, S, Hkv, hd = k_cache.shape
     H = q.shape[2]
     k = _expand_kv(k_cache, H)
@@ -179,18 +202,23 @@ def decode_attention(q, k_cache, v_cache, pos) -> jnp.ndarray:
     scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
     s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
                    k.astype(jnp.float32)) * scale
-    valid = jnp.arange(S)[None, None, None, :] <= pos
+    ar = jnp.arange(S)[None, None, None, :]
+    valid = ar <= _pos_col(pos)
+    if kv_start is not None:
+        valid &= ar >= _pos_col(kv_start)
     s = jnp.where(valid, s, NEG_INF)
     w = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhqk,bkhd->bqhd", w, v.astype(jnp.float32))
     return out.astype(q.dtype)
 
 
-def decode_attention_partial(q, k_shard, v_shard, pos, kv_offset):
+def decode_attention_partial(q, k_shard, v_shard, pos, kv_offset,
+                             kv_start=None):
     """Flash-decode partial over a LOCAL kv shard. q: (B,1,H,hd); shards:
-    (B,S_loc,Hkv,hd); kv_offset: absolute position of shard row 0.
-    Returns (m, l, acc): running max (B,H,1), sum (B,H,1), acc (B,H,1,hd) —
-    merged across shards by the caller (pmax/psum), the split-KV scheme."""
+    (B,S_loc,Hkv,hd); pos: () or (B,); kv_offset: absolute position of shard
+    row 0. Returns (m, l, acc): running max (B,H,1), sum (B,H,1), acc
+    (B,H,1,hd) — merged across shards by the caller (pmax/psum), the
+    split-KV scheme."""
     B, S_loc, Hkv, hd = k_shard.shape
     H = q.shape[2]
     k = _expand_kv(k_shard, H)
@@ -198,7 +226,10 @@ def decode_attention_partial(q, k_shard, v_shard, pos, kv_offset):
     scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
     s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
                    k.astype(jnp.float32)) * scale
-    valid = (kv_offset + jnp.arange(S_loc))[None, None, None, :] <= pos
+    ar = (kv_offset + jnp.arange(S_loc))[None, None, None, :]
+    valid = ar <= _pos_col(pos)
+    if kv_start is not None:
+        valid &= ar >= _pos_col(kv_start)
     s = jnp.where(valid, s, NEG_INF)
     m = jnp.max(s, axis=-1)                                # (B,H,1)
     p = jnp.exp(s - m[..., None])
@@ -219,7 +250,20 @@ def merge_decode_partials(m, l, acc, axis_name):
 
 
 def update_cache(k_cache, v_cache, k_new, v_new, pos):
-    """Insert (B, 1, Hkv, hd) at position pos."""
-    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k_new.astype(k_cache.dtype), pos, axis=1)
-    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v_new.astype(v_cache.dtype), pos, axis=1)
+    """Insert (B, 1, Hkv, hd) at position pos — () shared across the batch,
+    or (B,) per-row write indices (slot-based decode: every slot is at its
+    own sequence position)."""
+    pos = jnp.asarray(pos)
+    if pos.ndim == 0:
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            k_cache, k_new.astype(k_cache.dtype), pos, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            v_cache, v_new.astype(v_cache.dtype), pos, axis=1)
+        return k_cache, v_cache
+
+    def row(c, n, p):
+        return jax.lax.dynamic_update_slice_in_dim(c, n, p, axis=0)
+
+    k_cache = jax.vmap(row)(k_cache, k_new.astype(k_cache.dtype), pos)
+    v_cache = jax.vmap(row)(v_cache, v_new.astype(v_cache.dtype), pos)
     return k_cache, v_cache

@@ -85,9 +85,10 @@ def attn_case(ctx: AxisCtx, a, Sq: int) -> str:
 
 
 def _attn_core(a, causal, use_rope, q_sharded, kv_sharded, mx,
-               q4, k4, v4, qp, kp):
+               q4, k4, v4, qp, kp, kvm):
     """Local (per-shard) attention body. q4: (B, Sq_l, H_l, hd);
-    k4/v4: (B, Sk, Hkv_l, hd); qp/kp: absolute positions (B, Sq_l)/(B, Sk).
+    k4/v4: (B, Sk, Hkv_l, hd); qp/kp: absolute positions (B, Sq_l)/(B, Sk);
+    kvm: (B, Sk) kv validity (pad mask) or None.
     Runs under shard_map so fwd AND bwd are collective-free inside."""
     if use_rope:
         q4 = A.apply_rope(q4, qp, a.rope_theta)
@@ -107,12 +108,14 @@ def _attn_core(a, causal, use_rope, q_sharded, kv_sharded, mx,
     ve = jnp.take(v4, kv_map, axis=2)
     with jax.named_scope("__fusable__flash"):
         o = A.attention(q4, ke, ve, causal=causal, q_block=a.q_block,
-                        kv_block=a.kv_block, q_pos=qp, kv_pos=kp)
+                        kv_block=a.kv_block, q_pos=qp, kv_pos=kp,
+                        kv_mask=kvm)
     return o, k_cache, v_cache
 
 
 def attn_apply(cfg, p, x, ctx: AxisCtx, positions, causal: bool,
-               use_rope: bool = True, kv_x=None, return_kv: bool = False):
+               use_rope: bool = True, kv_x=None, return_kv: bool = False,
+               kv_mask=None):
     a = cfg.attn
     src = x if kv_x is None else kv_x
     B, Sq, _ = x.shape
@@ -149,11 +152,14 @@ def attn_apply(cfg, p, x, ctx: AxisCtx, positions, causal: bool,
         # output, and real q head h keeps kv head h//rep < Hkv_real
         a = dataclasses.replace(a, n_heads=Hq_p, n_kv_heads=Hkv_p)
 
+    if kv_mask is not None:
+        kv_mask = jnp.broadcast_to(kv_mask, (B, Sk))
     case = attn_case(ctx, a, Sq)
     mx = ctx.model_axis
     if case == "none" or not ctx.active:
         o, kc, vc = _attn_core(a, causal, use_rope, False, False,
-                               None, q, k, v, positions, kv_positions)
+                               None, q, k, v, positions, kv_positions,
+                               kv_mask)
     else:
         dp = ctx.dp_axes if B % max(1, ctx.dp_size) == 0 else None
         q_sharded = case in ("heads", "qheads")
@@ -165,11 +171,21 @@ def attn_apply(cfg, p, x, ctx: AxisCtx, positions, causal: bool,
         qp_spec = P(dp, None) if q_sharded else P(dp, mx)
         body = partial(_attn_core, a, causal, use_rope, q_sharded,
                        kv_sharded, mx)
+        if kv_mask is None:
+            body_in = (lambda qq, kk, vv, qp, kp:
+                       body(qq, kk, vv, qp, kp, None))
+            specs = (q_spec, kv_spec, kv_spec, qp_spec, P(dp, None))
+            args = (q, k, v, positions, kv_positions)
+        else:
+            body_in = body
+            specs = (q_spec, kv_spec, kv_spec, qp_spec, P(dp, None),
+                     P(dp, None))
+            args = (q, k, v, positions, kv_positions, kv_mask)
         o, kc, vc = shard_map(
-            body, mesh=ctx.mesh,
-            in_specs=(q_spec, kv_spec, kv_spec, qp_spec, P(dp, None)),
+            body_in, mesh=ctx.mesh,
+            in_specs=specs,
             out_specs=(q_spec, kv_spec, kv_spec),
-            check_vma=False)(q, k, v, positions, kv_positions)
+            check_vma=False)(*args)
     if padded:
         # drop dummy-head outputs / cache entries (exact: they are zero)
         o = o[:, :, :Hq_real]
@@ -188,8 +204,11 @@ def attn_apply(cfg, p, x, ctx: AxisCtx, positions, causal: bool,
 
 
 def apply_layer(cfg, pos: int, p, x, ctx: AxisCtx, positions,
-                enc_out=None, return_cache: bool = False):
-    """Training / prefill path. Returns (x, aux_loss, cache_entry)."""
+                enc_out=None, return_cache: bool = False, mask=None):
+    """Training / prefill path. Returns (x, aux_loss, cache_entry).
+    mask: optional (B, S) validity — pad tokens are excluded from attention
+    (kv_mask) and become identity steps in the SSM scan, so mixed-length
+    left-padded prefill is exact."""
     kind = cfg.layer_kind(pos)
     aux = jnp.zeros((), jnp.float32)
     cache_entry = None
@@ -198,7 +217,7 @@ def apply_layer(cfg, pos: int, p, x, ctx: AxisCtx, positions,
         is_causal = cfg.attn.causal
         use_rope = cfg.attn.rope_theta > 0
         h, kv = attn_apply(cfg, p["attn"], h, ctx, positions, is_causal,
-                           use_rope, return_kv=return_cache)
+                           use_rope, return_kv=return_cache, kv_mask=mask)
         if return_cache:
             cache_entry = {"k": kv[0], "v": kv[1]}
         x = x + h.astype(x.dtype)
@@ -212,7 +231,7 @@ def apply_layer(cfg, pos: int, p, x, ctx: AxisCtx, positions,
             x = x + hx.astype(x.dtype)
     else:
         h, ssm_cache = S.ssm_forward(cfg, cfg.ssm, p["ssm"], h,
-                                     return_cache=return_cache)
+                                     return_cache=return_cache, mask=mask)
         if return_cache:
             cache_entry = ssm_cache
         x = x + h.astype(x.dtype)
@@ -242,8 +261,43 @@ def apply_layer(cfg, pos: int, p, x, ctx: AxisCtx, positions,
 # ---------------------------------------------------------------------------
 
 
-def sharded_decode_attention(ctx: AxisCtx, a, q, k_cache, v_cache, t_pos):
-    """Decode attention without gathering the cache.
+def _qkv_proj(a, p_attn, h):
+    """Shared QKV projection + bias + head reshape for the cached paths
+    (decode_layer / chunk_layer). h: (B, S, d) -> q/k/v (B, S, H*, hd)."""
+    B, S, _ = h.shape
+    q = h @ p_attn["wq"]
+    k = h @ p_attn["wk"]
+    v = h @ p_attn["wv"]
+    if "bq" in p_attn:
+        q = q + p_attn["bq"].astype(q.dtype)
+        k = k + p_attn["bk"].astype(k.dtype)
+        v = v + p_attn["bv"].astype(v.dtype)
+    q = q.reshape(B, S, a.n_heads, a.head_dim)
+    k = k.reshape(B, S, a.n_kv_heads, a.head_dim)
+    v = v.reshape(B, S, a.n_kv_heads, a.head_dim)
+    return q, k, v
+
+
+def _mlp_tail(cfg, p, x, ctx: AxisCtx):
+    """Shared ln2 → (MoE | FFN) → residual tail for the cached paths."""
+    if "ln2" not in p:
+        return x
+    h = apply_norm(cfg, p["ln2"], x)
+    if "moe" in p:
+        h, _ = moe_ffn(cfg, cfg.moe, p["moe"], h, ctx)
+        if "shared" in p["moe"]:
+            h = h + ffn_apply(cfg, p["moe"]["shared"],
+                              apply_norm(cfg, p["ln2"], x))
+    else:
+        h = ffn_apply(cfg, p["ffn"], h)
+    return x + h.astype(x.dtype)
+
+
+def sharded_decode_attention(ctx: AxisCtx, a, q, k_cache, v_cache, t_pos,
+                             kv_start=None):
+    """Decode attention without gathering the cache. t_pos: () or (B,)
+    per-row positions (slot-based decode); kv_start: optional ()/(B,) first
+    valid cache index per row (left-padded prefill exclusion).
 
     * Hkv divides the model axis → kv-group sharding: q reshaped
       (B,1,Hkv,rep,hd) and sharded with its kv head; zero collectives.
@@ -255,46 +309,57 @@ def sharded_decode_attention(ctx: AxisCtx, a, q, k_cache, v_cache, t_pos):
     B, S, Hkv, hd = k_cache.shape
     m = ctx.model_size
     if not ctx.active or m == 1:
-        return A.decode_attention(q, k_cache, v_cache, t_pos)
+        return A.decode_attention(q, k_cache, v_cache, t_pos, kv_start)
     mx = ctx.model_axis
     dp = ctx.dp_axes if ctx.dp_size > 1 and B % ctx.dp_size == 0 else None
     H = q.shape[2]
     rep = H // Hkv
+    # per-row positions travel as explicit shard_map operands (sharded with
+    # the batch like the tokens), never as closed-over values
+    pos_v = jnp.broadcast_to(jnp.asarray(t_pos, jnp.int32).reshape(-1), (B,))
+    start_v = (jnp.zeros((B,), jnp.int32) if kv_start is None else
+               jnp.broadcast_to(jnp.asarray(kv_start, jnp.int32).reshape(-1),
+                                (B,)))
     if Hkv % m == 0:
         qg = q.reshape(B, 1, Hkv, rep, hd)
 
-        def body(qk, kc, vc):
-            qk = qk.reshape(B, 1, -1, hd)           # (B,1,Hkv_l*rep,hd)
-            return A.decode_attention(qk, kc, vc, t_pos)
+        def body(qk, kc, vc, pv, sv):
+            qk = qk.reshape(qk.shape[0], 1, -1, hd)  # (B_l,1,Hkv_l*rep,hd)
+            return A.decode_attention(qk, kc, vc, pv, sv)
 
         o = shard_map(
             body, mesh=ctx.mesh,
             in_specs=(P(dp, None, mx, None, None),
-                      P(dp, None, mx, None), P(dp, None, mx, None)),
+                      P(dp, None, mx, None), P(dp, None, mx, None),
+                      P(dp), P(dp)),
             out_specs=P(dp, None, mx, None),
-            check_vma=False)(qg, k_cache, v_cache)
+            check_vma=False)(qg, k_cache, v_cache, pos_v, start_v)
         return o.reshape(B, 1, H, hd)
     if S % m == 0:
         S_loc = S // m
 
-        def body(qf, kc, vc):
+        def body(qf, kc, vc, pv, sv):
             off = jax.lax.axis_index(mx) * S_loc
-            mm, ll, acc = A.decode_attention_partial(qf, kc, vc, t_pos, off)
+            mm, ll, acc = A.decode_attention_partial(qf, kc, vc, pv, off, sv)
             out = A.merge_decode_partials(mm, ll, acc, mx)   # (B,H,1,hd)
             return out.transpose(0, 2, 1, 3).astype(qf.dtype)
 
         return shard_map(
             body, mesh=ctx.mesh,
             in_specs=(P(dp, None, None, None),
-                      P(dp, mx, None, None), P(dp, mx, None, None)),
+                      P(dp, mx, None, None), P(dp, mx, None, None),
+                      P(dp), P(dp)),
             out_specs=P(dp, None, None, None),
-            check_vma=False)(q, k_cache, v_cache)
-    return A.decode_attention(q, k_cache, v_cache, t_pos)
+            check_vma=False)(q, k_cache, v_cache, pos_v, start_v)
+    return A.decode_attention(q, k_cache, v_cache, t_pos, kv_start)
 
 
 def decode_layer(cfg, pos: int, p, x, ctx: AxisCtx, cache, t_pos,
-                 has_cross: bool = False):
-    """x: (B, 1, d); cache: layer cache dict; t_pos: () int32 position.
+                 has_cross: bool = False, rope_pos=None, kv_start=None):
+    """x: (B, 1, d); cache: layer cache dict; t_pos: () or (B,) int32 cache
+    WRITE index per row. rope_pos: optional ()/(B,) RoPE position when it
+    differs from the cache index (left-padded rows: real position = index -
+    pad offset); kv_start: optional ()/(B,) first valid cache index.
     Returns (x, new_cache)."""
     kind = cfg.layer_kind(pos)
     a = cfg.attn
@@ -302,23 +367,16 @@ def decode_layer(cfg, pos: int, p, x, ctx: AxisCtx, cache, t_pos,
     h = apply_norm(cfg, p["ln1"], x)
     if kind == "a":
         B = x.shape[0]
-        q = h @ p["attn"]["wq"]
-        k = h @ p["attn"]["wk"]
-        v = h @ p["attn"]["wv"]
-        if "bq" in p["attn"]:
-            q = q + p["attn"]["bq"].astype(q.dtype)
-            k = k + p["attn"]["bk"].astype(k.dtype)
-            v = v + p["attn"]["bv"].astype(v.dtype)
-        q = q.reshape(B, 1, a.n_heads, a.head_dim)
-        k = k.reshape(B, 1, a.n_kv_heads, a.head_dim)
-        v = v.reshape(B, 1, a.n_kv_heads, a.head_dim)
+        q, k, v = _qkv_proj(a, p["attn"], h)
         if a.rope_theta > 0:
-            pos_arr = jnp.full((B, 1), t_pos, jnp.int32)
+            rp = t_pos if rope_pos is None else rope_pos
+            pos_arr = jnp.broadcast_to(
+                jnp.asarray(rp, jnp.int32).reshape((-1, 1)), (B, 1))
             q = A.apply_rope(q, pos_arr, a.rope_theta)
             k = A.apply_rope(k, pos_arr, a.rope_theta)
         kc, vc = A.update_cache(cache["k"], cache["v"], k, v, t_pos)
         new_cache["k"], new_cache["v"] = kc, vc
-        o = sharded_decode_attention(ctx, a, q, kc, vc, t_pos)
+        o = sharded_decode_attention(ctx, a, q, kc, vc, t_pos, kv_start)
         o = o.reshape(B, 1, a.n_heads * a.head_dim)
         h = o @ p["attn"]["wo"]
         x = x + h
@@ -333,14 +391,54 @@ def decode_layer(cfg, pos: int, p, x, ctx: AxisCtx, cache, t_pos,
         new_cache = ssm_new
         x = x + h
 
-    if "ln2" in p:
-        h = apply_norm(cfg, p["ln2"], x)
-        if "moe" in p:
-            h, _ = moe_ffn(cfg, cfg.moe, p["moe"], h, ctx)
-            if "shared" in p["moe"]:
-                h = h + ffn_apply(cfg, p["moe"]["shared"],
-                                  apply_norm(cfg, p["ln2"], x))
-        else:
-            h = ffn_apply(cfg, p["ffn"], h)
-        x = x + h
-    return x, new_cache
+    return _mlp_tail(cfg, p, x, ctx), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Apply — chunked prefill against a per-slot cache region
+# ---------------------------------------------------------------------------
+
+
+def chunk_layer(cfg, pos: int, p, x, ctx: AxisCtx, cache, pos_off, q_pos,
+                mask, valid_len):
+    """One prompt CHUNK against the slot's cache region: x (Bc, C, d) enters
+    at cache indices [pos_off, pos_off + C); queries attend over the whole
+    cache up to their own index (previous chunks included), so a prompt
+    split into chunks reproduces the monolithic prefill exactly.
+
+    q_pos: (Bc, C) absolute cache indices of the chunk tokens (index ==
+    RoPE position — slot prefill is right-anchored at 0); mask: (Bc, C)
+    validity of the final partial chunk's tail; valid_len: () count of
+    valid tokens. Tail-pad K/V land at indices > every valid query's
+    position (causal-masked now, overwritten by the first decode steps
+    before any query can reach them), and the SSM treats pads as identity
+    steps, so the stitch is exact. Returns (x, new_cache)."""
+    kind = cfg.layer_kind(pos)
+    a = cfg.attn
+    new_cache = dict(cache) if cache is not None else None
+    h = apply_norm(cfg, p["ln1"], x)
+    if kind == "a":
+        Bc, C, _ = x.shape
+        q, k, v = _qkv_proj(a, p["attn"], h)
+        if a.rope_theta > 0:
+            q = A.apply_rope(q, q_pos, a.rope_theta)
+            k = A.apply_rope(k, q_pos, a.rope_theta)
+        kc = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), pos_off, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), pos_off, axis=1)
+        new_cache["k"], new_cache["v"] = kc, vc
+        S_tot = kc.shape[1]
+        kv_pos = jnp.broadcast_to(jnp.arange(S_tot)[None, :], (Bc, S_tot))
+        o = A.attention(q, kc, vc, causal=True, q_block=a.q_block,
+                        kv_block=a.kv_block, q_pos=q_pos, kv_pos=kv_pos)
+        o = o.reshape(Bc, C, a.n_heads * a.head_dim)
+        h = o @ p["attn"]["wo"]
+        x = x + h.astype(x.dtype)
+    else:
+        h, ssm_new = S.ssm_forward(cfg, cfg.ssm, p["ssm"], h, cache=cache,
+                                   mask=mask, valid_len=valid_len)
+        new_cache = ssm_new
+        x = x + h.astype(x.dtype)
+
+    return _mlp_tail(cfg, p, x, ctx), new_cache

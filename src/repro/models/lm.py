@@ -132,10 +132,24 @@ def encode(cfg, params, frames, ctx: AxisCtx):
 
 def forward(cfg, params, batch, ctx: AxisCtx = AxisCtx(),
             return_cache: bool = False):
-    """Returns (h_final, aux_loss, cache|None). h_final: (B, S, d)."""
+    """Returns (h_final, aux_loss, cache|None). h_final: (B, S, d).
+
+    batch may carry a ``mask`` (B, S) bool — pad-token validity for
+    mixed-length batched prefill. With it, pad keys/values are excluded
+    from attention, SSM pad steps become identities, and per-row positions
+    are derived from the mask (left-padded rows RoPE from 0 at their first
+    real token), so the padded forward is EXACT, not approximate."""
     h = embed_inputs(cfg, params, batch, ctx)
     Bsz, Ssz, _ = h.shape
-    positions = jnp.broadcast_to(jnp.arange(Ssz)[None, :], (Bsz, Ssz))
+    mask = batch.get("mask")
+    if "positions" in batch:
+        positions = batch["positions"]
+    elif mask is not None:
+        # left-pad aware: position = rank among this row's valid tokens
+        positions = jnp.maximum(
+            jnp.cumsum(mask.astype(jnp.int32), axis=1) - 1, 0)
+    else:
+        positions = jnp.broadcast_to(jnp.arange(Ssz)[None, :], (Bsz, Ssz))
     enc_out = None
     if cfg.n_enc_layers:
         enc_out = encode(cfg, params, batch["frames"], ctx)
@@ -148,7 +162,7 @@ def forward(cfg, params, batch, ctx: AxisCtx = AxisCtx(),
         for pos in range(p):
             x, a, ce = B.apply_layer(cfg, pos, layer_params[pos], x, ctx,
                                      positions, enc_out=enc_out,
-                                     return_cache=return_cache)
+                                     return_cache=return_cache, mask=mask)
             aux = aux + a
             caches.append(ce)
         out = tuple(caches) if return_cache else None
@@ -171,7 +185,10 @@ def loss_fn(cfg, params, batch, ctx: AxisCtx = AxisCtx()):
 
 
 def prefill(cfg, params, batch, ctx: AxisCtx = AxisCtx()):
-    """Returns (last-token logits (B, V), cache pytree)."""
+    """Returns (last-token logits (B, V), cache pytree). Mixed-length
+    batches LEFT-pad (prompt ends aligned at index S-1, where the logits
+    are read) and pass ``batch["mask"]`` — with the mask the padded forward
+    is exact (see ``forward``), without it pad tokens attend."""
     h, _, caches = forward(cfg, params, batch, ctx, return_cache=True)
     logits = h[:, -1].astype(jnp.float32) @ output_head(cfg, params).astype(jnp.float32)
     return logits, caches
@@ -218,12 +235,26 @@ def init_cache(cfg, batch_size: int, seq_len: int, ctx: AxisCtx = AxisCtx(),
     return tuple(caches)
 
 
-def decode_step(cfg, params, cache, tokens, t_pos, ctx: AxisCtx = AxisCtx()):
-    """tokens: (B, 1) int32; t_pos: () int32. Returns (logits (B, V), cache)."""
+def decode_step(cfg, params, cache, tokens, t_pos, ctx: AxisCtx = AxisCtx(),
+                rope_pos=None, kv_start=None):
+    """tokens: (B, 1) int32; t_pos: () int32 shared position, or (B,) int32
+    PER-ROW cache write indices (slot-based decode — every in-flight request
+    sits at its own sequence position). rope_pos: optional ()/(B,) RoPE
+    positions when they differ from the cache index (left-padded rows);
+    kv_start: optional ()/(B,) first valid cache index per row.
+    Returns (logits (B, V), cache)."""
+    Bsz = tokens.shape[0]
+    t_vec = jnp.broadcast_to(
+        jnp.asarray(t_pos, jnp.int32).reshape(-1), (Bsz,))
+    rope_vec = None if rope_pos is None else jnp.broadcast_to(
+        jnp.asarray(rope_pos, jnp.int32).reshape(-1), (Bsz,))
+    start_vec = None if kv_start is None else jnp.broadcast_to(
+        jnp.asarray(kv_start, jnp.int32).reshape(-1), (Bsz,))
     h = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
     if cfg.n_enc_layers:
         from repro.models.common import sinusoid_at
-        h = h + sinusoid_at(t_pos, cfg.d_model).astype(h.dtype)
+        pe = jax.vmap(lambda pp: sinusoid_at(pp, cfg.d_model))(t_vec)
+        h = h + pe[:, None, :].astype(h.dtype)
     p = period_of(cfg)
     has_cross = cfg.n_enc_layers > 0
 
@@ -232,7 +263,8 @@ def decode_step(cfg, params, cache, tokens, t_pos, ctx: AxisCtx = AxisCtx()):
         new_caches = []
         for pos in range(p):
             x, nc = B.decode_layer(cfg, pos, layer_params[pos], x, ctx,
-                                   cache_in[pos], t_pos, has_cross=has_cross)
+                                   cache_in[pos], t_vec, has_cross=has_cross,
+                                   rope_pos=rope_vec, kv_start=start_vec)
             new_caches.append(nc)
         return x, tuple(new_caches)
 
@@ -240,4 +272,71 @@ def decode_step(cfg, params, cache, tokens, t_pos, ctx: AxisCtx = AxisCtx()):
         period_body, h, (tuple(params["layers"]), cache))
     h = apply_norm(cfg, params["ln_f"], h)
     logits = h[:, 0].astype(jnp.float32) @ output_head(cfg, params).astype(jnp.float32)
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill (continuous-batching admission path)
+# ---------------------------------------------------------------------------
+
+
+def prefill_chunk(cfg, params, cache, tokens, pos_off, valid_len,
+                  ctx: AxisCtx = AxisCtx(), slot=None):
+    """One prompt chunk against a slot's cache region.
+
+    tokens: (Bc, C) int32, the chunk (tail-padded when valid_len < C);
+    pos_off: () int32 cache index of the chunk's first token; valid_len: ()
+    int32 valid tokens in this chunk; slot: optional () int32 — when given,
+    ``cache`` is the FULL (n_periods, n_slots, S, ...) decode cache and the
+    chunk runs against batch row ``slot`` (sliced out, updated, written
+    back), which is how the serving engine stitches prompts into per-slot
+    regions with ONE compiled function for every slot.
+
+    The chunk attends over the cache up to its own indices (earlier chunks
+    included) with exact causal/pad masking, SSM layers scan on from the
+    cached (conv window, SSD state) — reset in-graph when pos_off == 0, so
+    a freed slot needs no host-side scrubbing before reuse. Returns
+    (logits (Bc, V) at the last VALID position, updated cache)."""
+    assert cfg.n_enc_layers == 0, "chunked prefill: decoder-only models"
+    full = cache
+    if slot is not None:
+        cache = jax.tree_util.tree_map(
+            lambda c: jax.lax.dynamic_slice_in_dim(c, slot, 1, axis=1),
+            cache)
+    Bc, C = tokens.shape
+    pos_off = jnp.asarray(pos_off, jnp.int32)
+    valid_len = jnp.asarray(valid_len, jnp.int32)
+    # first chunk of a request: the slot's SSM carry must restart from zero
+    # (K/V need no reset — stale indices are causal-masked / overwritten)
+    first = pos_off == 0
+    cache = tuple(
+        {k: (jnp.where(first, jnp.zeros_like(v), v)
+             if k in ("conv", "state") else v)
+         for k, v in e.items()} for e in cache)
+
+    h = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
+    q_pos = jnp.broadcast_to(pos_off + jnp.arange(C)[None, :], (Bc, C))
+    mask = jnp.broadcast_to(jnp.arange(C)[None, :] < valid_len, (Bc, C))
+    p = period_of(cfg)
+
+    def period_body(x, inp):
+        layer_params, cache_in = inp
+        new_caches = []
+        for pos in range(p):
+            x, nc = B.chunk_layer(cfg, pos, layer_params[pos], x, ctx,
+                                  cache_in[pos], pos_off, q_pos, mask,
+                                  valid_len)
+            new_caches.append(nc)
+        return x, tuple(new_caches)
+
+    h, new_cache = jax.lax.scan(
+        period_body, h, (tuple(params["layers"]), cache))
+    h = apply_norm(cfg, params["ln_f"], h)
+    h_last = jax.lax.dynamic_slice_in_dim(h, valid_len - 1, 1, axis=1)[:, 0]
+    logits = (h_last.astype(jnp.float32)
+              @ output_head(cfg, params).astype(jnp.float32))
+    if slot is not None:
+        new_cache = jax.tree_util.tree_map(
+            lambda f, n: jax.lax.dynamic_update_slice_in_dim(
+                f, n.astype(f.dtype), slot, axis=1), full, new_cache)
     return logits, new_cache

@@ -56,9 +56,11 @@ def _causal_conv(x, w, b, state=None):
     return y + b.astype(x.dtype), new_state
 
 
-def ssd_chunked(x, dt, A, Bm, Cm, D, chunk: int):
+def ssd_chunked(x, dt, A, Bm, Cm, D, chunk: int, h0=None):
     """SSD dual form. x: (B,S,nh,hd); dt: (B,S,nh); A: (nh) (negative);
-    Bm/Cm: (B,S,ds); D: (nh). Returns y (B,S,nh,hd)."""
+    Bm/Cm: (B,S,ds); D: (nh). h0: optional (B,nh,ds,hd) fp32 initial state
+    (chunked-prefill continuation; None = zero state).
+    Returns y (B,S,nh,hd)."""
     Bsz, S, nh, hd = x.shape
     ds = Bm.shape[-1]
     Q = min(chunk, S)
@@ -99,9 +101,10 @@ def ssd_chunked(x, dt, A, Bm, Cm, D, chunk: int):
         h_new = h * jnp.exp(tot)[..., None, None] + st
         return h_new, h                                        # emit state BEFORE chunk
 
-    h0 = jnp.zeros((Bsz, nh, ds, hd), f32)
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, nh, ds, hd), f32)
     h_final, h_prev = jax.lax.scan(
-        step, h0,
+        step, h0.astype(f32),
         (states.swapaxes(0, 1), total.swapaxes(0, 1)))         # (NC,B,nh,ds,hd)
     h_prev = h_prev.swapaxes(0, 1)                             # (B,NC,nh,ds,hd)
 
@@ -135,17 +138,32 @@ def ssd_reference(x, dt, A, Bm, Cm, D):
     return y.astype(x.dtype)
 
 
-def ssm_forward(cfg, s, p, x, cache=None, pos=None, return_cache=False):
+def ssm_forward(cfg, s, p, x, cache=None, pos=None, return_cache=False,
+                mask=None, valid_len=None):
     """Full Mamba-2 block. x: (B,S,d). cache: None for training/prefill, else
-    dict with 'conv' (B,W-1,C) and 'state' (B,nh,ds,hd) for single-token
-    decode. return_cache=True on the prefill path emits the final state.
+    dict with 'conv' (B,W-1,C) and 'state' (B,nh,ds,hd) — single-token decode
+    when S == 1, chunked-prefill CONTINUATION when S > 1 (the chunk scans on
+    from the cached conv window and SSD state). return_cache=True on the
+    prefill path emits the final state.
+
+    mask: optional (B, S) validity — pad positions become IDENTITY steps
+    (conv input zeroed so the causal window sees the same zeros the unpadded
+    run's initial state provides; dt zeroed so decay is exp(0)=1 and the
+    discretized input is 0), which makes mixed-length batched prefill and
+    tail-padded chunks EXACT, not approximate. valid_len: () count of valid
+    leading tokens in a continuation chunk — the emitted conv window is
+    taken at that offset, so decode resumes from the last REAL token.
     Returns (y, new_cache)."""
     d_in = s.expand * cfg.d_model
     nh = d_in // s.head_dim
+    S_len = x.shape[1]
+    chunk_cont = cache is not None and S_len > 1
     zxbcdt = x @ p["in_proj"]
     z, xr, Bm, Cm, dt = _split_proj(cfg, s, zxbcdt)
 
     conv_in = jnp.concatenate([xr, Bm, Cm], axis=-1)
+    if mask is not None:
+        conv_in = conv_in * mask[..., None].astype(conv_in.dtype)
     conv_state = cache["conv"] if cache is not None else None
     conv_out, new_conv = _causal_conv(conv_in, p["conv_w"], p["conv_b"], conv_state)
     conv_out = jax.nn.silu(conv_out)
@@ -154,22 +172,39 @@ def ssm_forward(cfg, s, p, x, cache=None, pos=None, return_cache=False):
     Cm = conv_out[..., d_in + s.d_state:]
 
     dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    if mask is not None:
+        dt = dt * mask[..., None].astype(dt.dtype)
     A = -jnp.exp(p["A_log"].astype(jnp.float32))
     xh = xr.reshape(*xr.shape[:-1], nh, s.head_dim)
 
-    if cache is None:
+    if cache is None or chunk_cont:
         # tagged fusable: kernels/ssd.py is the validated Pallas kernel that
         # keeps the chunk working set (L, CB, states) in VMEM on TPU; the
         # roofline counts its boundary bytes analytically.
+        h0 = cache["state"] if chunk_cont else None
         with jax.named_scope("__fusable__ssd"):
             y, h_final = ssd_chunked(xh, dt, A, Bm, Cm,
-                                     p["D"].astype(jnp.float32), s.chunk_size)
+                                     p["D"].astype(jnp.float32), s.chunk_size,
+                                     h0=h0)
         new_cache = None
-        if return_cache:
-            new_cache = {"conv": conv_in[:, -(s.conv_width - 1):].astype(x.dtype)
-                         if s.conv_width > 1 else
-                         jnp.zeros((x.shape[0], 0, conv_in.shape[-1]), x.dtype),
-                         "state": h_final}
+        if return_cache or chunk_cont:
+            W = s.conv_width
+            if W > 1:
+                if chunk_cont:
+                    # conv window after the last VALID token of the chunk:
+                    # concat(prev window, chunk inputs) sliced at valid_len
+                    xp = jnp.concatenate(
+                        [conv_state.astype(conv_in.dtype), conv_in], axis=1)
+                    off = (jnp.asarray(valid_len, jnp.int32)
+                           if valid_len is not None else jnp.int32(S_len))
+                    conv_entry = jax.lax.dynamic_slice_in_dim(
+                        xp, off, W - 1, axis=1).astype(x.dtype)
+                else:
+                    conv_entry = conv_in[:, -(W - 1):].astype(x.dtype)
+            else:
+                conv_entry = jnp.zeros((x.shape[0], 0, conv_in.shape[-1]),
+                                       x.dtype)
+            new_cache = {"conv": conv_entry, "state": h_final}
     else:
         # single-step recurrence: S == 1
         h = cache["state"]                                    # (B,nh,ds,hd) fp32

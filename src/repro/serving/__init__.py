@@ -1,1 +1,2 @@
-from repro.serving.engine import GenerateResult, ServeEngine  # noqa: F401
+from repro.serving.engine import (GenerateResult, Request,  # noqa: F401
+                                  ServeEngine, stitch_prefill_cache)

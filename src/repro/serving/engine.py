@@ -1,34 +1,48 @@
-"""Batched serving engine: prefill → KV-cache stitch → greedy decode loop.
+"""Continuous-batching serving engine: slot scheduler + masked chunked
+prefill + per-row-position decode.
 
-Static-batch offline serving (the shape the decode_32k / long_500k cells
-lower): requests are left-padded to a common prompt length, prefilled in one
-jitted call, and decoded token-by-token with the donated-cache decode step.
-Per-request stop handling masks finished rows. The same engine runs on a mesh
-(pjit shardings from build_*_step) or a single device.
+Requests are ``submit()``-ed into a queue and admitted MID-FLIGHT into a
+fixed pool of decode slots: a freed slot (eos / max_new) is refilled from
+the queue on the next ``step()``, so the decode batch stays full under
+streaming arrivals instead of draining to the slowest request. Admission
+runs the prompt through the chunked prefill step — fixed-size chunks
+against the slot's cache region, the final partial chunk tail-masked — and
+decoding advances every live slot at its OWN position (vector positions,
+donated cache, live-slot mask). Mixed-length batches are EXACT: pad/tail
+tokens are masked out of attention and are identity steps in the SSM scan
+(the old left-padding approximation is gone; MoE layers remain subject to
+per-chunk capacity routing, the standard batched-MoE caveat).
 
-Limitation (documented): left padding carries no attention mask, so pad
-tokens participate in attention for shorter prompts — exact parity with an
-unpadded forward holds for equal-length prompts (tested); mixed lengths get
-an approximation, as in mask-free batched-serving setups. Adding a prefill
-pad mask is a straightforward extension of attention's kv_mask argument.
+The same engine runs on a mesh (pjit shardings from the step builders) or a
+single device. Plans resolve per latency phase: the decode step looks up
+``:phdecode`` entries (ranked on per-step latency — tiny-M shapes legalize
+toward bcast/small ring groups), the chunk step ``:phprefill`` ones.
+
+``generate(prompts, ...)`` remains as a convenience wrapper: submit all,
+run to completion, return a batch result. Any number of prompts works —
+more prompts than slots simply queue.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+import time
+from collections import deque
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig, ShapeConfig
-from repro.launch.train_step import build_decode_step, build_prefill_step
+from repro.launch.train_step import (build_decode_step,
+                                     build_prefill_chunk_step)
 from repro.models import lm
 
 
 def stitch_prefill_cache(cfg, decode_cache, prefill_cache, prompt_len: int):
     """Insert prefill cache entries — stacked (n_periods, B, S, ...) from the
-    layer scan — into the fixed-size decode cache at positions [0, S)."""
+    layer scan — into the fixed-size decode cache at positions [0, S).
+    Used by the batched (non-chunked) prefill path in tests/tools."""
     out = []
     for entry, pre in zip(decode_cache, prefill_cache):
         e = {}
@@ -56,22 +70,56 @@ class GenerateResult:
     decode_steps: int
 
 
+@dataclasses.dataclass
+class Request:
+    """One in-flight generation request (streaming API handle)."""
+    rid: int
+    prompt: List[int]
+    max_new: int
+    eos_id: Optional[int]
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    length: int = -1            # tokens before eos; -1 while running
+    slot: int = -1
+    submit_t: float = 0.0
+    first_token_t: float = 0.0  # TTFT = first_token_t - submit_t
+    done_t: float = 0.0
+
+    @property
+    def done(self) -> bool:
+        return self.length >= 0
+
+    @property
+    def ttft_s(self) -> float:
+        return self.first_token_t - self.submit_t
+
+
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params=None, mesh=None,
                  max_seq: int = 256, batch_size: int = 4, seed: int = 0,
-                 plan_cache: Optional[str] = None, plan_hw: str = ""):
+                 plan_cache: Optional[str] = None, plan_hw: str = "",
+                 chunk: int = 0):
         self.cfg = cfg
         self.mesh = mesh
         self.max_seq = max_seq
-        self.B = batch_size
+        self.B = batch_size                       # decode slots
         self.plan_cache = plan_cache
-        pshape = ShapeConfig("serve_prefill", seq_len=max_seq,
-                             global_batch=batch_size, kind="prefill")
+        # legalize the chunk to a divisor of max_seq: the chunk grid then
+        # tiles the cache exactly and the last chunk of any admissible
+        # prompt stays inside [0, max_seq) — otherwise the tail chunk's
+        # dynamic_update_slice would CLAMP its start and silently corrupt
+        # earlier chunks' K/V
+        chunk = max(1, min(chunk or min(32, max_seq), max_seq))
+        while max_seq % chunk:
+            chunk -= 1
+        self.chunk = chunk
+        # ONE shape describes the shared donated cache (slots × max_seq):
+        # both steps derive identical cache shardings from it on a mesh
         dshape = ShapeConfig("serve_decode", seq_len=max_seq,
                              global_batch=batch_size, kind="decode")
-        self.prefill = build_prefill_step(cfg, pshape, mesh,
-                                          plan_cache=plan_cache,
-                                          plan_hw=plan_hw)
+        self.prefill = build_prefill_chunk_step(cfg, dshape, mesh,
+                                                chunk=self.chunk,
+                                                plan_cache=plan_cache,
+                                                plan_hw=plan_hw)
         self.decode = build_decode_step(cfg, dshape, mesh,
                                         plan_cache=plan_cache,
                                         plan_hw=plan_hw)
@@ -79,42 +127,151 @@ class ServeEngine:
             params = lm.init_params(cfg, jax.random.PRNGKey(seed),
                                     self.prefill["ctx"])
         self.params = params
+        # device state: the decode cache, donated through every chunk/decode
+        # call, holds one region (batch row) per slot
+        self.cache = lm.init_cache(cfg, batch_size, max_seq,
+                                   self.decode["ctx"])
+        # host scheduler state
+        self.slot_req: List[Optional[Request]] = [None] * batch_size
+        self.pos = np.zeros((batch_size,), np.int32)      # next write index
+        self.live = np.zeros((batch_size,), bool)
+        self.last_tok = np.zeros((batch_size,), np.int32)
+        self.queue: deque = deque()
+        self.finished: Dict[int, Request] = {}
+        self._next_rid = 0
+        # per-phase accounting (the CLI summary prints these)
+        self.prefill_s = 0.0
+        self.decode_s = 0.0
+        self.prefill_tokens = 0
+        self.decode_steps = 0
+        self.decode_tokens = 0
+        self.admissions = 0
+
+    # -- streaming API ------------------------------------------------------
+
+    def submit(self, prompt: Sequence[int], max_new: int = 32,
+               eos_id: Optional[int] = None) -> int:
+        """Queue a request; returns its id. Admission happens on the next
+        ``step()`` (or immediately inside ``run()``)."""
+        assert len(prompt) + max_new <= self.max_seq, "exceeds engine max_seq"
+        assert len(prompt) > 0, "empty prompt"
+        req = Request(self._next_rid, list(prompt), max_new, eos_id,
+                      submit_t=time.perf_counter())
+        self._next_rid += 1
+        self.queue.append(req)
+        return req.rid
+
+    @property
+    def pending(self) -> bool:
+        return bool(self.queue) or bool(self.live.any())
+
+    def _record_token(self, req: Request, tok: int, t_idx: int) -> bool:
+        """Append a generated token; returns True when the request is done
+        (eos — possibly on its very FIRST decoded token — or max_new)."""
+        req.tokens.append(tok)
+        if req.eos_id is not None and tok == req.eos_id:
+            req.length = t_idx
+            return True
+        if t_idx + 1 >= req.max_new:
+            req.length = req.max_new
+            return True
+        return False
+
+    def _retire(self, slot: int):
+        req = self.slot_req[slot]
+        req.done_t = time.perf_counter()
+        req.slot = -1
+        self.finished[req.rid] = req
+        self.slot_req[slot] = None
+        self.live[slot] = False
+
+    def _admit(self, slot: int, req: Request):
+        """Chunked prefill of ``req`` into ``slot``'s cache region; the
+        first generated token comes from the last chunk's logits."""
+        t0 = time.perf_counter()
+        C = self.chunk
+        plen = len(req.prompt)
+        fn = self.prefill["jit"]
+        logits = None
+        for off in range(0, plen, C):
+            part = req.prompt[off:off + C]
+            valid = len(part)
+            part = part + [0] * (C - valid)
+            toks = jnp.asarray([part], jnp.int32)
+            logits, self.cache = fn(self.params, self.cache, toks,
+                                    jnp.int32(off), jnp.int32(valid),
+                                    jnp.int32(slot))
+        first = int(np.asarray(jnp.argmax(logits[0])))
+        self.prefill_s += time.perf_counter() - t0
+        self.prefill_tokens += plen
+        self.admissions += 1
+        req.slot = slot
+        req.first_token_t = time.perf_counter()
+        self.slot_req[slot] = req
+        self.pos[slot] = plen
+        self.last_tok[slot] = first
+        self.live[slot] = True
+        if self._record_token(req, first, 0):
+            self._retire(slot)                    # finished on token 0
+
+    def step(self) -> bool:
+        """One scheduler iteration: refill free slots from the queue, then
+        advance every live slot by one decoded token. Returns whether any
+        work remains."""
+        for slot in range(self.B):
+            if not self.live[slot] and self.queue:
+                self._admit(slot, self.queue.popleft())
+        if self.live.any():
+            t0 = time.perf_counter()
+            toks = jnp.asarray(self.last_tok[:, None])
+            nxt, _, self.cache = self.decode["jit"](
+                self.params, self.cache, toks, jnp.asarray(self.pos),
+                jnp.asarray(self.live))
+            nxt = np.asarray(nxt)[:, 0]
+            self.decode_s += time.perf_counter() - t0
+            self.decode_steps += 1
+            self.decode_tokens += int(self.live.sum())
+            for slot in range(self.B):
+                if not self.live[slot]:
+                    continue
+                req = self.slot_req[slot]
+                self.pos[slot] += 1
+                self.last_tok[slot] = int(nxt[slot])
+                if self._record_token(req, int(nxt[slot]), len(req.tokens)):
+                    self._retire(slot)
+        return self.pending
+
+    def run(self) -> Dict[int, Request]:
+        """Drain queue + slots; returns {rid: finished Request}."""
+        while self.pending:
+            self.step()
+        return self.finished
+
+    def collect(self, rid: int) -> Request:
+        """Pop a finished request's record. Long-running streaming servers
+        must collect results (or clear ``finished``) — the engine keeps a
+        reference to every uncollected request, tokens included."""
+        return self.finished.pop(rid)
+
+    # -- batch convenience wrapper -----------------------------------------
 
     def generate(self, prompts: Sequence[Sequence[int]], max_new: int = 32,
                  eos_id: Optional[int] = None) -> GenerateResult:
-        B = len(prompts)
-        assert B == self.B, f"engine compiled for batch {self.B}, got {B}"
-        plen = max(len(p) for p in prompts)
-        assert plen + max_new <= self.max_seq, "exceeds engine max_seq"
-        toks = np.zeros((B, plen), np.int32)
-        for i, p in enumerate(prompts):
-            toks[i, plen - len(p):] = p              # left-pad to align last
-        batch = {"tokens": jnp.asarray(toks)}
-
-        # ---- prefill: one jitted call over the whole padded batch ---------
-        logits, pre_cache = self.prefill["fn"](self.params, batch)
-        cache = lm.init_cache(self.cfg, B, self.max_seq,
-                              self.prefill["ctx"])
-        cache = stitch_prefill_cache(self.cfg, cache, pre_cache, plen)
-        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
-
-        # ---- greedy decode loop -------------------------------------------
-        out = np.zeros((B, max_new), np.int32)
-        done = np.zeros((B,), bool)
-        lengths = np.full((B,), max_new, np.int64)
-        step_fn = self.decode["jit"]
-        steps = 0
-        for t in range(max_new):
-            out[:, t] = np.asarray(nxt[:, 0])
-            if eos_id is not None:
-                newly = (out[:, t] == eos_id) & ~done
-                lengths[newly] = t
-                done |= newly
-                if done.all():
-                    steps = t + 1
-                    break
-            nxt, _, cache = step_fn(self.params, cache, nxt,
-                                    jnp.int32(plen + t))
-            steps = t + 1
-        return GenerateResult(out, lengths, prefill_tokens=B * plen,
-                              decode_steps=steps)
+        """Submit every prompt, run to completion, return a batch result
+        (rows in submit order). More prompts than slots simply queue —
+        freed slots are refilled mid-decode."""
+        base_steps = self.decode_steps
+        rids = [self.submit(p, max_new=max_new, eos_id=eos_id)
+                for p in prompts]
+        self.run()
+        n = len(prompts)
+        out = np.zeros((n, max_new), np.int32)
+        lengths = np.zeros((n,), np.int64)
+        for i, rid in enumerate(rids):
+            req = self.collect(rid)
+            t = req.tokens[:max_new]
+            out[i, :len(t)] = t
+            lengths[i] = req.length
+        return GenerateResult(out, lengths,
+                              prefill_tokens=sum(len(p) for p in prompts),
+                              decode_steps=self.decode_steps - base_steps)

@@ -180,6 +180,109 @@ def test_candidate_space_legal():
 
 
 # ---------------------------------------------------------------------------
+# latency phases (PR 4): phase-qualified keys, fwd-only serving objectives
+# ---------------------------------------------------------------------------
+
+
+def test_phase_qualified_keys_and_objectives(tmp_path):
+    """decode/prefill plans live under phase-qualified keys with fwd-only
+    objectives; the train key stays unqualified (v3 layout)."""
+    path = str(tmp_path / "plans.json")
+    s = A.MoEShape(M=8, N=2048, K=1408, E=64, topk=4, ep=8, etp=1)
+    cache = A.PlanCache(path)
+    pd = A.tune_plan(s, A.TPU_V5E, cache, phase="decode")
+    pt = A.tune_plan(s, A.TPU_V5E, cache, phase="train")
+    pp = A.tune_plan(s, A.TPU_V5E, cache, phase="prefill")
+    assert pd.objective == "decode_latency" and pd.phase == "decode"
+    assert pd.t_bwd_s == 0.0                     # no bwd terms at inference
+    assert pp.objective == "prefill_tput"
+    assert pt.objective == "fwd_bwd" and pt.phase == "train"
+    base = A.PlanCache.key(s, A.TPU_V5E)
+    assert A.PlanCache.key(s, A.TPU_V5E, "train") == base
+    assert A.PlanCache.key(s, A.TPU_V5E, "decode") == base + ":phdecode"
+    assert set(cache.plans) == {base, base + ":phdecode", base + ":phprefill"}
+    # round-trip preserves the phase entries distinctly
+    re = A.PlanCache(path)
+    assert re.get(s, A.TPU_V5E, "decode") == pd
+    assert re.get(s, A.TPU_V5E) == pt
+
+
+def test_decode_phase_prefers_latency_transport():
+    """Tiny-M decode under the fwd-only latency objective picks bcast (the
+    train objective's training-semantics bwd terms no longer penalize it),
+    and the tuned decode plan is never slower than naive on the model."""
+    s = A.MoEShape(M=8, N=4096, K=1792, E=16, topk=2, ep=8, etp=1)
+    plan = A.tune_plan(s, A.TPU_V5E, phase="decode")
+    assert plan.impl == "bcast", plan
+    t_plan = A.modeled_plan_time(A.TPU_V5E, s, plan)
+    t_naive = A.modeled_plan_time(A.TPU_V5E, s, A.Plan("naive"))
+    assert t_plan <= t_naive
+
+
+def test_v3_cache_without_phase_still_loads(tmp_path):
+    """A v3 cache file (unqualified keys, no phase field) loads into v4
+    code: train-phase lookups resolve it, serving phases fall back to the
+    analytical model instead of mis-resolving a train plan."""
+    import json
+    path = str(tmp_path / "v3.json")
+    s = A.MoEShape(M=1024, N=2048, K=1408, E=64, topk=4, ep=8, etp=1)
+    key = A.PlanCache.key(s, A.TPU_V5E)
+    entry = {"impl": "comet", "ring_group": 2, "n_col_blocks": 4,
+             "gemm_impl": "xla", "fused_combine": False,
+             "measured_s": 2e-3, "t_bwd_s": 1e-3, "source": "measured",
+             "objective": "fwd_bwd"}
+    with open(path, "w") as f:
+        json.dump({"version": 3, "plans": {key: entry}}, f)
+    cache = A.PlanCache(path)
+    hit = cache.get(s, A.TPU_V5E, "train")
+    assert hit is not None and hit.ring_group == 2
+    assert hit.phase == "train"                  # defaulted on load
+    assert cache.get(s, A.TPU_V5E, "decode") is None
+    # resolve_plan with a decode-phase mcfg falls back analytically
+    cfg = get_config("granite-moe-3b-a800m-smoke")
+    m2 = dataclasses.replace(cfg.moe, plan_cache=path, plan_phase="decode")
+    plan = A.resolve_plan(m2, s.N, s.M, s.ep, s.etp)
+    assert plan is not None and plan.source == "model"
+
+
+def test_serve_engine_threads_decode_phase(tmp_path):
+    """ServeEngine's decode step resolves the :phdecode entry, its chunk
+    step the :phprefill entry — checked through the step-builder configs."""
+    from repro.configs.base import ShapeConfig
+    from repro.launch.train_step import (build_decode_step,
+                                         build_prefill_chunk_step,
+                                         build_prefill_step)
+    cfg = get_config("granite-moe-3b-a800m-smoke")
+    path = str(tmp_path / "plans.json")
+    A.PlanCache(path).save()
+    shape = ShapeConfig("s", seq_len=16, global_batch=2, kind="decode")
+    # the builders stash the phase on the threaded MoE config; fn closures
+    # capture cfg, so inspect via a rebuilt config
+    from repro.launch.train_step import _with_plan_cache
+    assert _with_plan_cache(cfg, path, phase="decode").moe.plan_phase \
+        == "decode"
+    assert _with_plan_cache(cfg, path, phase="prefill").moe.plan_phase \
+        == "prefill"
+    assert _with_plan_cache(cfg, path).moe.plan_phase == "train"
+    # and the builders run end to end with a cache configured
+    d = build_decode_step(cfg, shape, mesh=None, plan_cache=path)
+    c = build_prefill_chunk_step(cfg, shape, mesh=None, plan_cache=path)
+    p = build_prefill_step(cfg, shape, mesh=None, plan_cache=path)
+    assert d["ctx"] is not None and c["chunk"] == 16 and p["ctx"] is not None
+
+
+def test_transport_default_gemm_impl_is_static():
+    """The mutable GEMM_IMPL ambient global is gone: _impl(None)/""
+    resolve to the static "xla" default."""
+    assert not hasattr(T, "set_gemm_impl")
+    assert not hasattr(T, "GEMM_IMPL")
+    assert T._impl(None) == "xla" and T._impl("") == "xla"
+    assert T._impl("pallas_fused") == "pallas_fused"
+    with pytest.raises(AssertionError):
+        T._impl("nope")
+
+
+# ---------------------------------------------------------------------------
 # JAX version-compat shim
 # ---------------------------------------------------------------------------
 

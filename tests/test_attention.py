@@ -30,6 +30,27 @@ def test_chunked_matches_dense(causal, qb, kb):
                                rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.parametrize("causal", [True, False])
+def test_chunked_kv_mask_matches_dense(causal):
+    """The serving pad mask through the flash path: chunked_attention with
+    kv_mask must equal the dense oracle (valid rows; left-pad pattern)."""
+    q, k, v = qkv(S=256)
+    valid = np.zeros((2, 256), bool)
+    valid[0, 37:] = True                         # row 0: 37 left pads
+    valid[1, :] = True                           # row 1: no pads
+    kv_mask = jnp.asarray(valid)
+    want = A.dense_attention(q, k, v, causal, kv_mask=kv_mask)
+    got = A.chunked_attention(q, k, v, causal, q_block=64, kv_block=64,
+                              kv_mask=kv_mask)
+    # compare only fully-valid kv rows' outputs for valid queries (masked
+    # queries' outputs are don't-care)
+    np.testing.assert_allclose(np.asarray(got)[0, 37:],
+                               np.asarray(want)[0, 37:],
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got)[1], np.asarray(want)[1],
+                               rtol=1e-5, atol=1e-5)
+
+
 def test_chunked_gqa_ratios():
     for H, Hkv in [(8, 8), (8, 2), (8, 1)]:
         q, k, v = qkv(H=H, Hkv=Hkv, S=128)
@@ -112,7 +133,7 @@ def test_expand_kv_mapping():
     v = jax.random.normal(jax.random.PRNGKey(5), (B, S, 2, 16), jnp.float32)
     qp = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
     o, kc, vc = _attn_core(a, True, False, False, False, None,
-                           q, k, v, qp, qp)
+                           q, k, v, qp, qp, None)
     want = A.dense_attention(q, k, v, causal=True)
     np.testing.assert_allclose(np.asarray(o), np.asarray(want),
                                rtol=1e-5, atol=1e-5)

@@ -84,8 +84,12 @@ def test_prefill_and_decode_steps_build_and_run():
     dbuilt = build_decode_step(cfg, dshape, mesh=None)
     cache0 = lm.init_cache(cfg, 2, 64, dbuilt["ctx"])
     tok = jnp.zeros((2, 1), jnp.int32)
-    nxt, logits, cache1 = dbuilt["jit"](params, cache0, tok, jnp.int32(0))
+    # per-row positions + live-slot mask (the continuous-batching signature)
+    nxt, logits, cache1 = dbuilt["jit"](params, cache0, tok,
+                                        jnp.array([0, 3], jnp.int32),
+                                        jnp.array([True, False]))
     assert nxt.shape == (2, 1)
+    assert int(nxt[1, 0]) == 0          # dead slot emits token 0
     assert np.isfinite(np.asarray(logits)).all()
 
 

@@ -44,7 +44,7 @@ def main():
     else:
         built = build_decode_step(cfg, shape, mesh)
         args = (built["params_abstract"], built["cache_abstract"],
-                built["tok"], built["pos"])
+                built["tok"], built["pos"], built["live"])
     c = built["jit"].lower(*args).compile()
     m = HLOCostModel(c.as_text())
 

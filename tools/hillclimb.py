@@ -69,7 +69,7 @@ def main():
     else:
         built = build_decode_step(cfg, shape, mesh, fsdp=fsdp)
         args = (built["params_abstract"], built["cache_abstract"],
-                built["tok"], built["pos"])
+                built["tok"], built["pos"], built["live"])
     compiled = built["jit"].lower(*args).compile()
     report = RL.analyze(compiled, mesh.devices.size, cfg=cfg, shape=shape)
     report["overrides"] = kw

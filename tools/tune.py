@@ -29,7 +29,7 @@ for _p in (os.path.join(_ROOT, "src"), _ROOT):
 
 def _print_plan(tag, s, plan):
     print(f"{tag},M{s.M},N{s.N},K{s.K},E{s.E},k{s.topk},ep{s.ep},etp{s.etp},"
-          f"{plan.impl},rg{plan.ring_group},nc{plan.n_col_blocks},"
+          f"{plan.phase},{plan.impl},rg{plan.ring_group},nc{plan.n_col_blocks},"
           f"{plan.gemm_impl},fc{int(plan.fused_combine)},"
           f"{plan.measured_s * 1e3:.4f}ms,{plan.source}")
 
@@ -54,17 +54,20 @@ def tune_model_backed(args, hw, cache):
     from benchmarks.figures import PAPER_MODELS
     from repro.core.adaptive import MoEShape, tune_plan
     n = 0
-    for name, m in PAPER_MODELS.items():
-        for M in args.M:
-            s = MoEShape(M=M, N=m["N"], K=m["K"] // max(1, args.etp),
-                         E=m["E"], topk=m["topk"], ep=args.ep, etp=args.etp)
-            plan = tune_plan(s, hw, cache, force=args.force)
-            _print_plan(name, s, plan)
+    for phase in args.phase:
+        Ms = args.decode_M if phase == "decode" else args.M
+        for name, m in PAPER_MODELS.items():
+            for M in Ms:
+                s = MoEShape(M=M, N=m["N"], K=m["K"] // max(1, args.etp),
+                             E=m["E"], topk=m["topk"], ep=args.ep,
+                             etp=args.etp)
+                plan = tune_plan(s, hw, cache, force=args.force, phase=phase)
+                _print_plan(name, s, plan)
+                n += 1
+        for tag, _mcfg, s in smoke_plan_shapes():
+            plan = tune_plan(s, hw, cache, force=args.force, phase=phase)
+            _print_plan(tag, s, plan)
             n += 1
-    for tag, _mcfg, s in smoke_plan_shapes():
-        plan = tune_plan(s, hw, cache, force=args.force)
-        _print_plan(tag, s, plan)
-        n += 1
     return n
 
 
@@ -117,16 +120,19 @@ def tune_measured(args, hw, cache):
     mcfg = dataclasses.replace(mcfg, capacity_factor=float(E))
     # time the full fwd+bwd step (the v3 ranking objective) unless asked not
     # to, and key the plan with the SAME token resolution moe_ffn uses
+    phase = args.phase[0] if args.phase else "train"
+    fwd_only = args.fwd_only or phase != "train"
     measure = make_timing_measure(cfg, mcfg, params, x, ctx,
                                   iters=args.iters, warmup=1,
-                                  grad=not args.fwd_only)
+                                  grad=not fwd_only)
     from repro.core.moe_layer import local_token_count
     toks = local_token_count(ctx, args.batch, args.seq)
     s = plan_shape(mcfg, d, toks, ctx.ep, ctx.etp)
     cands = candidate_plans(s, gemm_impls=tuple(args.gemm))
     plan = tune_plan(s, hw, cache, measure=measure, candidates=cands,
-                     force=args.force,
-                     objective="fwd" if args.fwd_only else "fwd_bwd")
+                     force=args.force, phase=phase,
+                     objective="fwd" if (args.fwd_only and phase == "train")
+                     else None)
     _print_plan(args.arch, s, plan)
     return 1
 
@@ -138,6 +144,15 @@ def main(argv=None) -> int:
                     help="plan-cache path (default plans/<hw>.json)")
     ap.add_argument("--M", type=int, nargs="*", default=[1024, 4096, 16384],
                     help="per-group token counts to tune (model mode)")
+    ap.add_argument("--phase", nargs="*", default=["train"],
+                    choices=["train", "prefill", "decode"],
+                    help="latency phases to tune plans for; train ranks "
+                         "fwd+bwd, prefill/decode rank forward-only "
+                         "(serving). --measured uses the first entry")
+    ap.add_argument("--decode-M", type=int, nargs="*",
+                    default=[8, 32, 128, 512],
+                    help="token counts for the decode phase (per-step "
+                         "batch sizes, not sequence chunks)")
     ap.add_argument("--ep", type=int, default=8)
     ap.add_argument("--etp", type=int, default=1)
     ap.add_argument("--force", action="store_true",
@@ -174,8 +189,8 @@ def main(argv=None) -> int:
     out = args.out or os.path.join("plans", f"{args.hw}.json")
     cache = PlanCache(out)
 
-    print("tag,M,N,K,E,topk,ep,etp,impl,ring_group,n_col,gemm,fused_combine,"
-          "latency,source")
+    print("tag,M,N,K,E,topk,ep,etp,phase,impl,ring_group,n_col,gemm,"
+          "fused_combine,latency,source")
     if args.measured:
         tune_measured(args, hw, cache)
     else:

@@ -1,0 +1,165 @@
+"""BENCH-artifact gate: the named assertions CI (and anyone locally) runs
+against the ``benchmarks.run --json`` output, extracted from the old inline
+``python -c`` blobs so both the tier1 and serving jobs — and a laptop —
+share ONE set of checks with readable failure messages.
+
+Usage:
+    python benchmarks/check_bench.py --bench BENCH_pr5.json
+    python benchmarks/check_bench.py --bench out.json --only serving paged
+Exit code: 0 iff every (selected) gate passes.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Callable, List, Tuple
+
+Gate = Tuple[str, Callable[[dict], Tuple[bool, str]]]
+
+
+def _rows(d: dict) -> List[Tuple[str, dict]]:
+    return sorted(d.items())
+
+
+def g_micro(d):
+    m = d["micro"]
+    bad = [k for k, r in _rows(m) if not r["best_s"] > 0]
+    return not bad and bool(m), f"non-positive timings: {bad}" if bad else \
+        f"{len(m)} kernel microbenchmarks present"
+
+
+def g_hbm_fused(d):
+    rows = _rows(d["hbm_hot_path"])
+    if not rows:                       # empty section must FAIL, not pass
+        return False, "hbm_hot_path has no rows (figure not run?)"
+    bad = [k for k, r in rows if not r["fused_bytes"] < r["unfused_bytes"]]
+    return (not bad,
+            f"fused >= unfused HBM bytes at {bad}" if bad else
+            f"fused below unfused HBM bytes at all {len(rows)} shapes")
+
+
+def g_bwd_hbm(d):
+    rows = _rows(d["bwd_overlap"])
+    if not rows:
+        return False, "bwd_overlap has no rows (figure not run?)"
+    bad = [k for k, r in rows
+           if not r["hbm_bwd_custom_bytes"] < r["hbm_bwd_autodiff_bytes"]]
+    return (not bad,
+            f"custom backward HBM not below autodiff at {bad}" if bad else
+            f"comet backward HBM below autodiff at all {len(rows)} shapes")
+
+
+def g_bwd_exposed(d):
+    rows = _rows(d["bwd_overlap"])
+    if not rows:
+        return False, "bwd_overlap has no rows (figure not run?)"
+    bad = [k for k, r in rows
+           if not r["exposed_comm_custom_s"] < r["exposed_comm_autodiff_s"]]
+    return (not bad,
+            f"custom exposed comm not below autodiff at {bad}" if bad else
+            f"comet exposed comm below autodiff at all {len(rows)} shapes")
+
+
+def g_decode_plans(d):
+    dp = d["serving"]["decode_plans"]
+    if not dp["rows"]:
+        return False, "decode_plans has no rows (figure not run?)"
+    ok = bool(dp["tuned_no_slower_than_naive"])
+    return ok, (f"tuned decode plan no slower than naive at all "
+                f"{len(dp['rows'])} shapes" if ok
+                else "a tuned decode plan is slower than naive")
+
+
+def g_trace(d):
+    t = d["serving"]["trace"]
+    bad = [k for k in ("ttft_s_mean", "tokens_per_s", "decode_tok_latency_s")
+           if not t[k] > 0]
+    return (not bad,
+            f"non-positive serving-trace metrics: {bad}" if bad else
+            "Poisson-trace TTFT / throughput / decode latency all positive")
+
+
+def g_paged_capacity(d):
+    c = d["serving"]["paged"]["capacity"]
+    r = c["capacity_ratio_equal_mem"]
+    return (r >= 1.5,
+            f"paged capacity {r:.2f}x contiguous at equal cache memory "
+            f"(gate: >= 1.5x; mean budget "
+            f"{c['mean_request_budget_tokens']:.0f} toks of "
+            f"max_seq {c['max_seq']})")
+
+
+def g_paged_parity(d):
+    t = d["serving"]["paged"]["trace"]
+    ok = bool(t["bit_exact_vs_contiguous"])
+    return ok, ("paged engine bit-exact vs contiguous on the trace" if ok
+                else "paged engine DIVERGED from the contiguous reference")
+
+
+def g_paged_concurrency(d):
+    t = d["serving"]["paged"]["trace"]
+    p, c = t["peak_live_paged"], t["peak_live_contiguous"]
+    return (p > c,
+            f"peak live requests at equal memory: paged {p} vs "
+            f"contiguous {c}")
+
+
+def g_batched_admission(d):
+    a = d["serving"]["paged"]["admission"]
+    s, b = a["sequential_rounds"], a["batched_rounds"]
+    return (b < s,
+            f"admission burst of {a['burst_requests']}: {b} stacked "
+            f"call(s) batched vs {s} sequential")
+
+
+GATES: List[Gate] = [
+    ("micro_present", g_micro),
+    ("hbm_fused_below_unfused", g_hbm_fused),
+    ("bwd_hbm_below_autodiff", g_bwd_hbm),
+    ("bwd_exposed_comm_below_autodiff", g_bwd_exposed),
+    ("serving_decode_plans_tuned", g_decode_plans),
+    ("serving_trace_positive", g_trace),
+    ("paged_capacity_headroom", g_paged_capacity),
+    ("paged_trace_parity", g_paged_parity),
+    ("paged_peak_concurrency", g_paged_concurrency),
+    ("batched_admission_fewer_calls", g_batched_admission),
+]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--bench", required=True,
+                    help="path to the benchmarks.run --json artifact")
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="run only gates whose name contains any of these "
+                         "substrings (default: all)")
+    args = ap.parse_args(argv)
+    try:
+        with open(args.bench) as f:
+            d = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"[FAIL] cannot read BENCH artifact {args.bench!r}: {e}")
+        return 1
+
+    gates = [(n, g) for n, g in GATES
+             if args.only is None or any(s in n for s in args.only)]
+    if not gates:
+        print(f"[FAIL] --only {args.only} matched no gates "
+              f"(have: {[n for n, _ in GATES]})")
+        return 1
+    fails = 0
+    for name, gate in gates:
+        try:
+            ok, detail = gate(d)
+        except KeyError as e:
+            ok, detail = False, f"artifact missing key {e} (figure not run?)"
+        print(f"[{'PASS' if ok else 'FAIL'}] {name}: {detail}")
+        fails += 0 if ok else 1
+    print(f"\n{len(gates) - fails}/{len(gates)} BENCH gates passed "
+          f"({args.bench})")
+    return 1 if fails else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -7,7 +7,7 @@ numbers against the bands the paper reports. Exit code reflects validation.
 Run:  PYTHONPATH=src python -m benchmarks.run                 # figures
       PYTHONPATH=src python -m benchmarks.run --tune          # populate plans
       PYTHONPATH=src python -m benchmarks.run --plan plans/tpu_v5e.json
-      PYTHONPATH=src python -m benchmarks.run --json BENCH_pr4.json
+      PYTHONPATH=src python -m benchmarks.run --json BENCH_pr5.json
 The --plan mode resolves each shape's transport schedule from the tuned plan
 cache (missing file/entry → the analytical model), reports the tuned plan's
 modeled latency against the non-overlapped naive baseline, and executes one
@@ -17,10 +17,13 @@ kernel microbenchmarks (dispatch build / combine / fused MLP and its
 dgrad/wgrad backward kernels — real timed executions), the modeled hot-path
 HBM bytes of the fused vs unfused schedule, the fwd+bwd step figures (the
 custom-VJP comet backward ring vs the XLA-autodiff transposed baseline),
-and the SERVING figure set: decode-phase plan quality (latency-objective
-tuned plan vs naive at every decode batch size) plus TTFT / per-token decode
-latency / tokens-per-second from a real Poisson-arrival continuous-batching
-trace — the perf-trajectory artifact.
+and the SERVING figure set: decode-phase plan quality, TTFT / per-token
+decode latency / tokens-per-second from a real Poisson-arrival
+continuous-batching trace, and the PAGED-cache figures (capacity at equal
+cache memory, peak live concurrency + bit-exactness vs the contiguous
+engine, batched-vs-sequential admission latency) — the perf-trajectory
+artifact. The --json PATH names the artifact; CI gates it with
+benchmarks/check_bench.py (one $BENCH variable names produce/gate/upload).
 """
 from __future__ import annotations
 
@@ -436,11 +439,145 @@ def serving_trace_bench(n_requests: int = 8, slots: int = 2,
     return res
 
 
+def paged_capacity_table(max_seq: int = 4096, max_new: int = 128,
+                         mem_gib: float = 8.0, page: int = 64,
+                         n_requests: int = 4096, seed: int = 0):
+    """Memory-headroom math for the paged block-table cache at a real model's
+    KV geometry: at EQUAL cache memory, the contiguous layout holds
+    ``mem / (max_seq * bytes_per_token)`` requests (every slot owns a full
+    max_seq region), while the paged pool admits against each request's OWN
+    ``prompt + max_new`` page budget — capacity scales with
+    ``max_seq / mean_request_budget``. Deterministic (analytic, no device
+    work): the acceptance gate requires >= 1.5x at the mixed-length trace."""
+    import numpy as np
+
+    from repro.configs.base import get_config
+
+    cfg = get_config("granite-moe-3b-a800m")
+    a = cfg.attn
+    n_attn = sum(1 for i in range(cfg.n_layers) if cfg.layer_kind(i) == "a")
+    bpt = n_attn * 2 * a.n_kv_heads * a.head_dim * 2        # bf16 K+V
+    mem = int(mem_gib * 2**30)
+    contig_slots = mem // (max_seq * bpt)
+    pages_total = mem // (page * bpt)
+    rng = np.random.default_rng(seed)
+    prompts = rng.integers(128, max_seq - max_new, size=n_requests)
+    budgets = prompts + max_new
+    pages_needed = -(-budgets // page)
+    order = np.arange(n_requests)                            # arrival order
+    cum = np.cumsum(pages_needed[order])
+    paged_live = int(np.searchsorted(cum, pages_total, side="right"))
+    ratio = paged_live / max(1, contig_slots)
+    table = {
+        "model": cfg.name, "kv_bytes_per_token": int(bpt),
+        "cache_mem_bytes": mem, "max_seq": max_seq, "page_size": page,
+        "contiguous_slots": int(contig_slots),
+        "pages_total": int(pages_total),
+        "mean_request_budget_tokens": float(budgets.mean()),
+        "paged_live_requests": paged_live,
+        "capacity_ratio_equal_mem": float(ratio),
+    }
+    print(f"\n# paged_capacity (equal cache memory {mem_gib:.0f} GiB, "
+          f"{cfg.name}, max_seq {max_seq}, page {page})")
+    print(f"contiguous {contig_slots} slots vs paged {paged_live} live "
+          f"requests (mean budget {budgets.mean():.0f} toks) -> "
+          f"{ratio:.2f}x capacity")
+    print(f"[{'PASS' if ratio >= 1.5 else 'FAIL'}] paged capacity >= 1.5x "
+          "contiguous at equal cache memory")
+    return table
+
+
+def serving_paged_bench(seed: int = 0):
+    """Real paged-vs-contiguous runs on the smoke arch at EQUAL KV memory
+    (128 cache token-rows each): the contiguous engine fits 2 full-max_seq
+    slots; the paged engine spends the same rows on 16 shared pages across
+    6 slots, so short-budget requests stack 3x deeper. Reports peak live
+    concurrency, bit-exactness of every request against the contiguous
+    reference, and the batched-vs-sequential admission latency of a burst."""
+    import time
+
+    import numpy as np
+
+    from repro.configs.base import get_config
+    from repro.serving import ServeEngine
+
+    cfg = get_config("qwen2-0.5b-smoke")
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(1, cfg.vocab_size,
+                            size=int(rng.integers(6, 11))).tolist()
+               for _ in range(10)]
+
+    def run(paged: bool, params=None):
+        kw = (dict(batch_size=6, page_size=8, n_pages=17) if paged
+              else dict(batch_size=2))
+        eng = ServeEngine(cfg, params=params, max_seq=64, chunk=8, seed=seed,
+                          **kw)
+        for p in prompts:
+            eng.submit(p, max_new=6)
+        peak = 0
+        while eng.pending:
+            eng.step()
+            peak = max(peak, int(eng.live.sum()))
+        toks = [eng.finished[r].tokens for r in sorted(eng.finished)]
+        return eng, peak, toks
+
+    ref, peak_c, toks_c = run(False)
+    got, peak_p, toks_p = run(True, params=ref.params)
+    exact = toks_c == toks_p
+
+    # admission latency: a 4-request burst admitted one-per-step vs in one
+    # stacked chunk call (same params, fresh caches)
+    def admit_burst(admit_k):
+        eng = ServeEngine(cfg, params=ref.params, max_seq=64, batch_size=4,
+                          chunk=8, admit_k=admit_k)
+        for p in prompts[:4]:
+            eng.submit(p, max_new=2)
+        t0 = time.perf_counter()
+        while eng.queue or any(s is not None for s in eng.slot_req):
+            eng.step()
+            if eng.admissions >= 4:
+                break
+        wall = time.perf_counter() - t0
+        eng.run()
+        return wall, eng.admit_rounds, eng.prefill_s
+
+    seq_s, seq_rounds, seq_prefill = admit_burst(1)
+    bat_s, bat_rounds, bat_prefill = admit_burst(0)
+    res = {
+        "capacity": paged_capacity_table(),
+        "trace": {
+            "requests": len(prompts),
+            "peak_live_contiguous": peak_c, "peak_live_paged": peak_p,
+            "equal_mem_token_rows": 2 * 64,
+            "bit_exact_vs_contiguous": bool(exact),
+        },
+        "admission": {
+            "burst_requests": 4,
+            "sequential_rounds": seq_rounds, "batched_rounds": bat_rounds,
+            "sequential_admit_s": seq_s, "batched_admit_s": bat_s,
+            "sequential_prefill_s": seq_prefill,
+            "batched_prefill_s": bat_prefill,
+        },
+    }
+    print(f"\n# serving_paged (equal-memory smoke run)")
+    print(f"peak live: contiguous {peak_c} vs paged {peak_p} "
+          f"(bit-exact: {exact})")
+    print(f"admission burst of 4: {seq_rounds} rounds "
+          f"{seq_s * 1e3:.1f}ms sequential vs {bat_rounds} round(s) "
+          f"{bat_s * 1e3:.1f}ms batched")
+    ok = exact and peak_p > peak_c and bat_rounds < seq_rounds
+    print(f"[{'PASS' if ok else 'FAIL'}] paged run exact, deeper "
+          "concurrency, batched admission in fewer stacked calls")
+    return res
+
+
 def serving_bench():
-    """The PR 4 serving figure set: modeled decode-plan quality + a real
-    Poisson-trace run through the continuous-batching engine."""
+    """The serving figure set: modeled decode-plan quality, a real
+    Poisson-trace run through the continuous-batching engine, and the
+    paged-cache memory-headroom / admission figures."""
     return {"decode_plans": serving_decode_plan_table(),
-            "trace": serving_trace_bench()}
+            "trace": serving_trace_bench(),
+            "paged": serving_paged_bench()}
 
 
 def _jsonable(obj):

@@ -22,6 +22,16 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--chunk", type=int, default=0,
                     help="prefill chunk size (0 = min(32, max_seq))")
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="paged KV cache page size in tokens (0 = contiguous "
+                         "per-slot regions); legalized to a divisor of "
+                         "--max-seq")
+    ap.add_argument("--pages", type=int, default=0,
+                    help="total KV pages incl. the null page (0 = parity "
+                         "capacity: slots * max_seq/page + 1)")
+    ap.add_argument("--admit-k", type=int, default=0,
+                    help="max requests admitted per step in one stacked "
+                         "chunk call (0 = up to every free slot)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--plan-cache", default=None,
                     help="tuned plan cache JSON; phase-qualified entries "
@@ -36,7 +46,9 @@ def main():
     cfg = get_config(args.arch)
     eng = ServeEngine(cfg, max_seq=args.max_seq, batch_size=args.batch,
                       seed=args.seed, plan_cache=args.plan_cache,
-                      plan_hw=args.plan_hw, chunk=args.chunk)
+                      plan_hw=args.plan_hw, chunk=args.chunk,
+                      page_size=args.page_size, n_pages=args.pages,
+                      admit_k=args.admit_k)
     rng = np.random.default_rng(args.seed)
     n_req = args.requests or args.batch
     prompts = [rng.integers(1, cfg.vocab_size, size=args.prompt_len).tolist()
@@ -54,6 +66,11 @@ def main():
           f"({eng.prefill_tokens / max(eng.prefill_s, 1e-9):.0f} tok/s), "
           f"decode {eng.decode_s:.2f}s "
           f"({eng.decode_s / max(eng.decode_steps, 1) * 1e3:.1f} ms/step)")
+    if eng.paged:
+        print(f"paged cache: page {eng.page_size} toks, "
+              f"{eng.n_pages - 1} usable pages "
+              f"({eng.free_pages} free after drain), "
+              f"{eng.admissions} admissions")
 
 
 if __name__ == "__main__":

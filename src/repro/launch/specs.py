@@ -78,12 +78,21 @@ def prefill_batch_specs(cfg: ModelConfig, shape: ShapeConfig,
 
 
 def decode_inputs(cfg: ModelConfig, shape: ShapeConfig, ctx: AxisCtx):
-    """Returns (cache_structs, cache_specs_tree, token_struct, token_spec)."""
+    """Returns (cache_structs, cache_specs_tree, token_struct, token_spec).
+    shape.page_size > 0 switches to the paged block-table cache layout
+    (shared K/V page pools; see lm.init_paged_cache)."""
     B, S = shape.global_batch, shape.seq_len
-    enc_len = WHISPER_ENC_LEN_DECODE if cfg.n_enc_layers else 0
-    cache = jax.eval_shape(
-        lambda: lm.init_cache(cfg, B, S, enc_len=enc_len))
-    cspecs = cache_specs(cfg, ctx, B, S, enc_len=enc_len)
+    if shape.paged:
+        from repro.parallel.sharding import paged_cache_specs
+        cache = jax.eval_shape(
+            lambda: lm.init_paged_cache(cfg, B, shape.pages_total(),
+                                        shape.page_size))
+        cspecs = paged_cache_specs(cfg, ctx, B)
+    else:
+        enc_len = WHISPER_ENC_LEN_DECODE if cfg.n_enc_layers else 0
+        cache = jax.eval_shape(
+            lambda: lm.init_cache(cfg, B, S, enc_len=enc_len))
+        cspecs = cache_specs(cfg, ctx, B, S, enc_len=enc_len)
     # init_cache entries: attach specs per leaf by structure
     tok = sds((B, 1), jnp.int32)
     dp_ok = B % max(1, ctx.dp_size) == 0 and B > 1

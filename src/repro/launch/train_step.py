@@ -178,9 +178,16 @@ def build_prefill_chunk_step(cfg: ModelConfig, shape: ShapeConfig,
     ctx = make_ctx(cfg, mesh, seq_shard=False)
     C = chunk or min(32, shape.seq_len)
 
-    def fn(params, cache, tokens, pos_off, valid_len, slot):
-        return lm.prefill_chunk(cfg, params, cache, tokens, pos_off,
-                                valid_len, ctx, slot=slot)
+    if shape.paged:
+        def fn(params, cache, tokens, pos_off, valid_len, slot,
+               block_tables):
+            return lm.prefill_chunk(cfg, params, cache, tokens, pos_off,
+                                    valid_len, ctx, slot=slot,
+                                    block_tables=block_tables)
+    else:
+        def fn(params, cache, tokens, pos_off, valid_len, slot):
+            return lm.prefill_chunk(cfg, params, cache, tokens, pos_off,
+                                    valid_len, ctx, slot=slot)
 
     cache_abs, cspecs, _tok, _tok_spec = SP.decode_inputs(cfg, shape, ctx)
     params_abs = lm.abstract_params(cfg, ctx)
@@ -198,6 +205,8 @@ def build_prefill_chunk_step(cfg: ModelConfig, shape: ShapeConfig,
     rep = NamedSharding(mesh, P())
     in_sh = (_named(mesh, pspecs), cache_sh,
              NamedSharding(mesh, P(None, None)), rep, rep, rep)
+    if shape.paged:
+        in_sh = in_sh + (NamedSharding(mesh, P(None, None)),)
     out_sh = (NamedSharding(mesh, P(None, None)), cache_sh)
     base["jit"] = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
                           donate_argnums=1)
@@ -217,12 +226,21 @@ def build_decode_step(cfg: ModelConfig, shape: ShapeConfig,
     ctx = make_ctx(cfg, mesh, seq_shard=False)
     B = shape.global_batch
 
-    def fn(params, cache, tokens, pos, live):
-        logits, new_cache = lm.decode_step(cfg, params, cache, tokens, pos,
-                                           ctx)
-        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
-        next_tok = jnp.where(live[:, None], next_tok, 0)
-        return next_tok, logits, new_cache
+    if shape.paged:
+        def fn(params, cache, tokens, pos, live, block_tables):
+            logits, new_cache = lm.decode_step(cfg, params, cache, tokens,
+                                               pos, ctx,
+                                               block_tables=block_tables)
+            next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+            next_tok = jnp.where(live[:, None], next_tok, 0)
+            return next_tok, logits, new_cache
+    else:
+        def fn(params, cache, tokens, pos, live):
+            logits, new_cache = lm.decode_step(cfg, params, cache, tokens,
+                                               pos, ctx)
+            next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+            next_tok = jnp.where(live[:, None], next_tok, 0)
+            return next_tok, logits, new_cache
 
     cache_abs, cspecs, tok, tok_spec = SP.decode_inputs(cfg, shape, ctx)
     params_abs = lm.abstract_params(cfg, ctx)
@@ -239,6 +257,8 @@ def build_decode_step(cfg: ModelConfig, shape: ShapeConfig,
     row_spec = NamedSharding(mesh, P(*tok_spec[:1]))
     in_sh = (_named(mesh, pspecs), cache_sh, NamedSharding(mesh, tok_spec),
              row_spec, row_spec)
+    if shape.paged:
+        in_sh = in_sh + (NamedSharding(mesh, P(tok_spec[0], None)),)
     out_sh = (NamedSharding(mesh, tok_spec), None, cache_sh)
     jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
                      donate_argnums=1)

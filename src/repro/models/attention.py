@@ -12,6 +12,7 @@ import jax.numpy as jnp
 from repro.models.common import ParamDecl, apply_rope
 
 NEG_INF = -1e30
+NULL_PAGE = 0          # paged KV: page id 0 is reserved, never allocated
 
 
 # ---------------------------------------------------------------------------
@@ -188,13 +189,79 @@ def _pos_col(pos):
     return pos.reshape((-1, 1, 1, 1)) if pos.ndim else pos
 
 
-def decode_attention(q, k_cache, v_cache, pos, kv_start=None) -> jnp.ndarray:
+# -- paged (block-table) cache layout ---------------------------------------
+# The pool holds fixed-size pages shared by every slot: (n_pages, page, Hkv,
+# hd). A block table (B, max_blocks) int32 maps each row's logical block i
+# (positions [i*page, (i+1)*page)) to a physical page; entry 0 is the NULL
+# page — never allocated, so unmapped blocks gather it (masked by position
+# validity) and dead-row writes are steered into it.
+
+
+def paged_gather(pool, block_table):
+    """Materialize the logical per-row cache view from the shared pool.
+    pool: (P, page, Hkv, hd); block_table: (B, nb) int32 page ids.
+    Returns (B, nb*page, Hkv, hd) — row b's logical positions in order."""
+    g = jnp.take(pool, block_table, axis=0)       # (B, nb, page, Hkv, hd)
+    B, nb, page, Hkv, hd = g.shape
+    return g.reshape(B, nb * page, Hkv, hd)
+
+
+def paged_update_cache(k_pool, v_pool, k_new, v_new, pos, block_table):
+    """Decode write through block tables: insert (B, 1, Hkv, hd) at per-row
+    logical position ``pos`` (() or (B,)). Rows whose mapped page is the
+    null page (free slots — all-zero table rows) write harmlessly into it.
+    Returns the updated pools."""
+    P, page, Hkv, hd = k_pool.shape
+    B = k_new.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (B,))
+    blk = jnp.clip(pos // page, 0, block_table.shape[1] - 1)
+    pid = jnp.take_along_axis(block_table, blk[:, None], axis=1)[:, 0]
+    phys = pid * page + pos % page                # null page -> rows [0,page)
+    kf = k_pool.reshape(P * page, Hkv, hd)
+    vf = v_pool.reshape(P * page, Hkv, hd)
+    kf = kf.at[phys].set(k_new[:, 0].astype(kf.dtype))
+    vf = vf.at[phys].set(v_new[:, 0].astype(vf.dtype))
+    return kf.reshape(P, page, Hkv, hd), vf.reshape(P, page, Hkv, hd)
+
+
+def paged_chunk_update(k_pool, v_pool, k, v, pos_off, block_table, tok_mask):
+    """Prefill-chunk write through block tables: k/v (A, C, Hkv, hd) land at
+    logical positions pos_off[a] + [0, C). tok_mask (A, C) marks valid
+    tokens — tail pads and inactive admission rows are steered to the null
+    page, so one stacked call admits several requests without branching.
+    Returns the updated pools."""
+    P, page, Hkv, hd = k_pool.shape
+    A, C = k.shape[:2]
+    pos_off = jnp.broadcast_to(jnp.asarray(pos_off, jnp.int32).reshape(-1),
+                               (A,))
+    positions = pos_off[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+    nb = block_table.shape[1]
+    blk = positions // page
+    pid = jnp.take_along_axis(block_table, jnp.clip(blk, 0, nb - 1), axis=1)
+    pid = jnp.where(tok_mask & (blk < nb), pid, NULL_PAGE)
+    phys = (pid * page + positions % page).reshape(A * C)
+    kf = k_pool.reshape(P * page, Hkv, hd)
+    vf = v_pool.reshape(P * page, Hkv, hd)
+    kf = kf.at[phys].set(k.reshape(A * C, Hkv, hd).astype(kf.dtype))
+    vf = vf.at[phys].set(v.reshape(A * C, Hkv, hd).astype(vf.dtype))
+    return kf.reshape(P, page, Hkv, hd), vf.reshape(P, page, Hkv, hd)
+
+
+def decode_attention(q, k_cache, v_cache, pos, kv_start=None,
+                     block_table=None) -> jnp.ndarray:
     """q: (B, 1, H, hd); caches: (B, S, Hkv, hd); pos: () or (B,) per-row
     current index (continuous batching decodes every slot at its OWN
     position). Attends over cache[kv_start : pos+1] via masking (fixed-size
     cache = production decode; the memory-roofline term reads the full
     cache, as real HW does). kv_start: optional ()/(B,) first valid cache
-    index — left-padded rows exclude their pad region exactly."""
+    index — left-padded rows exclude their pad region exactly.
+    block_table: optional (B, nb) int32 — the caches are then shared
+    (n_pages, page, Hkv, hd) pools and each row's logical view is gathered
+    through its table (unmapped blocks hit the null page, masked by the
+    position-validity test exactly like stale contiguous rows)."""
+    if block_table is not None:
+        k_cache = paged_gather(k_cache, block_table)
+        v_cache = paged_gather(v_cache, block_table)
     B, S, Hkv, hd = k_cache.shape
     H = q.shape[2]
     k = _expand_kv(k_cache, H)

@@ -294,22 +294,30 @@ def _mlp_tail(cfg, p, x, ctx: AxisCtx):
 
 
 def sharded_decode_attention(ctx: AxisCtx, a, q, k_cache, v_cache, t_pos,
-                             kv_start=None):
+                             kv_start=None, block_table=None):
     """Decode attention without gathering the cache. t_pos: () or (B,)
     per-row positions (slot-based decode); kv_start: optional ()/(B,) first
     valid cache index per row (left-padded prefill exclusion).
+    block_table: optional (B, nb) int32 — the caches are then shared paged
+    pools (n_pages, page, Hkv, hd) and rows read their logical view through
+    the table.
 
     * Hkv divides the model axis → kv-group sharding: q reshaped
-      (B,1,Hkv,rep,hd) and sharded with its kv head; zero collectives.
+      (B,1,Hkv,rep,hd) and sharded with its kv head; zero collectives
+      (paged pools shard the SAME way — the Hkv axis — with the block
+      table replicated, so the per-shard gather stays local).
     * else S divides → split-KV flash decode: each rank reduces its cache
       shard to (m, l, acc) partials, merged by pmax + two psums of
       (B,H,1[,hd]) — ~kB per layer instead of all-gathering GBs of cache.
     * else → plain replicated decode.
     """
-    B, S, Hkv, hd = k_cache.shape
+    B = q.shape[0]
+    Hkv, hd = k_cache.shape[-2], k_cache.shape[-1]
     m = ctx.model_size
     if not ctx.active or m == 1:
-        return A.decode_attention(q, k_cache, v_cache, t_pos, kv_start)
+        return A.decode_attention(q, k_cache, v_cache, t_pos, kv_start,
+                                  block_table)
+    S = k_cache.shape[1] if block_table is None else None
     mx = ctx.model_axis
     dp = ctx.dp_axes if ctx.dp_size > 1 and B % ctx.dp_size == 0 else None
     H = q.shape[2]
@@ -322,6 +330,22 @@ def sharded_decode_attention(ctx: AxisCtx, a, q, k_cache, v_cache, t_pos,
                                 (B,)))
     if Hkv % m == 0:
         qg = q.reshape(B, 1, Hkv, rep, hd)
+        if block_table is not None:
+            # paged pools shard on the Hkv axis; the block table rides along
+            # replicated and each shard gathers its local head slice
+            def body_p(qk, kc, vc, pv, sv, bt):
+                qk = qk.reshape(qk.shape[0], 1, -1, hd)
+                return A.decode_attention(qk, kc, vc, pv, sv, bt)
+
+            o = shard_map(
+                body_p, mesh=ctx.mesh,
+                in_specs=(P(dp, None, mx, None, None),
+                          P(None, None, mx, None), P(None, None, mx, None),
+                          P(dp), P(dp), P(dp, None)),
+                out_specs=P(dp, None, mx, None),
+                check_vma=False)(qg, k_cache, v_cache, pos_v, start_v,
+                                 block_table)
+            return o.reshape(B, 1, H, hd)
 
         def body(qk, kc, vc, pv, sv):
             qk = qk.reshape(qk.shape[0], 1, -1, hd)  # (B_l,1,Hkv_l*rep,hd)
@@ -335,6 +359,11 @@ def sharded_decode_attention(ctx: AxisCtx, a, q, k_cache, v_cache, t_pos,
             out_specs=P(dp, None, mx, None),
             check_vma=False)(qg, k_cache, v_cache, pos_v, start_v)
         return o.reshape(B, 1, H, hd)
+    if block_table is not None:
+        # indivisible heads: paged pools stay replicated (split-KV does not
+        # map onto the page pool layout — pages are position-interleaved)
+        return A.decode_attention(q, k_cache, v_cache, t_pos, kv_start,
+                                  block_table)
     if S % m == 0:
         S_loc = S // m
 
@@ -355,11 +384,14 @@ def sharded_decode_attention(ctx: AxisCtx, a, q, k_cache, v_cache, t_pos,
 
 
 def decode_layer(cfg, pos: int, p, x, ctx: AxisCtx, cache, t_pos,
-                 has_cross: bool = False, rope_pos=None, kv_start=None):
+                 has_cross: bool = False, rope_pos=None, kv_start=None,
+                 block_table=None):
     """x: (B, 1, d); cache: layer cache dict; t_pos: () or (B,) int32 cache
     WRITE index per row. rope_pos: optional ()/(B,) RoPE position when it
     differs from the cache index (left-padded rows: real position = index -
     pad offset); kv_start: optional ()/(B,) first valid cache index.
+    block_table: optional (B, nb) int32 — K/V cache entries are then shared
+    paged pools and reads/writes go through per-row tables.
     Returns (x, new_cache)."""
     kind = cfg.layer_kind(pos)
     a = cfg.attn
@@ -374,9 +406,14 @@ def decode_layer(cfg, pos: int, p, x, ctx: AxisCtx, cache, t_pos,
                 jnp.asarray(rp, jnp.int32).reshape((-1, 1)), (B, 1))
             q = A.apply_rope(q, pos_arr, a.rope_theta)
             k = A.apply_rope(k, pos_arr, a.rope_theta)
-        kc, vc = A.update_cache(cache["k"], cache["v"], k, v, t_pos)
+        if block_table is not None:
+            kc, vc = A.paged_update_cache(cache["k"], cache["v"], k, v,
+                                          t_pos, block_table)
+        else:
+            kc, vc = A.update_cache(cache["k"], cache["v"], k, v, t_pos)
         new_cache["k"], new_cache["v"] = kc, vc
-        o = sharded_decode_attention(ctx, a, q, kc, vc, t_pos, kv_start)
+        o = sharded_decode_attention(ctx, a, q, kc, vc, t_pos, kv_start,
+                                     block_table)
         o = o.reshape(B, 1, a.n_heads * a.head_dim)
         h = o @ p["attn"]["wo"]
         x = x + h
@@ -400,19 +437,25 @@ def decode_layer(cfg, pos: int, p, x, ctx: AxisCtx, cache, t_pos,
 
 
 def chunk_layer(cfg, pos: int, p, x, ctx: AxisCtx, cache, pos_off, q_pos,
-                mask, valid_len):
-    """One prompt CHUNK against the slot's cache region: x (Bc, C, d) enters
-    at cache indices [pos_off, pos_off + C); queries attend over the whole
-    cache up to their own index (previous chunks included), so a prompt
-    split into chunks reproduces the monolithic prefill exactly.
+                mask, valid_len, block_table=None):
+    """One prompt CHUNK per admission row against its cache region: x
+    (A, C, d) rows enter at cache indices [pos_off[a], pos_off[a] + C);
+    queries attend over their OWN row's cache up to their own index
+    (previous chunks included), so a prompt split into chunks reproduces
+    the monolithic prefill exactly — and A > 1 rows admit several queued
+    requests in one stacked call.
 
-    q_pos: (Bc, C) absolute cache indices of the chunk tokens (index ==
-    RoPE position — slot prefill is right-anchored at 0); mask: (Bc, C)
-    validity of the final partial chunk's tail; valid_len: () count of
-    valid tokens. Tail-pad K/V land at indices > every valid query's
-    position (causal-masked now, overwritten by the first decode steps
-    before any query can reach them), and the SSM treats pads as identity
-    steps, so the stitch is exact. Returns (x, new_cache)."""
+    pos_off: (A,) first cache index per row; q_pos: (A, C) absolute cache
+    indices of the chunk tokens (index == RoPE position — slot prefill is
+    right-anchored at 0); mask: (A, C) token validity (final partial
+    chunk's tail AND rows whose prompt already ended in this stacked
+    step); valid_len: (A,) valid-token counts. Tail-pad K/V land at
+    indices > every valid query's position (causal-masked now, overwritten
+    by the first decode steps before any query can reach them), and the
+    SSM treats pads as identity steps, so the stitch is exact.
+    block_table: optional (A, nb) int32 — K/V entries are then shared
+    paged pools; pad/inactive tokens write the null page. Returns
+    (x, new_cache)."""
     kind = cfg.layer_kind(pos)
     a = cfg.attn
     new_cache = dict(cache) if cache is not None else None
@@ -423,11 +466,21 @@ def chunk_layer(cfg, pos: int, p, x, ctx: AxisCtx, cache, pos_off, q_pos,
         if a.rope_theta > 0:
             q = A.apply_rope(q, q_pos, a.rope_theta)
             k = A.apply_rope(k, q_pos, a.rope_theta)
-        kc = jax.lax.dynamic_update_slice_in_dim(
-            cache["k"], k.astype(cache["k"].dtype), pos_off, axis=1)
-        vc = jax.lax.dynamic_update_slice_in_dim(
-            cache["v"], v.astype(cache["v"].dtype), pos_off, axis=1)
-        new_cache["k"], new_cache["v"] = kc, vc
+        if block_table is not None:
+            kp, vp = A.paged_chunk_update(cache["k"], cache["v"], k, v,
+                                          pos_off, block_table, mask)
+            new_cache["k"], new_cache["v"] = kp, vp
+            kc = A.paged_gather(kp, block_table)   # (A, nb*page, Hkv, hd)
+            vc = A.paged_gather(vp, block_table)
+        else:
+            def row_upd(c, n, off):
+                return jax.lax.dynamic_update_slice_in_dim(c, n, off, axis=0)
+
+            kc = jax.vmap(row_upd)(cache["k"], k.astype(cache["k"].dtype),
+                                   pos_off)
+            vc = jax.vmap(row_upd)(cache["v"], v.astype(cache["v"].dtype),
+                                   pos_off)
+            new_cache["k"], new_cache["v"] = kc, vc
         S_tot = kc.shape[1]
         kv_pos = jnp.broadcast_to(jnp.arange(S_tot)[None, :], (Bc, S_tot))
         o = A.attention(q, kc, vc, causal=True, q_block=a.q_block,

@@ -235,13 +235,51 @@ def init_cache(cfg, batch_size: int, seq_len: int, ctx: AxisCtx = AxisCtx(),
     return tuple(caches)
 
 
+def init_paged_cache(cfg, n_slots: int, n_pages: int, page_size: int,
+                     ctx: AxisCtx = AxisCtx()) -> Tuple:
+    """Paged decode cache: K/V entries are SHARED page pools (n_periods,
+    n_pages, page_size, Hkv, hd) — every slot reads/writes through its
+    block table — while SSM conv/state stay dense per-slot (they are O(1)
+    per request and carry no per-token history). Page 0 is the null page
+    (see serving/paged_cache.py)."""
+    assert cfg.n_enc_layers == 0, "paged serving: decoder-only models"
+    p = period_of(cfg)
+    n_periods = cfg.n_layers // p
+    a = cfg.attn
+    dt = jnp.dtype(cfg.param_dtype)
+    caches = []
+    for pos in range(p):
+        if cfg.layer_kind(pos) == "a":
+            e = {
+                "k": jnp.zeros((n_periods, n_pages, page_size, a.n_kv_heads,
+                                a.head_dim), dt),
+                "v": jnp.zeros((n_periods, n_pages, page_size, a.n_kv_heads,
+                                a.head_dim), dt),
+            }
+        else:
+            s = cfg.ssm
+            d_in = s.expand * cfg.d_model
+            nh = d_in // s.head_dim
+            e = {
+                "conv": jnp.zeros((n_periods, n_slots, s.conv_width - 1,
+                                   d_in + 2 * s.d_state), dt),
+                "state": jnp.zeros((n_periods, n_slots, nh, s.d_state,
+                                    s.head_dim), jnp.float32),
+            }
+        caches.append(e)
+    return tuple(caches)
+
+
 def decode_step(cfg, params, cache, tokens, t_pos, ctx: AxisCtx = AxisCtx(),
-                rope_pos=None, kv_start=None):
+                rope_pos=None, kv_start=None, block_tables=None):
     """tokens: (B, 1) int32; t_pos: () int32 shared position, or (B,) int32
     PER-ROW cache write indices (slot-based decode — every in-flight request
     sits at its own sequence position). rope_pos: optional ()/(B,) RoPE
     positions when they differ from the cache index (left-padded rows);
     kv_start: optional ()/(B,) first valid cache index per row.
+    block_tables: optional (B, max_blocks) int32 — the cache's K/V entries
+    are then shared paged pools (see ``init_paged_cache``) and each row
+    resolves its logical positions through its table.
     Returns (logits (B, V), cache)."""
     Bsz = tokens.shape[0]
     t_vec = jnp.broadcast_to(
@@ -264,7 +302,8 @@ def decode_step(cfg, params, cache, tokens, t_pos, ctx: AxisCtx = AxisCtx(),
         for pos in range(p):
             x, nc = B.decode_layer(cfg, pos, layer_params[pos], x, ctx,
                                    cache_in[pos], t_vec, has_cross=has_cross,
-                                   rope_pos=rope_vec, kv_start=start_vec)
+                                   rope_pos=rope_vec, kv_start=start_vec,
+                                   block_table=block_tables)
             new_caches.append(nc)
         return x, tuple(new_caches)
 
@@ -281,42 +320,62 @@ def decode_step(cfg, params, cache, tokens, t_pos, ctx: AxisCtx = AxisCtx(),
 
 
 def prefill_chunk(cfg, params, cache, tokens, pos_off, valid_len,
-                  ctx: AxisCtx = AxisCtx(), slot=None):
-    """One prompt chunk against a slot's cache region.
+                  ctx: AxisCtx = AxisCtx(), slot=None, block_tables=None):
+    """Prompt chunks against per-slot cache regions — one admission row or
+    a STACK of them (batched chunk admission: several queued requests run
+    their chunk step in one compiled call).
 
-    tokens: (Bc, C) int32, the chunk (tail-padded when valid_len < C);
-    pos_off: () int32 cache index of the chunk's first token; valid_len: ()
-    int32 valid tokens in this chunk; slot: optional () int32 — when given,
-    ``cache`` is the FULL (n_periods, n_slots, S, ...) decode cache and the
-    chunk runs against batch row ``slot`` (sliced out, updated, written
-    back), which is how the serving engine stitches prompts into per-slot
-    regions with ONE compiled function for every slot.
+    tokens: (A, C) int32, one chunk per admission row (tail-padded when
+    valid_len < C); pos_off: ()/(A,) int32 cache index of each row's first
+    token; valid_len: ()/(A,) int32 valid tokens per row (0 = the row's
+    prompt already ended in this stacked step — pure identity row); slot:
+    optional ()/(A,) int32 — when given, ``cache`` is the FULL decode
+    cache and each row runs against its own slot (gathered out, updated,
+    scattered back), which is how the serving engine stitches prompts into
+    per-slot regions with ONE compiled function for every slot set.
+    block_tables: optional (A, max_blocks) int32 — the cache's K/V entries
+    are then shared paged pools (``init_paged_cache``) written through
+    each row's table (SSM conv/state keep the dense per-slot layout).
 
-    The chunk attends over the cache up to its own indices (earlier chunks
-    included) with exact causal/pad masking, SSM layers scan on from the
-    cached (conv window, SSD state) — reset in-graph when pos_off == 0, so
-    a freed slot needs no host-side scrubbing before reuse. Returns
-    (logits (Bc, V) at the last VALID position, updated cache)."""
+    The chunk attends over its row's cache up to its own indices (earlier
+    chunks included) with exact causal/pad masking, SSM layers scan on
+    from the cached (conv window, SSD state) — reset in-graph where
+    pos_off == 0, so a freed slot needs no host-side scrubbing before
+    reuse. Returns (logits (A, V) at each row's last VALID position,
+    updated cache)."""
     assert cfg.n_enc_layers == 0, "chunked prefill: decoder-only models"
-    full = cache
-    if slot is not None:
-        cache = jax.tree_util.tree_map(
-            lambda c: jax.lax.dynamic_slice_in_dim(c, slot, 1, axis=1),
-            cache)
     Bc, C = tokens.shape
-    pos_off = jnp.asarray(pos_off, jnp.int32)
-    valid_len = jnp.asarray(valid_len, jnp.int32)
+    pos_off = jnp.broadcast_to(
+        jnp.asarray(pos_off, jnp.int32).reshape(-1), (Bc,))
+    valid_len = jnp.broadcast_to(
+        jnp.asarray(valid_len, jnp.int32).reshape(-1), (Bc,))
+    paged = block_tables is not None
+    full = cache
+    slots = None
+    if slot is not None:
+        slots = jnp.broadcast_to(jnp.asarray(slot, jnp.int32).reshape(-1),
+                                 (Bc,))
+        # gather the admission rows: SSM entries always carry a slot axis;
+        # K/V only in the contiguous layout (paged pools are shared)
+        cache = tuple(
+            {k: (v if paged and k in ("k", "v")
+                 else jnp.take(v, slots, axis=1))
+             for k, v in e.items()} for e in cache)
     # first chunk of a request: the slot's SSM carry must restart from zero
     # (K/V need no reset — stale indices are causal-masked / overwritten)
     first = pos_off == 0
-    cache = tuple(
-        {k: (jnp.where(first, jnp.zeros_like(v), v)
-             if k in ("conv", "state") else v)
-         for k, v in e.items()} for e in cache)
+
+    def _reset(k, v):
+        if k not in ("conv", "state"):
+            return v
+        f = first.reshape((1, -1) + (1,) * (v.ndim - 2))
+        return jnp.where(f, jnp.zeros_like(v), v)
+
+    cache = tuple({k: _reset(k, v) for k, v in e.items()} for e in cache)
 
     h = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
-    q_pos = jnp.broadcast_to(pos_off + jnp.arange(C)[None, :], (Bc, C))
-    mask = jnp.broadcast_to(jnp.arange(C)[None, :] < valid_len, (Bc, C))
+    q_pos = pos_off[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+    mask = jnp.arange(C)[None, :] < valid_len[:, None]
     p = period_of(cfg)
 
     def period_body(x, inp):
@@ -325,18 +384,30 @@ def prefill_chunk(cfg, params, cache, tokens, pos_off, valid_len,
         for pos in range(p):
             x, nc = B.chunk_layer(cfg, pos, layer_params[pos], x, ctx,
                                   cache_in[pos], pos_off, q_pos, mask,
-                                  valid_len)
+                                  valid_len, block_table=block_tables)
             new_caches.append(nc)
         return x, tuple(new_caches)
 
     h, new_cache = jax.lax.scan(
         period_body, h, (tuple(params["layers"]), cache))
     h = apply_norm(cfg, params["ln_f"], h)
-    h_last = jax.lax.dynamic_slice_in_dim(h, valid_len - 1, 1, axis=1)[:, 0]
+    h_last = jax.vmap(
+        lambda hr, vl: jax.lax.dynamic_slice_in_dim(
+            hr, jnp.maximum(vl - 1, 0), 1, axis=0))(h, valid_len)[:, 0]
     logits = (h_last.astype(jnp.float32)
               @ output_head(cfg, params).astype(jnp.float32))
     if slot is not None:
-        new_cache = jax.tree_util.tree_map(
-            lambda f, n: jax.lax.dynamic_update_slice_in_dim(
-                f, n.astype(f.dtype), slot, axis=1), full, new_cache)
+        # scatter the admission rows back (paged K/V pools are already
+        # global — the layers updated them directly)
+        out = []
+        for e_new, e_full in zip(new_cache, full):
+            d = {}
+            for k, n in e_new.items():
+                if paged and k in ("k", "v"):
+                    d[k] = n
+                else:
+                    d[k] = e_full[k].at[:, slots].set(
+                        n.astype(e_full[k].dtype))
+            out.append(d)
+        new_cache = tuple(out)
     return logits, new_cache

@@ -193,12 +193,20 @@ def ssm_forward(cfg, s, p, x, cache=None, pos=None, return_cache=False,
                 if chunk_cont:
                     # conv window after the last VALID token of the chunk:
                     # concat(prev window, chunk inputs) sliced at valid_len
+                    # — () shared, or (B,) per-row (batched chunk admission
+                    # stacks rows at different fill levels)
                     xp = jnp.concatenate(
                         [conv_state.astype(conv_in.dtype), conv_in], axis=1)
                     off = (jnp.asarray(valid_len, jnp.int32)
                            if valid_len is not None else jnp.int32(S_len))
-                    conv_entry = jax.lax.dynamic_slice_in_dim(
-                        xp, off, W - 1, axis=1).astype(x.dtype)
+                    if off.ndim:
+                        conv_entry = jax.vmap(
+                            lambda xr, o: jax.lax.dynamic_slice_in_dim(
+                                xr, o, W - 1, axis=0))(xp, off)
+                        conv_entry = conv_entry.astype(x.dtype)
+                    else:
+                        conv_entry = jax.lax.dynamic_slice_in_dim(
+                            xp, off, W - 1, axis=1).astype(x.dtype)
                 else:
                     conv_entry = conv_in[:, -(W - 1):].astype(x.dtype)
             else:

@@ -114,3 +114,33 @@ def cache_specs(cfg, ctx: AxisCtx, batch: int, seq_len: int, enc_len: int = 0):
                             None, None)}
         specs.append(e)
     return tuple(specs)
+
+
+def paged_cache_specs(cfg, ctx: AxisCtx, n_slots: int):
+    """PartitionSpec tree matching lm.init_paged_cache layout: K/V page
+    pools (n_periods, n_pages, page, Hkv, hd) shard on the kv-head axis
+    when divisible (the pool's page axis is position-interleaved — never
+    sharded); SSM entries keep the dense per-slot specs."""
+    from repro.models.lm import period_of
+    msize = ctx.model_size
+    dp_ok = n_slots % max(1, ctx.dp_size) == 0 and n_slots > 1
+    bspec = ctx.dp_axes if dp_ok else None
+    a = cfg.attn
+    kv = P(None, None, None,
+           "model" if a is not None and a.n_kv_heads % msize == 0 else None,
+           None)
+    s = cfg.ssm
+    specs = []
+    for pos in range(period_of(cfg)):
+        if cfg.layer_kind(pos) == "a":
+            e = {"k": kv, "v": kv}
+        else:
+            d_in = s.expand * cfg.d_model
+            nh = d_in // s.head_dim
+            conv_ch = d_in + 2 * s.d_state
+            e = {"conv": P(None, bspec, None,
+                           "model" if conv_ch % msize == 0 else None),
+                 "state": P(None, bspec, "model" if nh % msize == 0 else None,
+                            None, None)}
+        specs.append(e)
+    return tuple(specs)

@@ -1,2 +1,4 @@
 from repro.serving.engine import (GenerateResult, Request,  # noqa: F401
                                   ServeEngine, stitch_prefill_cache)
+from repro.serving.paged_cache import (BlockAllocator,  # noqa: F401
+                                       PagedCacheConfig, pages_for)

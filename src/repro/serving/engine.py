@@ -1,17 +1,27 @@
 """Continuous-batching serving engine: slot scheduler + masked chunked
-prefill + per-row-position decode.
+prefill + per-row-position decode, with an optional paged block-table KV
+cache.
 
 Requests are ``submit()``-ed into a queue and admitted MID-FLIGHT into a
 fixed pool of decode slots: a freed slot (eos / max_new) is refilled from
 the queue on the next ``step()``, so the decode batch stays full under
 streaming arrivals instead of draining to the slowest request. Admission
-runs the prompt through the chunked prefill step — fixed-size chunks
-against the slot's cache region, the final partial chunk tail-masked — and
-decoding advances every live slot at its OWN position (vector positions,
-donated cache, live-slot mask). Mixed-length batches are EXACT: pad/tail
-tokens are masked out of attention and are identity steps in the SSM scan
-(the old left-padding approximation is gone; MoE layers remain subject to
-per-chunk capacity routing, the standard batched-MoE caveat).
+runs prompts through the chunked prefill step — and it is BATCHED: up to
+``admit_k`` queued requests run their chunks in ONE stacked call per step
+(per-row offsets/masks keep every row exact), so bursty arrivals no longer
+serialize one prefill per request. Decoding advances every live slot at its
+OWN position (vector positions, donated cache, live-slot mask). Mixed-length
+batches are EXACT: pad/tail tokens are masked out of attention and are
+identity steps in the SSM scan (MoE layers remain subject to per-chunk
+capacity routing, the standard batched-MoE caveat).
+
+With ``page_size > 0`` the K/V cache is PAGED (serving/paged_cache.py):
+K/V live in shared fixed-size page pools, each request owns just enough
+pages for its ``prompt + max_new`` budget through a block table, and pages
+return to the free list at eos — so admission is gated on the FREE-PAGE
+budget, not on ``slots × max_seq`` regions, and the same cache memory holds
+``~max_seq / mean_request_budget`` times more live requests. SSM conv/SSD
+state stay dense per-slot (they are O(1) per request).
 
 The same engine runs on a mesh (pjit shardings from the step builders) or a
 single device. Plans resolve per latency phase: the decode step looks up
@@ -27,7 +37,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import deque
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -37,6 +47,7 @@ from repro.configs.base import ModelConfig, ShapeConfig
 from repro.launch.train_step import (build_decode_step,
                                      build_prefill_chunk_step)
 from repro.models import lm
+from repro.serving.paged_cache import BlockAllocator, pages_for
 
 
 def stitch_prefill_cache(cfg, decode_cache, prefill_cache, prompt_len: int):
@@ -97,7 +108,8 @@ class ServeEngine:
     def __init__(self, cfg: ModelConfig, params=None, mesh=None,
                  max_seq: int = 256, batch_size: int = 4, seed: int = 0,
                  plan_cache: Optional[str] = None, plan_hw: str = "",
-                 chunk: int = 0):
+                 chunk: int = 0, page_size: int = 0, n_pages: int = 0,
+                 admit_k: int = 0):
         self.cfg = cfg
         self.mesh = mesh
         self.max_seq = max_seq
@@ -112,10 +124,30 @@ class ServeEngine:
         while max_seq % chunk:
             chunk -= 1
         self.chunk = chunk
-        # ONE shape describes the shared donated cache (slots × max_seq):
-        # both steps derive identical cache shardings from it on a mesh
+        # paged block-table KV cache: page_size > 0 pools K/V as shared
+        # fixed-size pages and admits against the free-page budget. The
+        # page is legalized to a divisor of max_seq the same way (a block
+        # table must tile [0, max_seq) exactly).
+        if page_size:
+            page_size = max(1, min(page_size, max_seq))
+            while max_seq % page_size:
+                page_size -= 1
+        self.page_size = page_size
+        self.paged = page_size > 0
+        self.max_blocks = (max_seq // page_size) if self.paged else 0
+        if self.paged and not n_pages:
+            # parity capacity by default: every slot can still hold max_seq
+            n_pages = batch_size * self.max_blocks + 1
+        self.n_pages = n_pages if self.paged else 0
+        # how many queued requests one step() may admit in ONE stacked
+        # chunk call (0 = up to every free slot)
+        self.admit_k = admit_k
+        # ONE shape describes the shared donated cache: both steps derive
+        # identical cache shardings from it on a mesh (paged: the K/V page
+        # pools + per-slot SSM state)
         dshape = ShapeConfig("serve_decode", seq_len=max_seq,
-                             global_batch=batch_size, kind="decode")
+                             global_batch=batch_size, kind="decode",
+                             page_size=self.page_size, n_pages=self.n_pages)
         self.prefill = build_prefill_chunk_step(cfg, dshape, mesh,
                                                 chunk=self.chunk,
                                                 plan_cache=plan_cache,
@@ -128,9 +160,20 @@ class ServeEngine:
                                     self.prefill["ctx"])
         self.params = params
         # device state: the decode cache, donated through every chunk/decode
-        # call, holds one region (batch row) per slot
-        self.cache = lm.init_cache(cfg, batch_size, max_seq,
-                                   self.decode["ctx"])
+        # call — contiguous: one region (batch row) per slot; paged: shared
+        # K/V page pools + dense per-slot SSM entries
+        if self.paged:
+            self.cache = lm.init_paged_cache(cfg, batch_size, self.n_pages,
+                                             page_size, self.decode["ctx"])
+            self.alloc = BlockAllocator(self.n_pages, page_size,
+                                        self.max_blocks)
+            self.block_tables = np.zeros((batch_size, self.max_blocks),
+                                         np.int32)
+        else:
+            self.cache = lm.init_cache(cfg, batch_size, max_seq,
+                                       self.decode["ctx"])
+            self.alloc = None
+            self.block_tables = None
         # host scheduler state
         self.slot_req: List[Optional[Request]] = [None] * batch_size
         self.pos = np.zeros((batch_size,), np.int32)      # next write index
@@ -146,6 +189,7 @@ class ServeEngine:
         self.decode_steps = 0
         self.decode_tokens = 0
         self.admissions = 0
+        self.admit_rounds = 0       # stacked chunk-admission calls
 
     # -- streaming API ------------------------------------------------------
 
@@ -155,6 +199,13 @@ class ServeEngine:
         ``step()`` (or immediately inside ``run()``)."""
         assert len(prompt) + max_new <= self.max_seq, "exceeds engine max_seq"
         assert len(prompt) > 0, "empty prompt"
+        if self.paged:
+            # a budget beyond the POOL capacity would never fit, and the
+            # FIFO admission gate would stall on it (and everything queued
+            # behind it) forever — reject it at the door instead
+            need = pages_for(len(prompt) + max_new, self.page_size)
+            assert need <= self.n_pages - 1, (
+                f"request needs {need} pages, pool holds {self.n_pages - 1}")
         req = Request(self._next_rid, list(prompt), max_new, eos_id,
                       submit_t=time.perf_counter())
         self._next_rid += 1
@@ -164,6 +215,11 @@ class ServeEngine:
     @property
     def pending(self) -> bool:
         return bool(self.queue) or bool(self.live.any())
+
+    @property
+    def free_pages(self) -> int:
+        """Free pages in the pool (paged mode; contiguous reports 0)."""
+        return self.alloc.free_pages if self.paged else 0
 
     def _record_token(self, req: Request, tok: int, t_idx: int) -> bool:
         """Append a generated token; returns True when the request is done
@@ -184,49 +240,119 @@ class ServeEngine:
         self.finished[req.rid] = req
         self.slot_req[slot] = None
         self.live[slot] = False
+        if self.paged:
+            # pages back to the free list; the zeroed table row steers any
+            # write from this (now dead) decode row into the null page
+            self.alloc.free_slot(slot)
+            self.block_tables[slot] = 0
 
-    def _admit(self, slot: int, req: Request):
-        """Chunked prefill of ``req`` into ``slot``'s cache region; the
-        first generated token comes from the last chunk's logits."""
+    def _gather_admissions(self) -> List[Tuple[int, Request]]:
+        """Pop queued requests (FIFO) into free slots, gating on the free-
+        page budget in paged mode. Pages are claimed here, before the
+        stacked chunk call, so the batch can never oversubscribe the pool.
+        Admission stays in arrival order: when the head does not fit, we
+        wait for pages rather than admitting around it."""
+        k = self.admit_k or self.B
+        free = [s for s in range(self.B) if not self.live[s]
+                and self.slot_req[s] is None]
+        pairs: List[Tuple[int, Request]] = []
+        while self.queue and free and len(pairs) < k:
+            req = self.queue[0]
+            budget = len(req.prompt) + req.max_new
+            if self.paged:
+                if not self.alloc.can_admit(budget):
+                    break
+                slot = free.pop(0)
+                pages = self.alloc.allocate(slot, budget)
+                row = np.zeros((self.max_blocks,), np.int32)
+                row[:len(pages)] = pages
+                self.block_tables[slot] = row
+            else:
+                slot = free.pop(0)
+            self.queue.popleft()
+            pairs.append((slot, req))
+        return pairs
+
+    def _admit_batch(self, pairs: List[Tuple[int, Request]]):
+        """Chunked prefill of every (slot, request) pair in ONE stacked call
+        per chunk step: per-row offsets and tail masks keep rows exact, rows
+        whose prompt already ended ride along as identity rows (their K/V
+        writes are masked — paged: steered to the null page). Each request's
+        first generated token comes from its LAST chunk's logits row.
+
+        The stacked row count is padded UP to the next power of two using
+        leftover FREE slots as all-identity parking rows (valid_len 0, so
+        a parking row only scribbles on a free slot's region — scrubbed at
+        its next admission anyway — or the null page): distinct XLA
+        compiles stay O(log slots) instead of one per admission count."""
         t0 = time.perf_counter()
         C = self.chunk
-        plen = len(req.prompt)
+        A = len(pairs)
+        taken = {s for s, _ in pairs}
+        parking = [s for s in range(self.B)
+                   if not self.live[s] and self.slot_req[s] is None
+                   and s not in taken]
+        n_pad = min(len(parking),
+                    (1 << max(0, A - 1).bit_length()) - A)
+        slots = np.array([s for s, _ in pairs] + parking[:n_pad], np.int32)
+        plens = np.array([len(r.prompt) for _, r in pairs] + [0] * n_pad,
+                         np.int32)
+        A = A + n_pad
+        nchunks = np.maximum(1, -(-plens // C))
         fn = self.prefill["jit"]
-        logits = None
-        for off in range(0, plen, C):
-            part = req.prompt[off:off + C]
-            valid = len(part)
-            part = part + [0] * (C - valid)
-            toks = jnp.asarray([part], jnp.int32)
-            logits, self.cache = fn(self.params, self.cache, toks,
-                                    jnp.int32(off), jnp.int32(valid),
-                                    jnp.int32(slot))
-        first = int(np.asarray(jnp.argmax(logits[0])))
+        first_tok = np.zeros((A,), np.int32)
+        for j in range(int(nchunks.max())):
+            toks = np.zeros((A, C), np.int32)
+            valids = np.clip(plens - j * C, 0, C).astype(np.int32)
+            for a, (_, r) in enumerate(pairs):
+                part = r.prompt[j * C:(j + 1) * C]
+                toks[a, :len(part)] = part
+            offs = np.full((A,), j * C, np.int32)
+            args = (self.params, self.cache, jnp.asarray(toks),
+                    jnp.asarray(offs), jnp.asarray(valids),
+                    jnp.asarray(slots))
+            if self.paged:
+                bt = jnp.asarray(self.block_tables[slots])
+                logits, self.cache = fn(*args, bt)
+            else:
+                logits, self.cache = fn(*args)
+            nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+            last = nchunks == j + 1
+            first_tok[last] = nxt[last]
         self.prefill_s += time.perf_counter() - t0
-        self.prefill_tokens += plen
-        self.admissions += 1
-        req.slot = slot
-        req.first_token_t = time.perf_counter()
-        self.slot_req[slot] = req
-        self.pos[slot] = plen
-        self.last_tok[slot] = first
-        self.live[slot] = True
-        if self._record_token(req, first, 0):
-            self._retire(slot)                    # finished on token 0
+        self.prefill_tokens += int(plens.sum())
+        self.admissions += len(pairs)               # parking rows don't count
+        self.admit_rounds += 1
+        now = time.perf_counter()
+        for a, (slot, req) in enumerate(pairs):
+            req.slot = slot
+            req.first_token_t = now
+            self.slot_req[slot] = req
+            self.pos[slot] = int(plens[a])
+            self.last_tok[slot] = int(first_tok[a])
+            self.live[slot] = True
+            if self._record_token(req, int(first_tok[a]), 0):
+                self._retire(slot)                # finished on token 0
+        return pairs
 
     def step(self) -> bool:
-        """One scheduler iteration: refill free slots from the queue, then
-        advance every live slot by one decoded token. Returns whether any
-        work remains."""
-        for slot in range(self.B):
-            if not self.live[slot] and self.queue:
-                self._admit(slot, self.queue.popleft())
+        """One scheduler iteration: refill free slots from the queue (one
+        stacked chunk-admission call for up to ``admit_k`` requests, gated
+        on the free-page budget when paged), then advance every live slot
+        by one decoded token. Returns whether any work remains."""
+        pairs = self._gather_admissions()
+        if pairs:
+            self._admit_batch(pairs)
         if self.live.any():
             t0 = time.perf_counter()
             toks = jnp.asarray(self.last_tok[:, None])
-            nxt, _, self.cache = self.decode["jit"](
-                self.params, self.cache, toks, jnp.asarray(self.pos),
-                jnp.asarray(self.live))
+            args = (self.params, self.cache, toks, jnp.asarray(self.pos),
+                    jnp.asarray(self.live))
+            if self.paged:
+                nxt, _, self.cache = self.decode["jit"](
+                    *args, jnp.asarray(self.block_tables))
+            else:
+                nxt, _, self.cache = self.decode["jit"](*args)
             nxt = np.asarray(nxt)[:, 0]
             self.decode_s += time.perf_counter() - t0
             self.decode_steps += 1

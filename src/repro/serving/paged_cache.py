@@ -1,0 +1,121 @@
+"""Paged block-table KV cache: the host-side page allocator.
+
+The contiguous serving cache gives every decode slot a full ``max_seq``
+region, so device memory — not compute — caps the concurrent-request
+count. The paged layout replaces the per-slot regions with one shared
+pool of fixed-size PAGES per layer: ``(n_pages, page_size, Hkv, hd)``
+instead of ``(n_slots, max_seq, Hkv, hd)``. Each request owns just
+enough pages for its own budget (``prompt_len + max_new`` tokens), a
+block table maps its logical positions to physical pages, and pages
+return to the free list the moment the request retires (eos / max_new).
+``max_seq`` becomes a per-request *budget* instead of a per-slot
+*allocation*: at equal cache memory the pool admits
+``~max_seq / mean_request_budget`` times more live requests.
+
+Page id 0 is the NULL page. It is never handed out: block-table rows of
+free slots are all-zero, and writes from dead rows / tail-pad tokens are
+steered into it, so the device-side scatter needs no branches. Reads
+through unmapped table entries gather the null page and are masked by
+position validity (``index <= pos``) exactly like stale contiguous-cache
+rows were.
+
+This module is pure host-side bookkeeping (plain Python ints — no jax);
+the device-side gather/scatter lives in ``models/attention.py`` and the
+engine threads the block tables into the jitted steps as ``(n_slots,
+max_blocks) int32`` operands.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+NULL_PAGE = 0
+
+
+def pages_for(n_tokens: int, page_size: int) -> int:
+    """Pages needed to hold ``n_tokens`` cache rows (ceil division)."""
+    return -(-max(0, n_tokens) // page_size)
+
+
+@dataclasses.dataclass
+class PagedCacheConfig:
+    """Geometry of the shared pool. ``max_blocks`` bounds one request's
+    block table (= max_seq / page_size); ``n_pages`` includes the null
+    page, so the allocatable budget is ``n_pages - 1``."""
+    n_pages: int
+    page_size: int
+    max_blocks: int
+
+    @property
+    def capacity_tokens(self) -> int:
+        return (self.n_pages - 1) * self.page_size
+
+
+class BlockAllocator:
+    """Free-list page allocator with per-slot ownership.
+
+    Allocation is all-at-once at admission (the request's full
+    ``prompt + max_new`` budget), so a live request can never starve
+    mid-decode; reclaim is all-at-once at retire. A LIFO free list keeps
+    reuse hot and makes fragmentation a non-issue — pages are fixed-size
+    and fungible, any free page serves any block-table entry.
+    """
+
+    def __init__(self, n_pages: int, page_size: int, max_blocks: int):
+        assert n_pages >= 2, "need at least the null page + one real page"
+        assert page_size >= 1 and max_blocks >= 1
+        self.cfg = PagedCacheConfig(n_pages, page_size, max_blocks)
+        # page 0 reserved as the null page
+        self._free: List[int] = list(range(n_pages - 1, 0, -1))
+        self._owned: Dict[int, List[int]] = {}
+
+    # -- queries ------------------------------------------------------------
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return sum(len(v) for v in self._owned.values())
+
+    def pages_needed(self, n_tokens: int) -> int:
+        return pages_for(n_tokens, self.cfg.page_size)
+
+    def can_admit(self, n_tokens: int) -> bool:
+        """Whether a request with an ``n_tokens`` budget fits right now:
+        enough free pages AND within one block table's reach."""
+        need = self.pages_needed(n_tokens)
+        return 0 < need <= min(self.free_pages, self.cfg.max_blocks)
+
+    # -- mutation -----------------------------------------------------------
+
+    def allocate(self, slot: int, n_tokens: int) -> List[int]:
+        """Claim the full page budget for ``slot``; returns the page ids in
+        block-table order. Raises if the slot already owns pages or the
+        budget does not fit (callers gate on ``can_admit``)."""
+        if slot in self._owned:
+            raise ValueError(f"slot {slot} already owns pages")
+        need = self.pages_needed(n_tokens)
+        if need > self.cfg.max_blocks:
+            raise ValueError(
+                f"budget {n_tokens} tokens needs {need} pages "
+                f"> max_blocks {self.cfg.max_blocks}")
+        if need > self.free_pages:
+            raise ValueError(
+                f"budget {n_tokens} tokens needs {need} pages, "
+                f"only {self.free_pages} free")
+        pages = [self._free.pop() for _ in range(need)]
+        self._owned[slot] = pages
+        return pages
+
+    def free_slot(self, slot: int) -> int:
+        """Reclaim every page ``slot`` owns (slot free / eos); returns how
+        many were reclaimed. Freeing an unknown slot is a no-op (a slot
+        that never admitted owns nothing)."""
+        pages = self._owned.pop(slot, [])
+        self._free.extend(pages)
+        return len(pages)
+
+    def owned(self, slot: int) -> List[int]:
+        return list(self._owned.get(slot, []))

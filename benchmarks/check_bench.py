@@ -4,8 +4,9 @@ against the ``benchmarks.run --json`` output, extracted from the old inline
 share ONE set of checks with readable failure messages.
 
 Usage:
-    python benchmarks/check_bench.py --bench BENCH_pr5.json
+    python benchmarks/check_bench.py --bench BENCH_pr6.json
     python benchmarks/check_bench.py --bench out.json --only serving paged
+    python benchmarks/check_bench.py --list
 Exit code: 0 iff every (selected) gate passes.
 """
 from __future__ import annotations
@@ -15,7 +16,11 @@ import json
 import sys
 from typing import Callable, List, Tuple
 
-Gate = Tuple[str, Callable[[dict], Tuple[bool, str]]]
+# (name, bound, source figure, check). ``bound`` is the human-readable
+# inequality the gate enforces; ``figure`` names the benchmarks.run section
+# (and the paper figure it reproduces) the gate reads — both surface in
+# ``--list`` so a red CI run can be mapped to a figure without reading code.
+Gate = Tuple[str, str, str, Callable[[dict], Tuple[bool, str]]]
 
 
 def _rows(d: dict) -> List[Tuple[str, dict]]:
@@ -113,28 +118,71 @@ def g_batched_admission(d):
             f"call(s) batched vs {s} sequential")
 
 
+def g_whole_graph(d):
+    rows = _rows(d["whole_graph"])
+    if not rows:
+        return False, "whole_graph has no rows (figure not run?)"
+    bad = [k for k, r in rows
+           if not (r["scheduled_fwd_s"] < r["baseline_fwd_s"]
+                   and r["scheduled_step_s"] < r["baseline_step_s"])]
+    return (not bad,
+            f"scheduled e2e not strictly below layer-at-a-time at {bad}"
+            if bad else
+            f"scheduled e2e strictly below layer-at-a-time baseline "
+            f"(fwd and fwd+bwd) at all {len(rows)} paper models")
+
+
 GATES: List[Gate] = [
-    ("micro_present", g_micro),
-    ("hbm_fused_below_unfused", g_hbm_fused),
-    ("bwd_hbm_below_autodiff", g_bwd_hbm),
-    ("bwd_exposed_comm_below_autodiff", g_bwd_exposed),
-    ("serving_decode_plans_tuned", g_decode_plans),
-    ("serving_trace_positive", g_trace),
-    ("paged_capacity_headroom", g_paged_capacity),
-    ("paged_trace_parity", g_paged_parity),
-    ("paged_peak_concurrency", g_paged_concurrency),
-    ("batched_admission_fewer_calls", g_batched_admission),
+    ("micro_present", "best_s > 0 for every kernel",
+     "micro (Fig. 8 kernel sweep)", g_micro),
+    ("hbm_fused_below_unfused", "fused_bytes < unfused_bytes",
+     "hbm_hot_path (Fig. 6 fused combine)", g_hbm_fused),
+    ("bwd_hbm_below_autodiff", "hbm_bwd_custom < hbm_bwd_autodiff",
+     "bwd_overlap (Fig. 7 backward ring)", g_bwd_hbm),
+    ("bwd_exposed_comm_below_autodiff",
+     "exposed_comm_custom_s < exposed_comm_autodiff_s",
+     "bwd_overlap (Fig. 7 backward ring)", g_bwd_exposed),
+    ("serving_decode_plans_tuned", "tuned decode <= naive decode",
+     "serving.decode_plans (Table 4 latency)", g_decode_plans),
+    ("serving_trace_positive", "ttft/throughput/latency > 0",
+     "serving.trace (Poisson trace)", g_trace),
+    ("paged_capacity_headroom", "capacity_ratio_equal_mem >= 1.5",
+     "serving.paged.capacity (PR5 paged KV)", g_paged_capacity),
+    ("paged_trace_parity", "bit_exact_vs_contiguous == true",
+     "serving.paged.trace (PR5 paged KV)", g_paged_parity),
+    ("paged_peak_concurrency", "peak_live_paged > peak_live_contiguous",
+     "serving.paged.trace (PR5 paged KV)", g_paged_concurrency),
+    ("batched_admission_fewer_calls", "batched_rounds < sequential_rounds",
+     "serving.paged.admission (PR5 paged KV)", g_batched_admission),
+    ("whole_graph_scheduled_below_baseline",
+     "scheduled_{fwd,step}_s < baseline_{fwd,step}_s",
+     "whole_graph (PR6 block-schedule IR)", g_whole_graph),
 ]
+
+
+def _list_gates() -> int:
+    w = max(len(n) for n, _, _, _ in GATES)
+    for name, bound, figure, _ in GATES:
+        print(f"{name:<{w}}  {bound}  [{figure}]")
+    print(f"\n{len(GATES)} gates")
+    return 0
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--bench", required=True,
+    ap.add_argument("--bench",
                     help="path to the benchmarks.run --json artifact")
     ap.add_argument("--only", nargs="*", default=None,
                     help="run only gates whose name contains any of these "
                          "substrings (default: all)")
+    ap.add_argument("--list", action="store_true",
+                    help="print every gate with its bound and source "
+                         "figure, then exit 0")
     args = ap.parse_args(argv)
+    if args.list:
+        return _list_gates()
+    if not args.bench:
+        ap.error("--bench is required unless --list is given")
     try:
         with open(args.bench) as f:
             d = json.load(f)
@@ -142,12 +190,18 @@ def main(argv=None) -> int:
         print(f"[FAIL] cannot read BENCH artifact {args.bench!r}: {e}")
         return 1
 
-    gates = [(n, g) for n, g in GATES
+    if args.only is not None:
+        # every --only token must hit at least one gate: a typo'd selector
+        # silently running zero checks is how a gate rots out of CI
+        avail = [n for n, _, _, _ in GATES]
+        dead = [s for s in args.only
+                if not any(s in n for n in avail)]
+        if dead:
+            print(f"[FAIL] --only token(s) {dead} matched no gate; "
+                  f"available: {avail}")
+            return 1
+    gates = [(n, g) for n, _, _, g in GATES
              if args.only is None or any(s in n for s in args.only)]
-    if not gates:
-        print(f"[FAIL] --only {args.only} matched no gates "
-              f"(have: {[n for n, _ in GATES]})")
-        return 1
     fails = 0
     for name, gate in gates:
         try:

@@ -341,6 +341,65 @@ def bwd_overlap_table(Ms=(8192,), ep: int = 8):
     return table
 
 
+def whole_graph_table(Ms=(8192,), ep: int = 8, n_blocks: int = 2):
+    """The PR 6 acceptance artifact: modeled end-to-end step time over an
+    ``n_blocks``-layer window when the block-schedule IR hoists the next
+    block's attention (and, in training, the previous layer's wgrad flushes)
+    into the comet ring's comm bubbles, vs the layer-at-a-time baseline
+    (same segments, hard barrier at every block boundary). Micro-slicing
+    (n_slices in {1,2,4}) creates the cross-layer freedom; the best slicing
+    is reported. Scheduled time must be STRICTLY below the baseline at every
+    paper shape, forward-only and fwd+bwd."""
+    from benchmarks.figures import PAPER_MODELS
+    from repro.core import adaptive as A
+    from repro.core import schedule as SCH
+
+    hw = A.TPU_V5E
+    table = {}
+    print(f"\n# whole_graph (block-schedule IR vs layer-at-a-time, EP={ep}, "
+          f"{n_blocks}-block window)")
+    print("model,M,n_slices,base_fwd_ms,sched_fwd_ms,fwd_speedup,"
+          "base_step_ms,sched_step_ms,step_speedup")
+    for name, m in PAPER_MODELS.items():
+        for M in Ms:
+            s = A.MoEShape(M=M, N=m["N"], K=m["K"], E=m["E"], topk=m["topk"],
+                           ep=ep, etp=1)
+            d_model = m["N"]
+            plan = min((A.legalize_plan(p, s.N, s.ep)
+                        for p in A.candidate_plans(s) if p.impl == "comet"),
+                       key=lambda p: A.modeled_plan_time(hw, s, p)
+                       + A.modeled_plan_time_bwd(hw, s, p))
+
+            def t(training, scheduled, ns):
+                return SCH.graph_step_time(
+                    hw, s, plan, d_model=d_model, n_blocks=n_blocks,
+                    n_slices=ns, training=training,
+                    scheduled=scheduled)["total"]
+
+            base_f = t(False, False, 1)
+            base_s = t(True, False, 1)
+            ns_best, sch_f = min(((ns, t(False, True, ns))
+                                  for ns in (1, 2, 4)), key=lambda kv: kv[1])
+            sch_s = min(t(True, True, ns) for ns in (1, 2, 4))
+            table[f"{name}@M{M}"] = {
+                "n_slices": ns_best,
+                "baseline_fwd_s": base_f, "scheduled_fwd_s": sch_f,
+                "fwd_speedup": base_f / sch_f,
+                "baseline_step_s": base_s, "scheduled_step_s": sch_s,
+                "step_speedup": base_s / sch_s,
+            }
+            print(f"{name},{M},{ns_best},{base_f * 1e3:.3f},"
+                  f"{sch_f * 1e3:.3f},{base_f / sch_f:.3f},"
+                  f"{base_s * 1e3:.3f},{sch_s * 1e3:.3f},"
+                  f"{base_s / sch_s:.3f}")
+    ok = all(r["scheduled_fwd_s"] < r["baseline_fwd_s"]
+             and r["scheduled_step_s"] < r["baseline_step_s"]
+             for r in table.values())
+    print(f"[{'PASS' if ok else 'FAIL'}] scheduled e2e step time strictly "
+          "below the layer-at-a-time baseline (fwd and fwd+bwd)")
+    return table
+
+
 def serving_decode_plan_table(Ms=(8, 32, 128, 512), ep: int = 8):
     """Decode-phase plan quality at the paper's layer shapes: the tuned
     decode plan (phase="decode" — ranked on the fwd-only per-step latency
@@ -627,6 +686,7 @@ def main(argv=None) -> int:
             "micro": _jsonable(kernel_microbench()),
             "hbm_hot_path": _jsonable(hbm_hot_path_table()),
             "bwd_overlap": _jsonable(bwd_overlap_table()),
+            "whole_graph": _jsonable(whole_graph_table()),
             "serving": _jsonable(serving_bench()),
             "validation_failures": fails,
         }

@@ -25,6 +25,19 @@ def granite():
         activation="swiglu", tie_embeddings=True)
 
 
+# --- granite-moe-bigmac [arXiv:2408.eprint BigMac-style descend-ascend] ------
+# Same skeleton as granite-moe-3b-a800m but experts read/write a narrow
+# wire_dim=384 (= d_model/4) bus: a shared descend projection before dispatch
+# and ascend after combine, shrinking all-to-all traffic 4x.
+def bigmac():
+    return ModelConfig(
+        name="granite-moe-bigmac", family="moe",
+        n_layers=32, d_model=1536, d_ff=0, vocab_size=49155,
+        attn=AttnConfig(n_heads=24, n_kv_heads=8, head_dim=64),
+        moe=MoEConfig(num_experts=40, top_k=8, d_expert=512, wire_dim=384),
+        activation="swiglu", tie_embeddings=True)
+
+
 # --- qwen3-moe-235b-a22b [hf:Qwen/Qwen3-235B-A22B] ---------------------------
 def qwen3moe():
     return ModelConfig(
@@ -143,6 +156,7 @@ def phi35moe():
 
 
 _reg("granite-moe-3b-a800m", granite)
+_reg("granite-moe-bigmac", bigmac)
 _reg("qwen3-moe-235b-a22b", qwen3moe)
 _reg("llava-next-34b", llava)
 _reg("phi3-medium-14b", phi3)

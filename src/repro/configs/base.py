@@ -56,6 +56,11 @@ class MoEConfig:
                                        # step builders set it so decode
                                        # resolves latency-ranked plans,
                                        # prefill chunk-throughput ones
+    # BigMac-style descend-ascend experts (PAPERS.md): tokens are projected
+    # d_model -> wire_dim by a shared descend matrix BEFORE dispatch and
+    # back wire_dim -> d_model by a shared ascend matrix AFTER combine, so
+    # both rings move wire_dim/d_model of the bytes. 0 = full-width experts.
+    wire_dim: int = 0
 
 
 @dataclass(frozen=True)
@@ -121,6 +126,12 @@ class ModelConfig:
     # 1/model_size of the replicated traffic. Gathers happen where a block
     # needs the full sequence.
     sp_residual: bool = False
+    # block-schedule IR (core/schedule.py): "" keeps the scanned
+    # layer-at-a-time forward; "sequential" runs the IR in program order
+    # (differencing baseline); "overlap" lets the scheduler legally reorder
+    # segment emission across block boundaries. Numerics are identical in
+    # all three — the IR only permutes emission over the same dataflow.
+    block_schedule: str = ""
 
     # -- derived helpers ----------------------------------------------------
     def is_moe_layer(self, i: int) -> bool:
@@ -308,7 +319,7 @@ def reduced(cfg: ModelConfig, **overrides) -> ModelConfig:
     if cfg.moe is not None:
         changes["moe"] = dataclasses.replace(
             cfg.moe, num_experts=min(cfg.moe.num_experts, 8), d_expert=64,
-            ep=1)
+            ep=1, wire_dim=64 if cfg.moe.wire_dim else 0)
     if cfg.ssm is not None:
         changes["ssm"] = dataclasses.replace(
             cfg.ssm, d_state=16, head_dim=32, chunk_size=16)

@@ -258,7 +258,15 @@ def resolve_n_col(mcfg, cfg_d_model: int, tokens_local: int,
 #     (tiny-M shapes where the constant terms legalize toward bcast /
 #     small ring groups; no backward exists at inference), prefill on
 #     chunk throughput. ``Plan.phase`` records which ranking produced it.
-PLAN_CACHE_VERSION = 4
+#   v5 (PR 6) — WHOLE-GRAPH schedules rank beside per-layer plans: plans
+#     gained ``schedule`` ("" = per-layer execution; "overlap" = the
+#     block-schedule IR's cross-layer order, core/schedule.py) and
+#     ``n_slices`` (Lancet-style token micro-slicing that creates the
+#     legal cross-layer motion). Graph candidates are ranked on the
+#     two-block whole-graph model (``modeled_graph_step_time``), per-layer
+#     candidates exactly as in v4. v4 and older caches load unchanged —
+#     ``Plan.from_json`` defaults schedule=""/n_slices=1 (per-layer).
+PLAN_CACHE_VERSION = 5
 
 TRANSPORTS = ("naive", "coarse", "comet", "bcast")
 PLAN_PHASES = ("train", "prefill", "decode")
@@ -284,6 +292,11 @@ class Plan:
     objective: str = "fwd_bwd"         # what measured_s ranked: fwd |
                                        # fwd_bwd | prefill_tput | decode_latency
     phase: str = "train"               # latency phase the plan was ranked for
+    schedule: str = ""                 # "" = per-layer execution; "overlap"
+                                       # = whole-graph block-schedule order
+                                       # (core/schedule.py)
+    n_slices: int = 1                  # token micro-slices creating the
+                                       # cross-layer overlap freedom
 
     def to_json(self) -> Dict:
         return dataclasses.asdict(self)
@@ -310,8 +323,12 @@ class Plan:
 def plan_shape(mcfg, d_model: int, tokens_local: int, ep: int,
                etp: int) -> MoEShape:
     """The (M, d, f, E, topk, ep, etp) key shape for plan lookup — must be
-    built identically by the tuner and by moe_layer's resolution."""
-    return MoEShape(M=tokens_local, N=d_model,
+    built identically by the tuner and by moe_layer's resolution. With
+    BigMac descend-ascend experts (``mcfg.wire_dim``) the ring moves
+    wire-width rows, so N IS the wire width: the cost model, the plan key,
+    and knob legalization (n_col divides the combine width) all follow."""
+    wire = getattr(mcfg, "wire_dim", 0)
+    return MoEShape(M=tokens_local, N=wire or d_model,
                     K=mcfg.d_expert // max(1, etp), E=mcfg.num_experts,
                     topk=mcfg.top_k, ep=ep, etp=etp)
 
@@ -377,7 +394,8 @@ class PlanCache:
 def candidate_plans(s: MoEShape, max_col_blocks: int = 8,
                     max_ring_group: int = 4,
                     gemm_impls: Tuple[str, ...] = ("xla", "pallas_fused"),
-                    include_bcast: bool = True) -> Iterable[Plan]:
+                    include_bcast: bool = True,
+                    include_graph: bool = False) -> Iterable[Plan]:
     """The search space: every transport with its legal knob settings.
 
     The default backend set omits ``"pallas"`` — the analytical model rates
@@ -385,7 +403,14 @@ def candidate_plans(s: MoEShape, max_col_blocks: int = 8,
     it only duplicates candidates; measured tuning (tools/tune.py --gemm)
     can add it. ``"pallas_fused"`` IS modeled (the saved hidden HBM round
     trip vs. the per-column-block GEMM1 recompute), as is the comet
-    ``fused_combine`` streaming-consumer flag."""
+    ``fused_combine`` streaming-consumer flag.
+
+    ``include_graph=True`` adds WHOLE-GRAPH variants of every comet
+    candidate: ``schedule="overlap"`` with 2 or 4 token micro-slices
+    (n_slices=1 has no cross-layer freedom — attn_{i+1} truly depends on
+    combine_i — so it is never a distinct candidate). These rank on the
+    two-block graph model (``modeled_graph_step_time``) against the
+    per-layer candidates."""
     n_cols = [n for n in range(1, max_col_blocks + 1)
               if s.N % n == 0 and s.N // n >= 128] or [1]
     rings = [g for g in range(1, min(max_ring_group, s.ep) + 1)
@@ -397,6 +422,10 @@ def candidate_plans(s: MoEShape, max_col_blocks: int = 8,
             for n_col in n_cols:
                 for fc in (False, True):
                     yield Plan("comet", rg, n_col, gi, fc)
+                    if include_graph:
+                        for ns in (2, 4):
+                            yield Plan("comet", rg, n_col, gi, fc,
+                                       schedule="overlap", n_slices=ns)
         if include_bcast:
             yield Plan("bcast", 1, 1, gi)
 
@@ -684,16 +713,88 @@ def modeled_step_time(hw: Hardware, s: MoEShape, plan: Plan) -> float:
     return modeled_plan_time(hw, s, plan) + modeled_plan_time_bwd(hw, s, plan)
 
 
+# ---------------------------------------------------------------------------
+# Cross-layer (whole-graph) cost terms — the block-schedule IR's view.
+# core/schedule.py lowers blocks to segments; these wrappers expose its
+# bubble/fill accounting to the tuner so whole-graph schedules rank in the
+# same candidate stream as per-layer plans (plan cache v5).
+# ---------------------------------------------------------------------------
+
+
+def modeled_graph_step_time(hw: Hardware, s: MoEShape, plan: Plan,
+                            d_model: int = 0, n_blocks: int = 2,
+                            training: bool = True,
+                            scheduled: Optional[bool] = None) -> float:
+    """PER-BLOCK modeled time of an ``n_blocks`` whole-graph window under
+    ``plan`` (attention + ring segments + lump HBM terms; fwd+bwd when
+    ``training``). ``scheduled=None`` follows ``plan.schedule``; False
+    forces the layer-at-a-time barrier baseline — the difference of the
+    two isolates the cross-layer fill. ``d_model`` defaults to s.N (equal
+    except under BigMac wire-width shapes, where callers that know the
+    real width should pass it)."""
+    from repro.core import schedule as SCH   # lazy: schedule imports us
+    if scheduled is None:
+        scheduled = plan.schedule == "overlap"
+    t = SCH.graph_step_time(hw, s, plan, d_model=d_model or s.N,
+                            n_blocks=n_blocks, n_slices=plan.n_slices,
+                            training=training, scheduled=scheduled)
+    return t["total"] / max(1, n_blocks)
+
+
+def ring_bubble_time(hw: Hardware, s: MoEShape, plan: Plan,
+                     training: bool = False) -> float:
+    """Compute-idle time of ONE block's comet ring under per-layer
+    execution — the bubble budget cross-layer scheduling can feed with
+    neighboring-layer compute (next block's attn/norm forward; previous
+    layer's wgrad flush backward)."""
+    from repro.core import schedule as SCH
+    g = SCH.lower_model_graph(hw, s, plan, d_model=s.N, n_blocks=1,
+                              n_slices=1, training=training)
+    t = SCH.schedule_time(g, SCH.sequential_order(g), layer_barriers=True)
+    return t.get("idle_compute", 0.0)
+
+
+def cross_layer_fill_time(hw: Hardware, s: MoEShape, plan: Plan,
+                          n_blocks: int = 2, n_slices: int = 2,
+                          training: bool = False) -> float:
+    """What whole-graph scheduling reclaims per block: barrier-baseline
+    minus scheduled time for the same window (≥ 0 by construction — the
+    scheduler never legalizes a slower order than the baseline)."""
+    p = dataclasses.replace(plan, schedule="overlap",
+                            n_slices=max(1, n_slices))
+    base = modeled_graph_step_time(hw, s, p, n_blocks=n_blocks,
+                                   training=training, scheduled=False)
+    sched = modeled_graph_step_time(hw, s, p, n_blocks=n_blocks,
+                                    training=training, scheduled=True)
+    return max(0.0, base - sched)
+
+
 def phase_measure(hw: Hardware, s: MoEShape,
                   phase: str) -> Callable[[Plan], float]:
     """The analytical ranking objective for a latency phase: training ranks
     fwd+bwd (~2/3 of a step is backward); serving phases rank FORWARD ONLY —
     decode on per-step latency (no backward exists at inference; at tiny M
     the constant terms push toward bcast / small ring groups), prefill on
-    chunk walltime (throughput = chunk tokens / this)."""
-    if phase == "train":
-        return lambda p: modeled_step_time(hw, s, p)
-    return lambda p: modeled_plan_time(hw, s, p)
+    chunk walltime (throughput = chunk tokens / this). Whole-graph
+    candidates (``plan.schedule``) score as their per-layer base time minus
+    the graph model's cross-layer fill — the graph total also carries
+    attention + lump terms the per-layer objective never sees, so ranking
+    raw graph time against per-layer time would bury every scheduled
+    candidate under a constant it cannot influence; differencing the two
+    graph runs (barrier vs scheduled, identical lumps) cancels it."""
+    def measure(p: Plan) -> float:
+        training = phase == "train"
+        if p.schedule:
+            base_p = dataclasses.replace(p, schedule="", n_slices=1)
+            base = (modeled_step_time(hw, s, base_p) if training
+                    else modeled_plan_time(hw, s, base_p))
+            fill = cross_layer_fill_time(hw, s, p, n_slices=p.n_slices,
+                                         training=training)
+            return base - fill
+        if phase == "train":
+            return modeled_step_time(hw, s, p)
+        return modeled_plan_time(hw, s, p)
+    return measure
 
 
 def tune_plan(s: MoEShape, hw: Hardware, cache: Optional[PlanCache] = None,
@@ -729,7 +830,7 @@ def tune_plan(s: MoEShape, hw: Hardware, cache: Optional[PlanCache] = None,
     for p in cands:
         p = legalize_plan(p, s.N, s.ep)
         k = (p.impl, p.ring_group, p.n_col_blocks, p.gemm_impl,
-             p.fused_combine)
+             p.fused_combine, p.schedule, p.n_slices)
         if k not in seen:
             seen.add(k)
             uniq.append(p)
@@ -888,5 +989,7 @@ def resolve_plan(mcfg, d_model: int, tokens_local: int, ep: int, etp: int,
         cache.plans[cache.key(s, hw, phase)] = plan
     # pre-v3 (or hand-written) cache entries may carry knobs the transport
     # would silently re-legalize; resolve to the executable schedule HERE so
-    # the applied plan and the cost model agree with what runs
-    return legalize_plan(plan, d_model, max(1, ep))
+    # the applied plan and the cost model agree with what runs. Legalized
+    # against s.N — the COMBINE width n_col must divide, which is the wire
+    # width under BigMac descend-ascend experts, not d_model.
+    return legalize_plan(plan, s.N, max(1, ep))

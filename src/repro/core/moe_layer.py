@@ -36,13 +36,22 @@ def moe_schema(cfg, mcfg, W: int, etp: int) -> Dict:
     s: Dict = {
         "router": ParamDecl((d, mcfg.num_experts), ("embed_v", "experts_v")),
     }
+    # BigMac descend-ascend (PAPERS.md): shared replicated projections
+    # d -> wire before dispatch and wire -> d after combine; the experts
+    # then live entirely at wire width, so BOTH rings move wire/d of the
+    # bytes. The router keeps the full-width tokens (routing quality).
+    wire = getattr(mcfg, "wire_dim", 0)
+    d_in = wire or d
+    if wire:
+        s["w_desc"] = ParamDecl((d, wire), ("embed_v", None))
+        s["w_asc"] = ParamDecl((wire, d), (None, "embed_v"))
     ew: Dict[str, ParamDecl] = {}
     if is_glu(cfg.activation):
-        ew["w_gate"] = ParamDecl((W, E_loc, d, f_loc),
+        ew["w_gate"] = ParamDecl((W, E_loc, d_in, f_loc),
                                  ("expert_shard", None, "embed", None))
-    ew["w_up"] = ParamDecl((W, E_loc, d, f_loc),
+    ew["w_up"] = ParamDecl((W, E_loc, d_in, f_loc),
                            ("expert_shard", None, "embed", None))
-    ew["w_down"] = ParamDecl((W, E_loc, f_loc, d),
+    ew["w_down"] = ParamDecl((W, E_loc, f_loc, d_in),
                              ("expert_shard", None, None, "embed"))
     s["experts"] = ew
     if mcfg.num_shared_experts:
@@ -78,10 +87,13 @@ def pack_expert_weights(full: Dict[str, jnp.ndarray], ep: int, etp: int) -> Dict
 
 
 def _moe_body(cfg, mcfg, ctx: AxisCtx, n_col: int, gemm_impl, x, router_w,
-              experts):
+              experts, w_desc=None, w_asc=None):
     """x: (B_loc, S_loc, d) local tokens. Returns (y, aux). ``gemm_impl``
     is the resolved GroupGEMM backend, threaded explicitly to every
-    transport (no module-global switching)."""
+    transport (no module-global switching). ``w_desc``/``w_asc`` are the
+    BigMac descend/ascend projections (replicated): the router sees the
+    full-width tokens, everything from dispatch to combine runs at wire
+    width, and the ascend restores d_model after the combine."""
     B, S, d = x.shape
     xt = x.reshape(B * S, d)
     Tn = B * S
@@ -97,20 +109,26 @@ def _moe_body(cfg, mcfg, ctx: AxisCtx, n_col: int, gemm_impl, x, router_w,
     E_loc = E // ep
     w_local = {k: v[0] for k, v in experts.items()}                 # strip shard dim
 
+    xe = xt if w_desc is None else (xt @ w_desc).astype(xt.dtype)
+    dw = xe.shape[-1]                                   # wire (or full) width
+
+    def ascend(y):
+        return y if w_asc is None else (y @ w_asc).astype(y.dtype)
+
     impl = mcfg.impl
     if impl == "coarse" and ctx.active and ctx.world > 1:
         # the coarse schedule re-dispatches per token slice — building the
         # full-batch dispatch here would be pure waste, so it is skipped
-        y = _coarse(cfg, mcfg, ctx, xt, idx, wts, E, C, w_local, gemm_impl)
-        return y.reshape(B, S, d), aux
+        y = _coarse(cfg, mcfg, ctx, xe, idx, wts, E, C, w_local, gemm_impl)
+        return ascend(y).reshape(B, S, d), aux
 
-    buf, info = R.build_dispatch(xt, idx, E, C)                     # (E, C, d)
+    buf, info = R.build_dispatch(xe, idx, E, C)                     # (E, C, dw)
     if impl == "bcast" or (impl != "dense" and S == 1 and not ctx.seq_shard):
         out = T.transport_bcast(ctx, buf, w_local, cfg.activation, gemm_impl)
-        y = R.combine(out.reshape(E * C, d), info, wts, E_loc=E, C=C,
+        y = R.combine(out.reshape(E * C, dw), info, wts, E_loc=E, C=C,
                       rot=None, ep=1)
     else:
-        send = buf.reshape(ep, E_loc, C, d)
+        send = buf.reshape(ep, E_loc, C, dw)
         if impl == "comet" and mcfg.fused_combine:
             # streaming layer-1 consumer: combine each column block as it
             # arrives so the weighted reduction overlaps remaining blocks'
@@ -132,10 +150,10 @@ def _moe_body(cfg, mcfg, ctx: AxisCtx, n_col: int, gemm_impl, x, router_w,
             else:                                                    # naive / dense
                 out, rot = T.transport_naive(ctx, send, w_local,
                                              cfg.activation, gemm_impl)
-            y = R.combine(out.reshape(ep * E_loc * C, d), info, wts, E_loc,
+            y = R.combine(out.reshape(ep * E_loc * C, dw), info, wts, E_loc,
                           C, rot, ep)
 
-    y = y.reshape(B, S, d)
+    y = ascend(y).reshape(B, S, d)
     # aux already pmean'd over token axes inside the router
     return y, aux
 
@@ -236,23 +254,40 @@ def moe_ffn(cfg, mcfg, params, x, ctx: AxisCtx,
     gemm_impl = T._impl(mcfg.gemm_impl)
     router_w = params["router"]
     experts = {k: v for k, v in params["experts"].items()}
+    # BigMac descend/ascend projections ride along replicated (like the
+    # router weight) when the schema declared them
+    w_desc, w_asc = params.get("w_desc"), params.get("w_asc")
 
     if not ctx.active:
         return _moe_body(cfg, mcfg, AxisCtx(), n_col, gemm_impl, x,
-                         router_w, experts)
+                         router_w, experts, w_desc=w_desc, w_asc=w_asc)
 
     x_spec = P(dp_axes or None,
                ctx.model_axis if seq_sharded else None, None)
     body_ctx = dataclasses.replace(ctx, seq_shard=seq_sharded,
                                    dp_axes=dp_axes)
 
-    def body(x_l, rw, ew):
-        return _moe_body(cfg, mcfg, body_ctx, n_col, gemm_impl, x_l, rw, ew)
-
     expert_specs = {k: P(ctx.model_axis, None, None, None) for k in experts}
+    if w_desc is None:
+        def body(x_l, rw, ew):
+            return _moe_body(cfg, mcfg, body_ctx, n_col, gemm_impl, x_l,
+                             rw, ew)
+
+        f = shard_map(
+            body, mesh=ctx.mesh,
+            in_specs=(x_spec, P(None, None), expert_specs),
+            out_specs=(x_spec, P()),
+            check_vma=False)
+        return f(x, router_w, experts)
+
+    def body_w(x_l, rw, ew, wd, wa):
+        return _moe_body(cfg, mcfg, body_ctx, n_col, gemm_impl, x_l, rw,
+                         ew, w_desc=wd, w_asc=wa)
+
     f = shard_map(
-        body, mesh=ctx.mesh,
-        in_specs=(x_spec, P(None, None), expert_specs),
+        body_w, mesh=ctx.mesh,
+        in_specs=(x_spec, P(None, None), expert_specs, P(None, None),
+                  P(None, None)),
         out_specs=(x_spec, P()),
         check_vma=False)
-    return f(x, router_w, experts)
+    return f(x, router_w, experts, w_desc, w_asc)

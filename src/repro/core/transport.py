@@ -301,6 +301,23 @@ def _perm(ctx: AxisCtx, group_shift: int, tp_shift: int):
     return pairs
 
 
+def comet_ring_segments(ep: int, ring_group: int, n_col_blocks: int) -> dict:
+    """Segment counts of one forward ring as `_comet_ring_fwd` actually
+    executes it (etp=1 view): ep//ring_group GroupGEMM macro-steps, each
+    consuming ring_group source chunks; chunk slot 0 is local so ep-1
+    dispatch ppermutes cross the link; every non-local chunk returns
+    n_col_blocks combine ppermutes. core/schedule.py lowers whole-graph
+    schedules from these same counts (see comet_ring_counts) and
+    tests/test_schedule.py asserts the two never drift apart."""
+    g = legalize_ring_group(ep, ring_group)
+    return {
+        "n_steps": max(1, ep // g),
+        "dispatch_hops": max(0, ep - 1),
+        "expert_gemms": max(1, ep // g),
+        "combine_hops": max(1, n_col_blocks) * max(0, ep - 1),
+    }
+
+
 def _comet_ring_fwd(ctx: AxisCtx, send, w, activation: str, n_col: int,
                     blk: int, g: int, gemm_impl: Optional[str]):
     """The forward ring. Returns (blocks, rows_steps, preacts_steps):

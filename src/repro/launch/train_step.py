@@ -107,9 +107,17 @@ def make_train_fn(cfg: ModelConfig, ctx: AxisCtx, optim: AdamW, accum: int):
 def build_train_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Optional[Mesh],
                      optim: Optional[AdamW] = None, accum: int = 0,
                      fsdp: bool = True, seq_shard: bool = True,
-                     plan_cache: Optional[str] = None, plan_hw: str = ""):
-    """Returns dict with fn/jitted/in_shardings/abstract inputs."""
+                     plan_cache: Optional[str] = None, plan_hw: str = "",
+                     schedule: str = ""):
+    """Returns dict with fn/jitted/in_shardings/abstract inputs.
+
+    ``schedule`` sits beside ``plan_cache``: "" keeps the scanned
+    layer-at-a-time forward, "sequential"/"overlap" route the step through
+    the block-schedule IR (core/schedule.py; layers unroll — see
+    ``lm.forward_scheduled``). Numerics are identical either way."""
     cfg = _with_plan_cache(cfg, plan_cache, plan_hw)
+    if schedule:
+        cfg = dataclasses.replace(cfg, block_schedule=schedule)
     optim = optim or AdamW()
     accum = accum or SP.TRAIN_ACCUM.get(shape.name, 1)
     ctx = make_ctx(cfg, mesh, seq_shard=seq_shard)

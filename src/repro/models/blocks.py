@@ -203,57 +203,178 @@ def attn_apply(cfg, p, x, ctx: AxisCtx, positions, causal: bool,
     return out, None
 
 
+@dataclasses.dataclass(frozen=True)
+class ExecSeg:
+    """One EXECUTED segment of a block: a closure over an env dict of named
+    values, with its dataflow declared (``reads`` / ``writes``) so
+    core/schedule.py can derive dependencies and legally reorder emission.
+    Reordering only permutes which segment is traced first over identical
+    expressions, so any legal order is numerically identical."""
+    name: str
+    kind: str
+    block: int
+    reads: Tuple[str, ...]
+    writes: Tuple[str, ...]
+    fn: Any                     # Callable[[Dict[str, Any]], None]
+
+
+def block_segments(cfg, pos: int, p, ctx: AxisCtx, positions, enc_out=None,
+                   return_cache: bool = False, mask=None, block: int = 0,
+                   x_in: str = "x", x_out: str = "x_out"):
+    """Lower one layer to its executed segment list. The residual stream
+    enters as env[``x_in``] and leaves as env[``x_out``]; internal values
+    are namespaced ``L{block}.*`` (aux loss at ``L{block}.aux``, cache
+    entry at ``L{block}.cache``). The segment bodies are the EXACT
+    expressions of the historical monolithic apply_layer — the lowering
+    only names the intermediate values so the scheduler can see, e.g., that
+    the MoE shared expert reads the mid residual and is independent of the
+    dispatch/combine ring."""
+    kind = cfg.layer_kind(pos)
+    pr = f"L{block}."
+    segs = []
+    cross = kind == "a" and enc_out is not None
+    xm0 = pr + ("xm0" if cross else "xm")
+    xm = xm0
+
+    if kind == "a":
+        def f_attn(env):
+            h = apply_norm(cfg, p["ln1"], env[x_in])
+            h, kv = attn_apply(cfg, p["attn"], h, ctx, positions,
+                               cfg.attn.causal, cfg.attn.rope_theta > 0,
+                               return_kv=return_cache, kv_mask=mask)
+            env[pr + "h0"] = h
+            if return_cache:
+                env[pr + "cache"] = {"k": kv[0], "v": kv[1]}
+
+        segs.append(ExecSeg(pr + "attn", "attn", block, (x_in,),
+                            (pr + "h0",) + ((pr + "cache",)
+                                            if return_cache else ()),
+                            f_attn))
+    else:
+        def f_ssm(env):
+            h = apply_norm(cfg, p["ln1"], env[x_in])
+            h, ssm_cache = S.ssm_forward(cfg, cfg.ssm, p["ssm"], h,
+                                         return_cache=return_cache,
+                                         mask=mask)
+            env[pr + "h0"] = h
+            if return_cache:
+                env[pr + "cache"] = ssm_cache
+
+        segs.append(ExecSeg(pr + "ssm", "ssm", block, (x_in,),
+                            (pr + "h0",) + ((pr + "cache",)
+                                            if return_cache else ()),
+                            f_ssm))
+
+    def f_res1(env):
+        x = env[x_in]
+        env[xm0] = x + env[pr + "h0"].astype(x.dtype)
+
+    segs.append(ExecSeg(pr + "res1", "residual", block,
+                        (x_in, pr + "h0"), (xm0,), f_res1))
+
+    if cross:
+        def f_xattn(env):
+            hx = apply_norm(cfg, p["ln_x"], env[pr + "xm0"])
+            hx, xkv = attn_apply(cfg, p["xattn"], hx, ctx, positions,
+                                 causal=False, use_rope=False,
+                                 kv_x=enc_out, return_kv=return_cache)
+            env[pr + "hx"] = hx
+            if return_cache:
+                env[pr + "cache"]["xk"], env[pr + "cache"]["xv"] = xkv
+
+        segs.append(ExecSeg(
+            pr + "xattn", "attn", block,
+            (pr + "xm0",) + ((pr + "cache",) if return_cache else ()),
+            (pr + "hx",) + ((pr + "cache",) if return_cache else ()),
+            f_xattn))
+        xm = pr + "xm"
+
+        def f_resx(env):
+            x = env[pr + "xm0"]
+            env[xm] = x + env[pr + "hx"].astype(x.dtype)
+
+        segs.append(ExecSeg(pr + "resx", "residual", block,
+                            (pr + "xm0", pr + "hx"), (xm,), f_resx))
+
+    tail_reads = [xm]
+    if "ln2" in p:
+        if "moe" in p:
+            def f_moe(env):
+                h = apply_norm(cfg, p["ln2"], env[xm])
+                h = _csp(h, ctx, ctx.dp_axes,
+                         ctx.model_axis if ctx.seq_shard and h.shape[1] > 1
+                         else None, None)
+                h, aux = moe_ffn(cfg, cfg.moe, p["moe"], h, ctx,
+                                 n_col=cfg.moe.n_col_blocks)
+                env[pr + "h1"] = h
+                env[pr + "aux"] = aux
+
+            segs.append(ExecSeg(pr + "moe", "moe", block, (xm,),
+                                (pr + "h1", pr + "aux"), f_moe))
+            if "shared" in p["moe"]:
+                # reads the MID residual only — independent of the ring,
+                # the one executed segment the scheduler can hoist into it
+                def f_shared(env):
+                    env[pr + "hsh"] = ffn_apply(
+                        cfg, p["moe"]["shared"],
+                        apply_norm(cfg, p["ln2"], env[xm]))
+
+                segs.append(ExecSeg(pr + "shared", "shared_ffn", block,
+                                    (xm,), (pr + "hsh",), f_shared))
+                tail_reads += [pr + "h1", pr + "hsh"]
+            else:
+                tail_reads += [pr + "h1"]
+        else:
+            def f_ffn(env):
+                env[pr + "h1"] = ffn_apply(
+                    cfg, p["ffn"], apply_norm(cfg, p["ln2"], env[xm]))
+
+            segs.append(ExecSeg(pr + "ffn", "ffn", block, (xm,),
+                                (pr + "h1",), f_ffn))
+            tail_reads += [pr + "h1"]
+
+    def f_tail(env):
+        x = env[xm]
+        if pr + "h1" in env:
+            h = env[pr + "h1"]
+            if pr + "hsh" in env:
+                h = h + env[pr + "hsh"]
+            x = x + h.astype(x.dtype)
+        sp = (cfg.sp_residual and ctx.active
+              and x.shape[1] % max(1, ctx.model_size) == 0
+              and x.shape[1] > 1)
+        x = _csp(x, ctx, ctx.dp_axes, ctx.model_axis if sp else None, None)
+        env[x_out] = x
+
+    segs.append(ExecSeg(pr + "res2", "residual", block, tuple(tail_reads),
+                        (x_out,), f_tail))
+    return segs
+
+
+def run_segments(segs, env):
+    """Execute segments in the given emission order against ``env``."""
+    for s in segs:
+        s.fn(env)
+    return env
+
+
 def apply_layer(cfg, pos: int, p, x, ctx: AxisCtx, positions,
                 enc_out=None, return_cache: bool = False, mask=None):
     """Training / prefill path. Returns (x, aux_loss, cache_entry).
     mask: optional (B, S) validity — pad tokens are excluded from attention
     (kv_mask) and become identity steps in the SSM scan, so mixed-length
-    left-padded prefill is exact."""
-    kind = cfg.layer_kind(pos)
-    aux = jnp.zeros((), jnp.float32)
-    cache_entry = None
-    h = apply_norm(cfg, p["ln1"], x)
-    if kind == "a":
-        is_causal = cfg.attn.causal
-        use_rope = cfg.attn.rope_theta > 0
-        h, kv = attn_apply(cfg, p["attn"], h, ctx, positions, is_causal,
-                           use_rope, return_kv=return_cache, kv_mask=mask)
-        if return_cache:
-            cache_entry = {"k": kv[0], "v": kv[1]}
-        x = x + h.astype(x.dtype)
-        if enc_out is not None:
-            hx = apply_norm(cfg, p["ln_x"], x)
-            hx, xkv = attn_apply(cfg, p["xattn"], hx, ctx, positions,
-                                 causal=False, use_rope=False, kv_x=enc_out,
-                                 return_kv=return_cache)
-            if return_cache:
-                cache_entry["xk"], cache_entry["xv"] = xkv
-            x = x + hx.astype(x.dtype)
-    else:
-        h, ssm_cache = S.ssm_forward(cfg, cfg.ssm, p["ssm"], h,
-                                     return_cache=return_cache, mask=mask)
-        if return_cache:
-            cache_entry = ssm_cache
-        x = x + h.astype(x.dtype)
+    left-padded prefill is exact.
 
-    if "ln2" in p:
-        h = apply_norm(cfg, p["ln2"], x)
-        if "moe" in p:
-            h = _csp(h, ctx, ctx.dp_axes,
-                     ctx.model_axis if ctx.seq_shard and h.shape[1] > 1 else None,
-                     None)
-            h, aux = moe_ffn(cfg, cfg.moe, p["moe"], h, ctx,
-                             n_col=cfg.moe.n_col_blocks)
-            if "shared" in p["moe"]:
-                h = h + ffn_apply(cfg, p["moe"]["shared"],
-                                  apply_norm(cfg, p["ln2"], x))
-        else:
-            h = ffn_apply(cfg, p["ffn"], h)
-        x = x + h.astype(x.dtype)
-    sp = (cfg.sp_residual and ctx.active
-          and x.shape[1] % max(1, ctx.model_size) == 0 and x.shape[1] > 1)
-    x = _csp(x, ctx, ctx.dp_axes, ctx.model_axis if sp else None, None)
-    return x, aux, cache_entry
+    Implemented as the SEQUENTIAL interpretation of ``block_segments`` —
+    the same lowering lm.forward_scheduled reorders across blocks."""
+    segs = block_segments(cfg, pos, p, ctx, positions, enc_out=enc_out,
+                          return_cache=return_cache, mask=mask, block=pos,
+                          x_in="x", x_out="x_out")
+    env = run_segments(segs, {"x": x})
+    aux = env.get(f"L{pos}.aux")
+    if aux is None:
+        aux = jnp.zeros((), jnp.float32)
+    return env["x_out"], aux, env.get(f"L{pos}.cache")
 
 
 # ---------------------------------------------------------------------------

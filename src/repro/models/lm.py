@@ -130,15 +130,9 @@ def encode(cfg, params, frames, ctx: AxisCtx):
 # ---------------------------------------------------------------------------
 
 
-def forward(cfg, params, batch, ctx: AxisCtx = AxisCtx(),
-            return_cache: bool = False):
-    """Returns (h_final, aux_loss, cache|None). h_final: (B, S, d).
-
-    batch may carry a ``mask`` (B, S) bool — pad-token validity for
-    mixed-length batched prefill. With it, pad keys/values are excluded
-    from attention, SSM pad steps become identities, and per-row positions
-    are derived from the mask (left-padded rows RoPE from 0 at their first
-    real token), so the padded forward is EXACT, not approximate."""
+def _forward_inputs(cfg, params, batch, ctx: AxisCtx):
+    """Shared front of every full-sequence forward: embeddings, pad-aware
+    positions, optional encoder output."""
     h = embed_inputs(cfg, params, batch, ctx)
     Bsz, Ssz, _ = h.shape
     mask = batch.get("mask")
@@ -153,6 +147,26 @@ def forward(cfg, params, batch, ctx: AxisCtx = AxisCtx(),
     enc_out = None
     if cfg.n_enc_layers:
         enc_out = encode(cfg, params, batch["frames"], ctx)
+    return h, positions, mask, enc_out
+
+
+def forward(cfg, params, batch, ctx: AxisCtx = AxisCtx(),
+            return_cache: bool = False):
+    """Returns (h_final, aux_loss, cache|None). h_final: (B, S, d).
+
+    batch may carry a ``mask`` (B, S) bool — pad-token validity for
+    mixed-length batched prefill. With it, pad keys/values are excluded
+    from attention, SSM pad steps become identities, and per-row positions
+    are derived from the mask (left-padded rows RoPE from 0 at their first
+    real token), so the padded forward is EXACT, not approximate.
+
+    With ``cfg.block_schedule`` set ("sequential" | "overlap") the
+    non-cache path runs through the block-schedule IR
+    (``forward_scheduled``); prefill (return_cache=True) always keeps the
+    scan path."""
+    if getattr(cfg, "block_schedule", "") and not return_cache:
+        return forward_scheduled(cfg, params, batch, ctx)
+    h, positions, mask, enc_out = _forward_inputs(cfg, params, batch, ctx)
 
     p = period_of(cfg)
 
@@ -176,6 +190,43 @@ def forward(cfg, params, batch, ctx: AxisCtx = AxisCtx(),
         body, (h, jnp.zeros((), jnp.float32)), tuple(params["layers"]))
     h = apply_norm(cfg, params["ln_f"], h)
     return h, aux, caches
+
+
+def forward_scheduled(cfg, params, batch, ctx: AxisCtx = AxisCtx()):
+    """Block-schedule-IR forward: every layer is lowered to its executed
+    segments (models/blocks.py ``block_segments``), the whole-graph segment
+    list is ordered by core/schedule.py (``cfg.block_schedule``:
+    "sequential" = program order, "overlap" = the greedy earliest-start
+    scheduler), and the chosen emission order is interpreted against one
+    shared env. Any legal order is a pure permutation over identical
+    dataflow, so this is numerically IDENTICAL to the sequential baseline
+    — the equivalence the tests assert bitwise.
+
+    Layers are UNROLLED (no scan/remat): the scheduler needs segments of
+    DIFFERENT blocks visible in one window, which a scanned period body
+    cannot expose. Intended for the paper-shape step benchmarks and
+    parity tests, not 94-layer dry-runs."""
+    from repro.core.schedule import exec_order
+
+    h, positions, mask, enc_out = _forward_inputs(cfg, params, batch, ctx)
+    p = period_of(cfg)
+    segs = []
+    for i in range(cfg.n_layers):
+        lp = jax.tree_util.tree_map(lambda a, i=i: a[i // p],
+                                    params["layers"][i % p])
+        segs += B.block_segments(cfg, i % p, lp, ctx, positions,
+                                 enc_out=enc_out, return_cache=False,
+                                 mask=mask, block=i, x_in=f"x{i}",
+                                 x_out=f"x{i + 1}")
+    segs = exec_order(segs, cfg.block_schedule)
+    env = B.run_segments(segs, {"x0": h})
+    aux = jnp.zeros((), jnp.float32)
+    for i in range(cfg.n_layers):
+        a = env.get(f"L{i}.aux")
+        if a is not None:
+            aux = aux + a
+    h = apply_norm(cfg, params["ln_f"], env[f"x{cfg.n_layers}"])
+    return h, aux, None
 
 
 def loss_fn(cfg, params, batch, ctx: AxisCtx = AxisCtx()):

@@ -28,10 +28,11 @@ for _p in (os.path.join(_ROOT, "src"), _ROOT):
 
 
 def _print_plan(tag, s, plan):
+    sched = f",{plan.schedule}/ns{plan.n_slices}" if plan.schedule else ""
     print(f"{tag},M{s.M},N{s.N},K{s.K},E{s.E},k{s.topk},ep{s.ep},etp{s.etp},"
           f"{plan.phase},{plan.impl},rg{plan.ring_group},nc{plan.n_col_blocks},"
           f"{plan.gemm_impl},fc{int(plan.fused_combine)},"
-          f"{plan.measured_s * 1e3:.4f}ms,{plan.source}")
+          f"{plan.measured_s * 1e3:.4f}ms,{plan.source}{sched}")
 
 
 # the (arch, B, S) of the single-device smoke run `benchmarks/run.py --plan`
@@ -52,7 +53,14 @@ def smoke_plan_shapes():
 
 def tune_model_backed(args, hw, cache):
     from benchmarks.figures import PAPER_MODELS
-    from repro.core.adaptive import MoEShape, tune_plan
+    from repro.core.adaptive import MoEShape, candidate_plans, tune_plan
+
+    # --graph widens the candidate set with whole-graph scheduled variants
+    # (schedule="overlap", n_slices in {2,4}) so block-schedule IR plans
+    # rank in the SAME cache rows as per-layer overlap plans
+    def cands(s):
+        return candidate_plans(s, include_graph=True) if args.graph else None
+
     n = 0
     for phase in args.phase:
         Ms = args.decode_M if phase == "decode" else args.M
@@ -61,11 +69,13 @@ def tune_model_backed(args, hw, cache):
                 s = MoEShape(M=M, N=m["N"], K=m["K"] // max(1, args.etp),
                              E=m["E"], topk=m["topk"], ep=args.ep,
                              etp=args.etp)
-                plan = tune_plan(s, hw, cache, force=args.force, phase=phase)
+                plan = tune_plan(s, hw, cache, force=args.force, phase=phase,
+                                 candidates=cands(s))
                 _print_plan(name, s, plan)
                 n += 1
         for tag, _mcfg, s in smoke_plan_shapes():
-            plan = tune_plan(s, hw, cache, force=args.force, phase=phase)
+            plan = tune_plan(s, hw, cache, force=args.force, phase=phase,
+                             candidates=cands(s))
             _print_plan(tag, s, plan)
             n += 1
     return n
@@ -157,6 +167,10 @@ def main(argv=None) -> int:
     ap.add_argument("--etp", type=int, default=1)
     ap.add_argument("--force", action="store_true",
                     help="re-tune even on a cache hit")
+    ap.add_argument("--graph", action="store_true",
+                    help="also rank whole-graph block-schedule candidates "
+                         "(schedule=overlap, micro-sliced) against the "
+                         "per-layer plans (model mode)")
     ap.add_argument("--measured", action="store_true",
                     help="time real executions instead of the cost model")
     ap.add_argument("--devices", type=int, default=8,

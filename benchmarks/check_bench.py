@@ -118,6 +118,34 @@ def g_batched_admission(d):
             f"call(s) batched vs {s} sequential")
 
 
+def g_chaos_terminal(d):
+    c = d["serving"]["chaos"]
+    ok = bool(c["all_terminal"])
+    return ok, (f"all {c['n_requests']} requests terminal under "
+                f"{c['failures']} injected failures / "
+                f"{c['recoveries']} recoveries" if ok else
+                "a request was left non-terminal under faults")
+
+
+def g_chaos_exactly_once(d):
+    c = d["serving"]["chaos"]
+    ok = (bool(c["streams_bit_identical"]) and c["lost_tokens"] == 0
+          and c["duplicated_tokens"] == 0)
+    return ok, (f"token streams bit-identical to fault-free, "
+                f"0 lost / 0 duplicated ({c['quarantined']} quarantined "
+                f"kept clean prefixes)" if ok else
+                f"delivery broke: identical={c['streams_bit_identical']} "
+                f"lost={c['lost_tokens']} dup={c['duplicated_tokens']}")
+
+
+def g_chaos_ttft(d):
+    c = d["serving"]["chaos"]
+    f = c["ttft_p99_factor"]
+    return (0 < f <= 25.0,
+            f"p99 TTFT under faults {c['ttft_p99_s_faulted']*1e3:.1f}ms = "
+            f"{f:.1f}x fault-free (gate: <= 25x)")
+
+
 def g_whole_graph(d):
     rows = _rows(d["whole_graph"])
     if not rows:
@@ -157,6 +185,13 @@ GATES: List[Gate] = [
     ("whole_graph_scheduled_below_baseline",
      "scheduled_{fwd,step}_s < baseline_{fwd,step}_s",
      "whole_graph (PR6 block-schedule IR)", g_whole_graph),
+    ("serving_chaos_all_terminal", "every request reaches terminal status",
+     "serving.chaos (PR7 fault tolerance)", g_chaos_terminal),
+    ("serving_chaos_exactly_once",
+     "bit-identical streams, 0 lost, 0 duplicated",
+     "serving.chaos (PR7 fault tolerance)", g_chaos_exactly_once),
+    ("serving_chaos_ttft_bounded", "ttft_p99_factor <= 25",
+     "serving.chaos (PR7 fault tolerance)", g_chaos_ttft),
 ]
 
 

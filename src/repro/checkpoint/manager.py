@@ -58,8 +58,12 @@ class CheckpointManager:
         os.makedirs(directory, exist_ok=True)
 
     # ------------------------------------------------------------------ save
-    def save(self, step: int, state: Pytree, wait: bool = False):
-        """Snapshot to host, then write+commit (async unless wait=True)."""
+    def save(self, step: int, state: Pytree, wait: bool = False,
+             extra: Optional[Dict] = None):
+        """Snapshot to host, then write+commit (async unless wait=True).
+        ``extra`` is an optional JSON-serializable blob committed inside the
+        same atomic rename as the array leaves (the serving engine stores
+        its scheduler state here, so scheduler + cache can never be torn)."""
         self.wait()                       # one in-flight save at a time
         if self._error is not None:
             err, self._error = self._error, None
@@ -69,7 +73,7 @@ class CheckpointManager:
 
         def work():
             try:
-                self._write(step, host)
+                self._write(step, host, extra)
             except BaseException as e:    # surfaced on next save()/wait()
                 self._error = e
 
@@ -82,13 +86,16 @@ class CheckpointManager:
                 err, self._error = self._error, None
                 raise err
 
-    def _write(self, step: int, host: List[Tuple[str, np.ndarray]]):
+    def _write(self, step: int, host: List[Tuple[str, np.ndarray]],
+               extra: Optional[Dict] = None):
         final = os.path.join(self.dir, f"step_{step:08d}")
         tmp = final + ".tmp"
         if os.path.exists(tmp):
             shutil.rmtree(tmp)
         os.makedirs(tmp)
         manifest = {"step": step, "leaves": []}
+        if extra is not None:
+            manifest["extra"] = extra
         for key, arr in host:
             np.save(os.path.join(tmp, _fname(key)), arr)
             manifest["leaves"].append(
@@ -124,6 +131,16 @@ class CheckpointManager:
     def latest_step(self) -> Optional[int]:
         steps = self.all_steps()
         return steps[-1] if steps else None
+
+    def load_extra(self, step: Optional[int] = None) -> Optional[Dict]:
+        """The ``extra`` blob committed with ``save(..., extra=)``, or None."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            return json.load(f).get("extra")
 
     def restore(self, target: Pytree, step: Optional[int] = None,
                 shardings: Optional[Pytree] = None) -> Tuple[Pytree, int]:

@@ -308,7 +308,18 @@ class Plan:
         # pre-v3 entries were ranked on forward time only; say so rather
         # than defaulting to the v3 objective
         kw.setdefault("objective", "fwd")
-        return cls(**kw)
+        plan = cls(**kw)
+        # dataclasses don't type-check: a hand-edited / bit-rotted entry
+        # with a string where a knob belongs must raise HERE (the cache
+        # loader skips it) rather than explode deep inside plan resolution
+        for f, ty in (("impl", str), ("ring_group", int),
+                      ("n_col_blocks", int), ("n_slices", int),
+                      ("measured_s", (int, float)),
+                      ("t_bwd_s", (int, float))):
+            if not isinstance(getattr(plan, f), ty):
+                raise ValueError(f"plan field {f}={getattr(plan, f)!r} "
+                                 f"is not {ty}")
+        return plan
 
     def apply(self, mcfg):
         """Return ``mcfg`` running this plan's schedule. Sets
@@ -348,21 +359,41 @@ class PlanCache:
         return AdaptiveCache.key(s, hw, phase)
 
     def load(self, path: str):
+        import warnings
         try:
             with open(path) as f:
                 raw = json.load(f)
         except (OSError, ValueError) as e:
             # a corrupt/unreadable cache must not take the run down — behave
             # like a missing file (analytical fallback) and say so
-            import warnings
             warnings.warn(f"plan cache {path!r} unreadable ({e}); starting "
                           "empty — plans fall back to the analytical model",
                           stacklevel=2)
             self.plans = {}
             return
+        version = raw.get("version", 0) if isinstance(raw, dict) else 0
+        if isinstance(version, (int, float)) and version > PLAN_CACHE_VERSION:
+            # a future format may mean anything; retuning is cheap, silently
+            # misreading a newer schema is not
+            warnings.warn(f"plan cache {path!r} has version {version} > "
+                          f"supported {PLAN_CACHE_VERSION}; starting empty",
+                          stacklevel=2)
+            self.plans = {}
+            return
         table = raw.get("plans", raw) if isinstance(raw, dict) else {}
-        self.plans = {k: Plan.from_json(v) for k, v in table.items()
-                      if isinstance(v, dict) and "impl" in v}
+        self.plans = {}
+        bad = 0
+        for k, v in table.items():
+            if not (isinstance(v, dict) and "impl" in v):
+                bad += 1
+                continue
+            try:
+                self.plans[k] = Plan.from_json(v)
+            except (TypeError, ValueError, KeyError):
+                bad += 1        # one mangled entry must not drop the rest
+        if bad:
+            warnings.warn(f"plan cache {path!r}: skipped {bad} malformed "
+                          f"entr{'y' if bad == 1 else 'ies'}", stacklevel=2)
 
     def save(self, path: Optional[str] = None):
         path = path or self.path

@@ -38,28 +38,70 @@ def main():
                          "(:phprefill/:phdecode) schedule the serving steps")
     ap.add_argument("--plan-hw", default="",
                     help="hardware key for plan lookup (default tpu_v5e)")
+    # -- robustness knobs ---------------------------------------------------
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="per-request total-latency deadline in seconds "
+                         "(expired requests retire with status=expired)")
+    ap.add_argument("--ttft-deadline", type=float, default=None,
+                    help="per-request first-token deadline in seconds")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="bounded queue depth (0 = unbounded)")
+    ap.add_argument("--shed", default="reject",
+                    choices=["reject", "deadline"],
+                    help="shedding policy when the bounded queue is full: "
+                         "reject the new request, or drop the queued "
+                         "request with the least deadline slack")
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="crash-recovery snapshot directory (enables "
+                         "periodic snapshot + restore/replay on failure)")
+    ap.add_argument("--snapshot-every", type=int, default=8,
+                    help="steps between snapshots")
+    ap.add_argument("--chaos", type=float, default=0.0,
+                    help="inject a seeded Poisson fault trace at this "
+                         "per-step rate (crashes + NaN rows + latency "
+                         "spikes) to exercise the recovery machinery")
+    ap.add_argument("--chaos-seed", type=int, default=0)
     args = ap.parse_args()
 
     from repro.configs.base import get_config
-    from repro.serving import ServeEngine
+    from repro.serving import FaultInjector, FaultPlan, ServeEngine
 
     cfg = get_config(args.arch)
+    injector = None
+    if args.chaos > 0:
+        horizon = 4 * (args.max_new + args.prompt_len)
+        plan = FaultPlan.poisson(args.chaos_seed, horizon,
+                                 crash_rate=args.chaos, nan_rate=args.chaos,
+                                 spike_rate=2 * args.chaos)
+        injector = FaultInjector(plan)
+        print(f"chaos: {plan.summary()} over {horizon} steps "
+              f"(seed {args.chaos_seed})")
     eng = ServeEngine(cfg, max_seq=args.max_seq, batch_size=args.batch,
                       seed=args.seed, plan_cache=args.plan_cache,
                       plan_hw=args.plan_hw, chunk=args.chunk,
                       page_size=args.page_size, n_pages=args.pages,
-                      admit_k=args.admit_k)
+                      admit_k=args.admit_k, max_queue=args.max_queue,
+                      shed_policy=args.shed, deadline_s=args.deadline,
+                      ttft_deadline_s=args.ttft_deadline,
+                      snapshot_dir=args.snapshot_dir,
+                      snapshot_every=args.snapshot_every,
+                      faults=injector,
+                      recover=True if injector is not None else None)
     rng = np.random.default_rng(args.seed)
     n_req = args.requests or args.batch
     prompts = [rng.integers(1, cfg.vocab_size, size=args.prompt_len).tolist()
                for _ in range(n_req)]
     t0 = time.perf_counter()
-    res = eng.generate(prompts, max_new=args.max_new)
+    rids = [eng.submit(p, max_new=args.max_new) for p in prompts]
+    eng.run()
     dt = time.perf_counter() - t0
-    for i, row in enumerate(res.tokens):
-        print(f"req{i}: {row.tolist()}")
-    tput = (res.prefill_tokens + eng.decode_tokens) / dt
-    print(f"{res.prefill_tokens} prefill toks + {res.decode_steps} decode "
+    reqs = [eng.finished[rid] for rid in rids]
+    for i, r in enumerate(reqs):
+        tag = "" if r.status.value == "ok" else f"  [{r.status.value}]"
+        print(f"req{i}: {r.tokens}{tag}")
+    n_prefill = sum(len(p) for p in prompts)
+    tput = (n_prefill + eng.decode_tokens) / dt
+    print(f"{n_prefill} prefill toks + {eng.decode_steps} decode "
           f"steps ({eng.decode_tokens} toks) across {args.batch} slots / "
           f"{n_req} requests in {dt:.2f}s  ({tput:.0f} tok/s)")
     print(f"phase timings: prefill {eng.prefill_s:.2f}s "
@@ -71,6 +113,17 @@ def main():
               f"{eng.n_pages - 1} usable pages "
               f"({eng.free_pages} free after drain), "
               f"{eng.admissions} admissions")
+    if injector is not None or eng.failures or eng.expired or \
+            eng.quarantined or eng.shed:
+        from collections import Counter
+        statuses = Counter(r.status.value for r in eng.finished.values())
+        print(f"robustness: statuses {dict(statuses)}, "
+              f"{eng.failures} step failures / {eng.recoveries} recoveries, "
+              f"{eng.quarantined} quarantined, {eng.expired} expired, "
+              f"{eng.shed} shed, "
+              f"{len(eng.monitor.flagged)} straggler steps")
+        if injector is not None:
+            print(f"injected: {injector.counts}")
 
 
 if __name__ == "__main__":

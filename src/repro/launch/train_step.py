@@ -97,9 +97,19 @@ def make_train_fn(cfg: ModelConfig, ctx: AxisCtx, optim: AdamW, accum: int):
             (loss, met), grads = jax.value_and_grad(
                 loss_fn, has_aux=True)(params, batch)
         new_params, new_opt, stats = optim.update(grads, state["opt"], params)
-        metrics = {"loss": loss, **stats}
+        # non-finite guard: a NaN/inf loss or grad anywhere (grad_norm
+        # covers every leaf) skips the whole update IN-GRAPH — the state is
+        # donated, so host-side "don't apply" is not an option. The raw
+        # loss still reaches the metrics; the trainer counts skips.
+        ok = jnp.isfinite(loss) & jnp.isfinite(stats["grad_norm"])
+        keep = lambda n, o: jnp.where(ok, n, o)  # noqa: E731
+        new_params = jax.tree_util.tree_map(keep, new_params, params)
+        new_opt = jax.tree_util.tree_map(keep, new_opt, state["opt"])
+        metrics = {"loss": loss, **stats,
+                   "skipped": (1 - ok).astype(jnp.int32)}
         return {"params": new_params, "opt": new_opt,
-                "step": state["step"] + 1}, metrics
+                "step": state["step"] + ok.astype(state["step"].dtype)}, \
+            metrics
 
     return step
 

@@ -1,4 +1,9 @@
 from repro.serving.engine import (GenerateResult, Request,  # noqa: F401
-                                  ServeEngine, stitch_prefill_cache)
-from repro.serving.paged_cache import (BlockAllocator,  # noqa: F401
-                                       PagedCacheConfig, pages_for)
+                                  RejectedRequest, RejectReason,
+                                  RequestStatus, ServeEngine,
+                                  stitch_prefill_cache)
+from repro.serving.faults import (FaultInjector, FaultPlan,  # noqa: F401
+                                  InjectedFault)
+from repro.serving.paged_cache import (AllocatorError,  # noqa: F401
+                                       BlockAllocator, PagedCacheConfig,
+                                       pages_for)

@@ -1,6 +1,6 @@
 """Continuous-batching serving engine: slot scheduler + masked chunked
 prefill + per-row-position decode, with an optional paged block-table KV
-cache.
+cache and a production fault model.
 
 Requests are ``submit()``-ed into a queue and admitted MID-FLIGHT into a
 fixed pool of decode slots: a freed slot (eos / max_new) is refilled from
@@ -19,14 +19,32 @@ With ``page_size > 0`` the K/V cache is PAGED (serving/paged_cache.py):
 K/V live in shared fixed-size page pools, each request owns just enough
 pages for its ``prompt + max_new`` budget through a block table, and pages
 return to the free list at eos — so admission is gated on the FREE-PAGE
-budget, not on ``slots × max_seq`` regions, and the same cache memory holds
-``~max_seq / mean_request_budget`` times more live requests. SSM conv/SSD
-state stay dense per-slot (they are O(1) per request).
+budget, not on ``slots × max_seq`` regions.
 
-The same engine runs on a mesh (pjit shardings from the step builders) or a
-single device. Plans resolve per latency phase: the decode step looks up
-``:phdecode`` entries (ranked on per-step latency — tiny-M shapes legalize
-toward bcast/small ring groups), the chunk step ``:phprefill`` ones.
+ROBUSTNESS MODEL (mirrors the trainer's checkpoint/restart + straggler
+machinery for the serving workload):
+
+* Every request carries a terminal ``status`` — ``ok / rejected /
+  cancelled / expired / quarantined / failed`` — and malformed submissions
+  raise a typed :class:`RejectedRequest` (reason enum) instead of killing
+  the engine with an assert.
+* Per-request DEADLINES (TTFT + total latency) are checked at step
+  boundaries; a bounded queue (``max_queue``) sheds load via a pluggable
+  policy (reject-new, or deadline-aware drop of the least-slack request).
+* ``cancel(rid)`` works on queued AND live requests, freeing the slot and
+  its pages immediately.
+* Non-finite logits are QUARANTINED per row: the poisoned request retires
+  with ``status="quarantined"`` and the rest of the batch is untouched.
+* ``snapshot()/restore()`` capture the full scheduler state (queue,
+  slot↔request map, positions, page allocator) together with the KV/SSM
+  pools through checkpoint/manager.py's atomic writer; on a step failure
+  the engine restores the last snapshot and REPLAYS — an in-memory event
+  log of post-snapshot submits/cancels closes the gap, and a monotonic
+  per-request emission watermark makes token delivery EXACTLY-ONCE
+  (replayed tokens below the watermark are regenerated bit-identically
+  but never re-emitted).
+* A :class:`~repro.serving.faults.FaultInjector` plugs into a narrow hook
+  in ``step()`` to drive all of the above deterministically.
 
 ``generate(prompts, ...)`` remains as a convenience wrapper: submit all,
 run to completion, return a batch result. Any number of prompts works —
@@ -35,19 +53,22 @@ more prompts than slots simply queue.
 from __future__ import annotations
 
 import dataclasses
+import enum
 import time
 from collections import deque
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import (Callable, Dict, List, Optional, Sequence, Tuple, Union)
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint.manager import CheckpointManager
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.launch.train_step import (build_decode_step,
                                      build_prefill_chunk_step)
 from repro.models import lm
 from repro.serving.paged_cache import BlockAllocator, pages_for
+from repro.training.trainer import StragglerMonitor
 
 
 def stitch_prefill_cache(cfg, decode_cache, prefill_cache, prompt_len: int):
@@ -73,6 +94,46 @@ def stitch_prefill_cache(cfg, decode_cache, prefill_cache, prompt_len: int):
     return tuple(out)
 
 
+# ---------------------------------------------------------------------------
+# Request lifecycle types
+# ---------------------------------------------------------------------------
+
+
+class RequestStatus(str, enum.Enum):
+    """Lifecycle states. QUEUED/RUNNING are transient; the rest terminal."""
+    QUEUED = "queued"
+    RUNNING = "running"
+    OK = "ok"
+    REJECTED = "rejected"
+    CANCELLED = "cancelled"
+    EXPIRED = "expired"
+    QUARANTINED = "quarantined"
+    FAILED = "failed"
+
+
+TERMINAL_STATUSES = frozenset({
+    RequestStatus.OK, RequestStatus.REJECTED, RequestStatus.CANCELLED,
+    RequestStatus.EXPIRED, RequestStatus.QUARANTINED, RequestStatus.FAILED})
+
+
+class RejectReason(str, enum.Enum):
+    EMPTY_PROMPT = "empty_prompt"
+    TOO_LONG = "too_long"               # prompt + max_new > max_seq
+    OVER_CAPACITY = "over_capacity"     # page budget beyond the whole pool
+    QUEUE_FULL = "queue_full"           # bounded queue, shed policy said no
+
+
+class RejectedRequest(Exception):
+    """Typed submission rejection. Carries the reason enum and the
+    (terminal, status=rejected) request record; the engine stays fully
+    serviceable after raising this."""
+
+    def __init__(self, reason: RejectReason, msg: str, request=None):
+        super().__init__(f"{reason.value}: {msg}")
+        self.reason = reason
+        self.request = request
+
+
 @dataclasses.dataclass
 class GenerateResult:
     tokens: np.ndarray          # (B, max_new) generated ids
@@ -94,14 +155,36 @@ class Request:
     submit_t: float = 0.0
     first_token_t: float = 0.0  # TTFT = first_token_t - submit_t
     done_t: float = 0.0
+    status: RequestStatus = RequestStatus.QUEUED
+    error: str = ""
+    ttft_deadline_s: Optional[float] = None   # first token within this
+    deadline_s: Optional[float] = None        # whole request within this
 
     @property
     def done(self) -> bool:
-        return self.length >= 0
+        return self.status in TERMINAL_STATUSES
 
     @property
     def ttft_s(self) -> float:
         return self.first_token_t - self.submit_t
+
+
+_REQ_FIELDS = ("rid", "prompt", "max_new", "eos_id", "tokens", "length",
+               "slot", "submit_t", "first_token_t", "done_t", "error",
+               "ttft_deadline_s", "deadline_s")
+
+
+def _req_to_json(r: Request) -> Dict:
+    d = {k: getattr(r, k) for k in _REQ_FIELDS}
+    d["status"] = r.status.value
+    return d
+
+
+def _req_from_json(d: Dict) -> Request:
+    kw = {k: d[k] for k in _REQ_FIELDS}
+    kw["prompt"] = list(kw["prompt"])
+    kw["tokens"] = list(kw["tokens"])
+    return Request(status=RequestStatus(d["status"]), **kw)
 
 
 class ServeEngine:
@@ -109,7 +192,15 @@ class ServeEngine:
                  max_seq: int = 256, batch_size: int = 4, seed: int = 0,
                  plan_cache: Optional[str] = None, plan_hw: str = "",
                  chunk: int = 0, page_size: int = 0, n_pages: int = 0,
-                 admit_k: int = 0):
+                 admit_k: int = 0, max_queue: int = 0,
+                 shed_policy: Union[str, Callable] = "reject",
+                 ttft_deadline_s: Optional[float] = None,
+                 deadline_s: Optional[float] = None,
+                 snapshot_dir: Optional[str] = None, snapshot_every: int = 8,
+                 max_restarts: int = 3, recover: Optional[bool] = None,
+                 faults=None, straggler_factor: float = 2.5,
+                 clock: Optional[Callable[[], float]] = None,
+                 on_token: Optional[Callable[[int, int, int], None]] = None):
         self.cfg = cfg
         self.mesh = mesh
         self.max_seq = max_seq
@@ -142,6 +233,25 @@ class ServeEngine:
         # how many queued requests one step() may admit in ONE stacked
         # chunk call (0 = up to every free slot)
         self.admit_k = admit_k
+        # -- robustness knobs ------------------------------------------------
+        self.max_queue = max_queue               # 0 = unbounded
+        self.shed_policy = shed_policy           # "reject"|"deadline"|callable
+        self.ttft_deadline_s = ttft_deadline_s   # per-request defaults
+        self.deadline_s = deadline_s
+        self.max_restarts = max_restarts         # consecutive step failures
+        self.faults = faults                     # FaultInjector or None
+        self.monitor = StragglerMonitor(straggler_factor)
+        self._clock = clock or time.perf_counter
+        self.on_token = on_token                 # exactly-once emission cb
+        self.snapshot_every = snapshot_every
+        self.ckpt = (CheckpointManager(snapshot_dir, keep=3,
+                                       async_save=False)
+                     if snapshot_dir else None)
+        # recovery on step failure: restore last snapshot (or reset empty)
+        # + replay the post-snapshot event log. Default on iff snapshots
+        # are configured; force with recover=True/False.
+        self.auto_recover = (recover if recover is not None
+                             else snapshot_dir is not None)
         # ONE shape describes the shared donated cache: both steps derive
         # identical cache shardings from it on a mesh (paged: the K/V page
         # pools + per-slot SSM state)
@@ -182,6 +292,13 @@ class ServeEngine:
         self.queue: deque = deque()
         self.finished: Dict[int, Request] = {}
         self._next_rid = 0
+        # exactly-once delivery ledger: rid -> tokens emitted so far. Never
+        # rolled back by restore — replayed tokens below the watermark are
+        # regenerated (bit-identically) but not re-emitted.
+        self.emitted: Dict[int, int] = {}
+        # write-ahead event log since the last committed snapshot: replayed
+        # after a restore so post-snapshot submits/cancels are never lost
+        self._log: List[Tuple] = []
         # per-phase accounting (the CLI summary prints these)
         self.prefill_s = 0.0
         self.decode_s = 0.0
@@ -190,27 +307,120 @@ class ServeEngine:
         self.decode_tokens = 0
         self.admissions = 0
         self.admit_rounds = 0       # stacked chunk-admission calls
+        # fault/recovery accounting
+        self.step_idx = 0           # monotonic; NEVER rolled back by restore
+        self.failures = 0           # total step failures
+        self.recoveries = 0         # successful restore+replay cycles
+        self.shed = 0               # queued requests dropped by load shedding
+        self.expired = 0
+        self.quarantined = 0
+        self._consec_failures = 0
 
     # -- streaming API ------------------------------------------------------
 
+    def _reject(self, req: Request, reason: RejectReason, msg: str):
+        req.status = RequestStatus.REJECTED
+        req.error = f"{reason.value}: {msg}"
+        req.done_t = self._clock()
+        raise RejectedRequest(reason, msg, request=req)
+
     def submit(self, prompt: Sequence[int], max_new: int = 32,
-               eos_id: Optional[int] = None) -> int:
+               eos_id: Optional[int] = None,
+               ttft_deadline_s: Optional[float] = None,
+               deadline_s: Optional[float] = None) -> int:
         """Queue a request; returns its id. Admission happens on the next
-        ``step()`` (or immediately inside ``run()``)."""
-        assert len(prompt) + max_new <= self.max_seq, "exceeds engine max_seq"
-        assert len(prompt) > 0, "empty prompt"
+        ``step()`` (or immediately inside ``run()``). Malformed requests
+        raise :class:`RejectedRequest` (typed reason, engine untouched);
+        a full bounded queue applies the shedding policy first."""
+        req = Request(self._next_rid, list(prompt), max_new, eos_id,
+                      submit_t=self._clock(),
+                      ttft_deadline_s=(self.ttft_deadline_s
+                                       if ttft_deadline_s is None
+                                       else ttft_deadline_s),
+                      deadline_s=(self.deadline_s if deadline_s is None
+                                  else deadline_s))
+        self._next_rid += 1                    # rids stay unique on reject
+        if len(req.prompt) == 0:
+            self._reject(req, RejectReason.EMPTY_PROMPT, "empty prompt")
+        if len(req.prompt) + max_new > self.max_seq:
+            self._reject(req, RejectReason.TOO_LONG,
+                         f"prompt {len(req.prompt)} + max_new {max_new} "
+                         f"exceeds engine max_seq {self.max_seq}")
         if self.paged:
             # a budget beyond the POOL capacity would never fit, and the
             # FIFO admission gate would stall on it (and everything queued
             # behind it) forever — reject it at the door instead
-            need = pages_for(len(prompt) + max_new, self.page_size)
-            assert need <= self.n_pages - 1, (
-                f"request needs {need} pages, pool holds {self.n_pages - 1}")
-        req = Request(self._next_rid, list(prompt), max_new, eos_id,
-                      submit_t=time.perf_counter())
-        self._next_rid += 1
+            need = pages_for(len(req.prompt) + max_new, self.page_size)
+            if need > min(self.n_pages - 1, self.max_blocks):
+                self._reject(req, RejectReason.OVER_CAPACITY,
+                             f"request needs {need} pages, pool holds "
+                             f"{min(self.n_pages - 1, self.max_blocks)}")
+        if self.max_queue and len(self.queue) >= self.max_queue:
+            victim = self._shed_victim(req)
+            if victim is None:
+                self._reject(req, RejectReason.QUEUE_FULL,
+                             f"queue at max_queue={self.max_queue}")
+            self._drop_queued(victim, RequestStatus.EXPIRED,
+                              "shed: queue full")
+            self.shed += 1
+        req.status = RequestStatus.QUEUED
         self.queue.append(req)
+        self._log.append(("submit", _req_to_json(req)))
         return req.rid
+
+    def _shed_victim(self, new_req: Request) -> Optional[Request]:
+        """Pick the queued request to drop when the bounded queue is full
+        (None = reject the new request instead). The "deadline" policy
+        drops whichever request has the LEAST deadline slack — it is the
+        one most likely to miss anyway; requests without deadlines have
+        infinite slack and are never shed."""
+        if callable(self.shed_policy):
+            return self.shed_policy(self, new_req)
+        if self.shed_policy == "reject":
+            return None
+        if self.shed_policy == "deadline":
+            now = self._clock()
+
+            def slack(r: Request) -> float:
+                dls = [d for d in (r.ttft_deadline_s, r.deadline_s)
+                       if d is not None]
+                if not dls:
+                    return float("inf")
+                return min(dls) - (now - r.submit_t)
+
+            if not self.queue:
+                return None
+            victim = min(self.queue, key=slack)
+            return victim if slack(victim) < slack(new_req) else None
+        raise ValueError(f"unknown shed_policy {self.shed_policy!r}")
+
+    def _drop_queued(self, req: Request, status: RequestStatus, error: str):
+        """Remove a queued request and retire it terminally (shed/cancel/
+        deadline); logged so crash replay re-applies the drop."""
+        self.queue.remove(req)
+        req.status = status
+        req.error = error
+        req.done_t = self._clock()
+        if req.length < 0:
+            req.length = len(req.tokens)
+        self.finished[req.rid] = req
+        self._log.append(("drop", req.rid, status.value, error))
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a request by id: queued requests leave the queue, LIVE
+        requests retire immediately (slot + pages freed, partial tokens
+        kept). Returns False if the rid is unknown or already terminal."""
+        for r in self.queue:
+            if r.rid == rid:
+                self._drop_queued(r, RequestStatus.CANCELLED, "cancelled")
+                return True
+        for slot, r in enumerate(self.slot_req):
+            if r is not None and r.rid == rid:
+                self._retire(slot, RequestStatus.CANCELLED, "cancelled")
+                self._log.append(("drop", rid,
+                                  RequestStatus.CANCELLED.value, "cancelled"))
+                return True
+        return False
 
     @property
     def pending(self) -> bool:
@@ -223,8 +433,16 @@ class ServeEngine:
 
     def _record_token(self, req: Request, tok: int, t_idx: int) -> bool:
         """Append a generated token; returns True when the request is done
-        (eos — possibly on its very FIRST decoded token — or max_new)."""
+        (eos — possibly on its very FIRST decoded token — or max_new).
+        Emission is exactly-once: tokens at an index below the request's
+        watermark (regenerated during crash replay) are recorded but NOT
+        re-emitted through ``on_token``."""
         req.tokens.append(tok)
+        idx = len(req.tokens) - 1
+        if idx >= self.emitted.get(req.rid, 0):
+            self.emitted[req.rid] = idx + 1
+            if self.on_token is not None:
+                self.on_token(req.rid, idx, tok)
         if req.eos_id is not None and tok == req.eos_id:
             req.length = t_idx
             return True
@@ -233,10 +451,15 @@ class ServeEngine:
             return True
         return False
 
-    def _retire(self, slot: int):
+    def _retire(self, slot: int, status: RequestStatus = RequestStatus.OK,
+                error: str = ""):
         req = self.slot_req[slot]
-        req.done_t = time.perf_counter()
+        req.done_t = self._clock()
         req.slot = -1
+        req.status = status
+        req.error = error
+        if req.length < 0:
+            req.length = len(req.tokens)
         self.finished[req.rid] = req
         self.slot_req[slot] = None
         self.live[slot] = False
@@ -245,6 +468,37 @@ class ServeEngine:
             # write from this (now dead) decode row into the null page
             self.alloc.free_slot(slot)
             self.block_tables[slot] = 0
+
+    # -- deadlines ----------------------------------------------------------
+
+    def _expire_queued(self):
+        now = self._clock()
+        for r in list(self.queue):
+            age = now - r.submit_t
+            if r.ttft_deadline_s is not None and age > r.ttft_deadline_s:
+                self._drop_queued(r, RequestStatus.EXPIRED,
+                                  f"ttft deadline {r.ttft_deadline_s:.3f}s "
+                                  f"exceeded in queue")
+                self.expired += 1
+            elif r.deadline_s is not None and age > r.deadline_s:
+                self._drop_queued(r, RequestStatus.EXPIRED,
+                                  f"deadline {r.deadline_s:.3f}s exceeded "
+                                  f"in queue")
+                self.expired += 1
+
+    def _expire_live(self):
+        now = self._clock()
+        for slot in range(self.B):
+            r = self.slot_req[slot]
+            if r is None or not self.live[slot]:
+                continue
+            if r.deadline_s is not None and now - r.submit_t > r.deadline_s:
+                self._retire(slot, RequestStatus.EXPIRED,
+                             f"deadline {r.deadline_s:.3f}s exceeded "
+                             f"after {len(r.tokens)} tokens")
+                self.expired += 1
+
+    # -- admission ----------------------------------------------------------
 
     def _gather_admissions(self) -> List[Tuple[int, Request]]:
         """Pop queued requests (FIFO) into free slots, gating on the free-
@@ -301,6 +555,7 @@ class ServeEngine:
         nchunks = np.maximum(1, -(-plens // C))
         fn = self.prefill["jit"]
         first_tok = np.zeros((A,), np.int32)
+        row_ok = np.ones((A,), bool)
         for j in range(int(nchunks.max())):
             toks = np.zeros((A, C), np.int32)
             valids = np.clip(plens - j * C, 0, C).astype(np.int32)
@@ -317,55 +572,250 @@ class ServeEngine:
             else:
                 logits, self.cache = fn(*args)
             nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+            finite = np.asarray(jnp.isfinite(logits).all(axis=-1))
             last = nchunks == j + 1
             first_tok[last] = nxt[last]
+            row_ok[last] = finite[last]
         self.prefill_s += time.perf_counter() - t0
         self.prefill_tokens += int(plens.sum())
         self.admissions += len(pairs)               # parking rows don't count
         self.admit_rounds += 1
-        now = time.perf_counter()
+        now = self._clock()
         for a, (slot, req) in enumerate(pairs):
             req.slot = slot
-            req.first_token_t = now
+            req.status = RequestStatus.RUNNING
+            if req.first_token_t <= 0:              # preserve TTFT on replay
+                req.first_token_t = now
             self.slot_req[slot] = req
             self.pos[slot] = int(plens[a])
             self.last_tok[slot] = int(first_tok[a])
             self.live[slot] = True
-            if self._record_token(req, int(first_tok[a]), 0):
+            if not row_ok[a]:
+                # non-finite prefill logits: quarantine THIS request only;
+                # its garbage first token is never recorded
+                self._retire(slot, RequestStatus.QUARANTINED,
+                             "non-finite prefill logits")
+                self.quarantined += 1
+            elif self._record_token(req, int(first_tok[a]), 0):
                 self._retire(slot)                # finished on token 0
         return pairs
 
+    # -- the scheduler step -------------------------------------------------
+
     def step(self) -> bool:
-        """One scheduler iteration: refill free slots from the queue (one
-        stacked chunk-admission call for up to ``admit_k`` requests, gated
-        on the free-page budget when paged), then advance every live slot
-        by one decoded token. Returns whether any work remains."""
+        """One scheduler iteration: fault hooks fire first, then queued
+        deadline expiry, queue refill (one stacked chunk-admission call,
+        gated on the free-page budget when paged), one decoded token per
+        live slot (non-finite rows quarantined), live deadline expiry, and
+        a periodic snapshot. On a step failure the engine recovers
+        (restore + replay) when ``auto_recover`` is on, re-raising only
+        after ``max_restarts`` consecutive failures. Returns whether any
+        work remains."""
+        self.step_idx += 1
+        t0 = self._clock()
+        try:
+            self._step_inner()
+        except RejectedRequest:
+            raise
+        except Exception as e:
+            self.failures += 1
+            self._consec_failures += 1
+            if not self.auto_recover or \
+                    self._consec_failures > self.max_restarts:
+                self._fail_all(e)
+                raise
+            self._recover(e)
+            return self.pending
+        self._consec_failures = 0
+        self.monitor.observe(self.step_idx, self._clock() - t0)
+        return self.pending
+
+    def _step_inner(self):
+        if self.faults is not None:
+            self.faults.begin_step(self)   # latency / pressure / crash hook
+        self._expire_queued()
         pairs = self._gather_admissions()
         if pairs:
             self._admit_batch(pairs)
         if self.live.any():
-            t0 = time.perf_counter()
-            toks = jnp.asarray(self.last_tok[:, None])
-            args = (self.params, self.cache, toks, jnp.asarray(self.pos),
-                    jnp.asarray(self.live))
-            if self.paged:
-                nxt, _, self.cache = self.decode["jit"](
-                    *args, jnp.asarray(self.block_tables))
-            else:
-                nxt, _, self.cache = self.decode["jit"](*args)
-            nxt = np.asarray(nxt)[:, 0]
-            self.decode_s += time.perf_counter() - t0
-            self.decode_steps += 1
-            self.decode_tokens += int(self.live.sum())
-            for slot in range(self.B):
-                if not self.live[slot]:
-                    continue
-                req = self.slot_req[slot]
-                self.pos[slot] += 1
-                self.last_tok[slot] = int(nxt[slot])
-                if self._record_token(req, int(nxt[slot]), len(req.tokens)):
-                    self._retire(slot)
-        return self.pending
+            self._decode_once()
+        self._expire_live()
+        if self.ckpt is not None and self.snapshot_every and \
+                self.step_idx % self.snapshot_every == 0:
+            self.snapshot()
+
+    def _decode_once(self):
+        t0 = time.perf_counter()
+        toks = jnp.asarray(self.last_tok[:, None])
+        args = (self.params, self.cache, toks, jnp.asarray(self.pos),
+                jnp.asarray(self.live))
+        if self.paged:
+            nxt, logits, self.cache = self.decode["jit"](
+                *args, jnp.asarray(self.block_tables))
+        else:
+            nxt, logits, self.cache = self.decode["jit"](*args)
+        nxt = np.asarray(nxt)[:, 0]
+        # per-row health: a poisoned request must retire alone instead of
+        # taking the engine (or its batch neighbours) down
+        row_ok = np.asarray(jnp.isfinite(logits).all(axis=-1))
+        poisoned = (set(self.faults.poison_rows(self))
+                    if self.faults is not None else set())
+        self.decode_s += time.perf_counter() - t0
+        self.decode_steps += 1
+        self.decode_tokens += int(self.live.sum())
+        for slot in range(self.B):
+            if not self.live[slot]:
+                continue
+            req = self.slot_req[slot]
+            if slot in poisoned or not row_ok[slot]:
+                self._retire(slot, RequestStatus.QUARANTINED,
+                             f"non-finite logits after {len(req.tokens)} "
+                             f"tokens")
+                self.quarantined += 1
+                continue
+            self.pos[slot] += 1
+            self.last_tok[slot] = int(nxt[slot])
+            if self._record_token(req, int(nxt[slot]), len(req.tokens)):
+                self._retire(slot)
+
+    # -- snapshot / restore / recovery --------------------------------------
+
+    def _device_state(self) -> Dict:
+        state = {"cache": self.cache, "pos": self.pos, "live": self.live,
+                 "last_tok": self.last_tok}
+        if self.paged:
+            state["block_tables"] = self.block_tables
+        return state
+
+    def snapshot(self):
+        """Commit scheduler state + KV/SSM pools atomically (one rename —
+        readers never observe a torn snapshot). Clears the write-ahead
+        event log: everything before this point is folded into the
+        snapshot, everything after is replayable."""
+        if self.ckpt is None:
+            raise RuntimeError("snapshot() needs snapshot_dir")
+        by_rid: Dict[int, Request] = {r.rid: r for r in self.queue}
+        by_rid.update({r.rid: r for r in self.slot_req if r is not None})
+        by_rid.update(self.finished)
+        extra = {
+            "requests": {str(rid): _req_to_json(r)
+                         for rid, r in by_rid.items()},
+            "queue": [r.rid for r in self.queue],
+            "slots": [r.rid if r is not None else None
+                      for r in self.slot_req],
+            "finished": sorted(self.finished),
+            "next_rid": self._next_rid,
+            "alloc": self.alloc.snapshot_state() if self.paged else None,
+        }
+        self.ckpt.save(self.step_idx, self._device_state(), wait=True,
+                       extra=extra)
+        self._log = []
+
+    def restore(self, step: Optional[int] = None):
+        """Restore scheduler + cache from the latest (or a given) committed
+        snapshot. The monotonic fault clock (``step_idx``) and the
+        exactly-once emission ledger are NOT rolled back."""
+        if self.ckpt is None:
+            raise RuntimeError("restore() needs snapshot_dir")
+        self.ckpt.wait()
+        state, step = self.ckpt.restore(self._device_state(), step=step)
+        extra = self.ckpt.load_extra(step)
+        self.cache = state["cache"]
+        self.pos = np.asarray(state["pos"], np.int32).copy()
+        self.live = np.asarray(state["live"], bool).copy()
+        self.last_tok = np.asarray(state["last_tok"], np.int32).copy()
+        if self.paged:
+            self.block_tables = np.asarray(state["block_tables"],
+                                           np.int32).copy()
+            self.alloc.restore_state(extra["alloc"])
+            # injected page squeezes (negative pseudo-slots) are transient
+            # memory pressure, not scheduler state — don't resurrect them
+            # (the injector's own release is owns()-guarded, so this can
+            # never turn into a double free)
+            for s in [int(s) for s in extra["alloc"]["owned"]
+                      if int(s) < 0]:
+                self.alloc.free_slot(s)
+        reqs = {int(rid): _req_from_json(d)
+                for rid, d in extra["requests"].items()}
+        self.queue = deque(reqs[rid] for rid in extra["queue"])
+        self.slot_req = [reqs[rid] if rid is not None else None
+                         for rid in extra["slots"]]
+        self.finished = {rid: reqs[rid] for rid in extra["finished"]}
+        self._next_rid = max(self._next_rid, int(extra["next_rid"]))
+
+    def _reset_empty(self):
+        """No committed snapshot: reset to the engine's initial (empty)
+        state; the full event log then replays every submission."""
+        self.cache = jax.tree_util.tree_map(
+            lambda x: jnp.zeros(x.shape, x.dtype), self.cache)
+        self.pos[:] = 0
+        self.live[:] = False
+        self.last_tok[:] = 0
+        self.queue = deque()
+        self.slot_req = [None] * self.B
+        if self.paged:
+            self.alloc = BlockAllocator(self.n_pages, self.page_size,
+                                        self.max_blocks)
+            self.block_tables = np.zeros((self.B, self.max_blocks), np.int32)
+
+    def _replay_log(self):
+        """Re-apply post-snapshot external events (submits, cancels/sheds)
+        in order. Replayed submissions start from token 0 — regeneration
+        is bit-identical and the emission watermark suppresses duplicates,
+        so delivery stays exactly-once."""
+        log, self._log = self._log, []
+        for ev in log:
+            if ev[0] == "submit":
+                d = dict(ev[1])
+                d["tokens"], d["length"] = [], -1
+                d["slot"], d["first_token_t"], d["done_t"] = -1, 0.0, 0.0
+                d["status"] = RequestStatus.QUEUED.value
+                req = _req_from_json(d)
+                self.queue.append(req)
+                self._log.append(("submit", ev[1]))
+            elif ev[0] == "drop":
+                _, rid, status, error = ev
+                self._apply_drop(int(rid), RequestStatus(status), error)
+
+    def _apply_drop(self, rid: int, status: RequestStatus, error: str):
+        for r in list(self.queue):
+            if r.rid == rid:
+                self._drop_queued(r, status, error)
+                return
+        for slot, r in enumerate(self.slot_req):
+            if r is not None and r.rid == rid:
+                self._retire(slot, status, error)
+                self._log.append(("drop", rid, status.value, error))
+                return
+
+    def _recover(self, error: Exception):
+        """Restore the last committed snapshot (or reset empty) and replay
+        the event log. In-flight work resumes exactly where the snapshot
+        left it; post-snapshot submissions re-enter the queue."""
+        have = self.ckpt.latest_step() if self.ckpt is not None else None
+        if have is not None:
+            self.restore(have)
+        else:
+            self._reset_empty()
+        self._replay_log()
+        self.recoveries += 1
+        print(f"[serve] step {self.step_idx} failed "
+              f"({type(error).__name__}: {error}); restored snapshot "
+              f"{'@step %d' % have if have is not None else '(initial)'} "
+              f"+ replayed log ({self._consec_failures}/"
+              f"{self.max_restarts} consecutive)")
+
+    def _fail_all(self, error: Exception):
+        """Unrecoverable engine failure: every non-terminal request reaches
+        the terminal ``failed`` status so callers are never left hanging."""
+        msg = f"engine failure: {type(error).__name__}: {error}"
+        for r in list(self.queue):
+            self._drop_queued(r, RequestStatus.FAILED, msg)
+        for slot, r in enumerate(self.slot_req):
+            if r is not None:
+                self._retire(slot, RequestStatus.FAILED, msg)
+
+    # -- drain / collect ----------------------------------------------------
 
     def run(self) -> Dict[int, Request]:
         """Drain queue + slots; returns {rid: finished Request}."""
@@ -377,6 +827,7 @@ class ServeEngine:
         """Pop a finished request's record. Long-running streaming servers
         must collect results (or clear ``finished``) — the engine keeps a
         reference to every uncollected request, tokens included."""
+        self.emitted.pop(rid, None)
         return self.finished.pop(rid)
 
     # -- batch convenience wrapper -----------------------------------------

@@ -1,0 +1,158 @@
+"""Deterministic fault injection for the serving engine.
+
+Production MoE serving lives or dies on operating through faults —
+device losses, straggling hosts, poisoned activations, memory pressure —
+and none of that is testable without a way to INJECT those faults into
+the real engine loop on a repeatable schedule. This module provides:
+
+* :class:`FaultPlan` — a seeded, step-indexed schedule of fault events
+  (crashes, latency spikes, NaN logit rows, page-pool squeezes).
+  ``FaultPlan.poisson`` draws a chaos schedule from independent per-step
+  Bernoulli trials, so a whole chaos trace is one integer seed.
+* :class:`FaultInjector` — applies a plan through a NARROW hook in
+  ``ServeEngine.step()``: ``begin_step`` fires latency/pressure/crash
+  events keyed on the engine's monotonic step counter, ``poison_rows``
+  marks live decode rows whose logits the engine must treat as
+  non-finite. The engine's own quarantine / recovery machinery then
+  handles the fault exactly as it would a real one.
+
+The injector is keyed on ``ServeEngine.step_idx``, which is MONOTONIC
+across crash recovery (it never rolls back with a snapshot restore), so
+an injected crash fires exactly once — replayed steps run fault-free
+unless the plan schedules new events for them.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Mapping, Tuple
+
+import numpy as np
+
+
+class InjectedFault(RuntimeError):
+    """Simulated device loss raised from inside ``ServeEngine.step()``."""
+
+    def __init__(self, step: int, msg: str = ""):
+        super().__init__(msg or f"injected device loss at step {step}")
+        self.step = step
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Step-indexed fault schedule. All step indices refer to the engine's
+    monotonic ``step_idx`` (1-based, never rolled back by recovery).
+
+    * ``crash_steps`` — steps whose ``begin_step`` raises InjectedFault.
+    * ``latency_s`` — step -> seconds of injected sleep (straggler spike).
+    * ``nan_rows`` — step -> how many live decode rows get their logits
+      treated as non-finite (per-row quarantine path).
+    * ``page_squeeze`` — step -> (n_pages, hold_steps): temporarily claim
+      free pages from the engine's allocator (memory-pressure admission
+      stall), released ``hold_steps`` later.
+    """
+    seed: int = 0
+    crash_steps: Tuple[int, ...] = ()
+    latency_s: Mapping[int, float] = dataclasses.field(default_factory=dict)
+    nan_rows: Mapping[int, int] = dataclasses.field(default_factory=dict)
+    page_squeeze: Mapping[int, Tuple[int, int]] = dataclasses.field(
+        default_factory=dict)
+
+    @classmethod
+    def poisson(cls, seed: int, horizon: int, crash_rate: float = 0.02,
+                nan_rate: float = 0.02, spike_rate: float = 0.05,
+                spike_s: float = 0.02, squeeze_rate: float = 0.0,
+                squeeze_pages: int = 2, squeeze_hold: int = 4,
+                start: int = 2) -> "FaultPlan":
+        """Chaos schedule: independent per-step Bernoulli draws for each
+        fault class over ``[start, horizon)`` — the discrete analogue of a
+        Poisson fault process. One seed reproduces the whole trace."""
+        rng = np.random.default_rng(seed)
+        crash, lat, nan, squeeze = [], {}, {}, {}
+        for t in range(start, horizon):
+            if rng.random() < crash_rate:
+                crash.append(t)
+            if rng.random() < spike_rate:
+                lat[t] = spike_s
+            if rng.random() < nan_rate:
+                nan[t] = 1
+            if rng.random() < squeeze_rate:
+                squeeze[t] = (squeeze_pages, squeeze_hold)
+        return cls(seed=seed, crash_steps=tuple(crash), latency_s=lat,
+                   nan_rows=nan, page_squeeze=squeeze)
+
+    def summary(self) -> Dict[str, int]:
+        return {"crash": len(self.crash_steps),
+                "latency": len(self.latency_s),
+                "nan": len(self.nan_rows),
+                "page_squeeze": len(self.page_squeeze)}
+
+
+class FaultInjector:
+    """Applies a :class:`FaultPlan` to a live engine through the narrow
+    ``begin_step`` / ``poison_rows`` hook pair. Counts everything it
+    injects (``counts``) and records an event log for assertions."""
+
+    def __init__(self, plan: FaultPlan,
+                 sleep: Callable[[float], None] = time.sleep):
+        self.plan = plan
+        self.sleep = sleep
+        self.counts: Dict[str, int] = {"crash": 0, "latency": 0, "nan": 0,
+                                       "page_squeeze": 0}
+        self.events: List[Tuple[int, str]] = []
+        self._squeezes: Dict[int, int] = {}      # pseudo-slot -> release step
+
+    def begin_step(self, eng):
+        """Fire this step's latency / page-pressure / crash events. Called
+        first thing in ``ServeEngine.step()``; a raised InjectedFault is
+        the simulated device loss the engine's recovery path handles."""
+        t = eng.step_idx
+        # release expired squeezes first so pressure is bounded
+        for key, rel in list(self._squeezes.items()):
+            if t >= rel:
+                if eng.alloc is not None and eng.alloc.owns(key):
+                    eng.alloc.free_slot(key)
+                del self._squeezes[key]
+        s = self.plan.latency_s.get(t)
+        if s:
+            self.counts["latency"] += 1
+            self.events.append((t, f"latency {s:.3f}s"))
+            self.sleep(s)
+        sq = self.plan.page_squeeze.get(t)
+        if sq and eng.paged:
+            n_pages, hold = sq
+            n_pages = min(n_pages, eng.alloc.free_pages,
+                          eng.alloc.cfg.max_blocks)
+            if n_pages > 0:
+                key = -1000 - t          # pseudo-slot, never a real slot id
+                eng.alloc.allocate(key, n_pages * eng.page_size)
+                self._squeezes[key] = t + hold
+                self.counts["page_squeeze"] += 1
+                self.events.append((t, f"squeeze {n_pages} pages"))
+        if t in self.plan.crash_steps:
+            self.counts["crash"] += 1
+            self.events.append((t, "crash"))
+            raise InjectedFault(t)
+
+    def release_all(self, eng):
+        """Drop every outstanding page squeeze (e.g. after the engine
+        drains before a squeeze's scheduled release step)."""
+        for key in list(self._squeezes):
+            if eng.alloc is not None and eng.alloc.owns(key):
+                eng.alloc.free_slot(key)
+            del self._squeezes[key]
+
+    def poison_rows(self, eng) -> List[int]:
+        """Live decode rows whose logits the engine must treat as
+        non-finite this step (deterministic per (seed, step))."""
+        k = self.plan.nan_rows.get(eng.step_idx, 0)
+        if not k:
+            return []
+        live = np.flatnonzero(eng.live)
+        if live.size == 0:
+            return []
+        rng = np.random.default_rng((self.plan.seed, eng.step_idx))
+        rows = rng.choice(live, size=min(k, live.size), replace=False)
+        self.counts["nan"] += len(rows)
+        self.events.append((eng.step_idx, f"nan rows {sorted(rows.tolist())}"))
+        return [int(r) for r in rows]

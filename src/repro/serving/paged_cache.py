@@ -19,6 +19,12 @@ through unmapped table entries gather the null page and are masked by
 position validity (``index <= pos``) exactly like stale contiguous-cache
 rows were.
 
+The allocator enforces its ownership invariants DEFENSIVELY: freeing a
+slot that owns nothing and handing out a page that is already owned both
+raise :class:`AllocatorError` instead of silently corrupting the free
+list — a double-free that re-lists an owned page would hand the same
+physical page to two requests and cross-contaminate their K/V.
+
 This module is pure host-side bookkeeping (plain Python ints — no jax);
 the device-side gather/scatter lives in ``models/attention.py`` and the
 engine threads the block tables into the jitted steps as ``(n_slots,
@@ -30,6 +36,11 @@ import dataclasses
 from typing import Dict, List
 
 NULL_PAGE = 0
+
+
+class AllocatorError(RuntimeError):
+    """Page-ownership invariant violation (double free, double ownership,
+    free of an empty slot). Raised *before* the free list is corrupted."""
 
 
 def pages_for(n_tokens: int, page_size: int) -> int:
@@ -59,6 +70,11 @@ class BlockAllocator:
     mid-decode; reclaim is all-at-once at retire. A LIFO free list keeps
     reuse hot and makes fragmentation a non-issue — pages are fixed-size
     and fungible, any free page serves any block-table entry.
+
+    Every mutation checks the ownership invariant (``used + free ==
+    n_pages - 1``, no page owned twice, the null page never leaves) and
+    raises :class:`AllocatorError` on violation rather than corrupting
+    the free list silently.
     """
 
     def __init__(self, n_pages: int, page_size: int, max_blocks: int):
@@ -68,6 +84,7 @@ class BlockAllocator:
         # page 0 reserved as the null page
         self._free: List[int] = list(range(n_pages - 1, 0, -1))
         self._owned: Dict[int, List[int]] = {}
+        self._owner: Dict[int, int] = {}          # page -> owning slot
 
     # -- queries ------------------------------------------------------------
 
@@ -88,6 +105,12 @@ class BlockAllocator:
         need = self.pages_needed(n_tokens)
         return 0 < need <= min(self.free_pages, self.cfg.max_blocks)
 
+    def owns(self, slot: int) -> bool:
+        return slot in self._owned
+
+    def owned(self, slot: int) -> List[int]:
+        return list(self._owned.get(slot, []))
+
     # -- mutation -----------------------------------------------------------
 
     def allocate(self, slot: int, n_tokens: int) -> List[int]:
@@ -95,7 +118,7 @@ class BlockAllocator:
         block-table order. Raises if the slot already owns pages or the
         budget does not fit (callers gate on ``can_admit``)."""
         if slot in self._owned:
-            raise ValueError(f"slot {slot} already owns pages")
+            raise AllocatorError(f"slot {slot} already owns pages")
         need = self.pages_needed(n_tokens)
         if need > self.cfg.max_blocks:
             raise ValueError(
@@ -105,17 +128,77 @@ class BlockAllocator:
             raise ValueError(
                 f"budget {n_tokens} tokens needs {need} pages, "
                 f"only {self.free_pages} free")
-        pages = [self._free.pop() for _ in range(need)]
+        pages = []
+        for _ in range(need):
+            p = self._free.pop()
+            if p == NULL_PAGE or p in self._owner:
+                # a corrupted free list (double-listed / null page) must
+                # surface before the page is handed to a second request
+                self._free.extend(reversed(pages))
+                raise AllocatorError(
+                    f"free list corrupt: page {p} "
+                    f"{'is the null page' if p == NULL_PAGE else 'already owned by slot %d' % self._owner.get(p, -1)}")
+            self._owner[p] = slot
+            pages.append(p)
         self._owned[slot] = pages
         return pages
 
     def free_slot(self, slot: int) -> int:
         """Reclaim every page ``slot`` owns (slot free / eos); returns how
-        many were reclaimed. Freeing an unknown slot is a no-op (a slot
-        that never admitted owns nothing)."""
-        pages = self._owned.pop(slot, [])
+        many were reclaimed. Freeing a slot that owns nothing raises
+        :class:`AllocatorError` — it is always a double free or a stale
+        slot id, and silently ignoring it is how ownership bugs hide."""
+        if slot not in self._owned:
+            raise AllocatorError(
+                f"free_slot({slot}): slot owns no pages (double free or "
+                f"stale slot id)")
+        pages = self._owned.pop(slot)
+        for p in pages:
+            if self._owner.get(p) != slot:
+                raise AllocatorError(
+                    f"free_slot({slot}): page {p} owner map disagrees "
+                    f"(owned by {self._owner.get(p)})")
+            del self._owner[p]
         self._free.extend(pages)
         return len(pages)
 
-    def owned(self, slot: int) -> List[int]:
-        return list(self._owned.get(slot, []))
+    # -- invariants / snapshot ---------------------------------------------
+
+    def check(self):
+        """Assert the full ownership invariant; raises AllocatorError."""
+        total = self.cfg.n_pages - 1
+        if self.used_pages + self.free_pages != total:
+            raise AllocatorError(
+                f"used {self.used_pages} + free {self.free_pages} "
+                f"!= total {total}")
+        seen: Dict[int, str] = {}
+        for p in self._free:
+            if p == NULL_PAGE:
+                raise AllocatorError("null page on the free list")
+            if p in seen:
+                raise AllocatorError(f"page {p} listed free twice")
+            seen[p] = "free"
+        for slot, pages in self._owned.items():
+            for p in pages:
+                if p == NULL_PAGE:
+                    raise AllocatorError(f"null page owned by slot {slot}")
+                if p in seen:
+                    raise AllocatorError(
+                        f"page {p} owned by slot {slot} but also {seen[p]}")
+                if self._owner.get(p) != slot:
+                    raise AllocatorError(f"owner map stale for page {p}")
+                seen[p] = f"owned by {slot}"
+
+    def snapshot_state(self) -> Dict:
+        """JSON-serializable state for the engine's crash snapshots."""
+        return {"free": list(self._free),
+                "owned": {str(s): list(p) for s, p in self._owned.items()}}
+
+    def restore_state(self, state: Dict):
+        """Rebuild free list + ownership from :meth:`snapshot_state`."""
+        self._free = [int(p) for p in state["free"]]
+        self._owned = {int(s): [int(p) for p in pages]
+                       for s, pages in state["owned"].items()}
+        self._owner = {p: s for s, pages in self._owned.items()
+                       for p in pages}
+        self.check()

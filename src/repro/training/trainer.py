@@ -85,6 +85,12 @@ class TrainerConfig:
     straggler_factor: float = 2.5
     seed: int = 0
     max_restarts: int = 3
+    # non-finite guard: the train step skips the update IN-GRAPH when loss
+    # or grad_norm goes NaN/inf (metrics["skipped"]); the trainer counts
+    # skips and, after this many CONSECUTIVE ones, escalates to the normal
+    # checkpoint/restore path (a persistent NaN means the optimizer state
+    # itself is poisoned — replay from the last good snapshot).
+    nan_limit: int = 3
     # tuned adaptive-transport plans (core/adaptive.py): every moe_ffn under
     # the jitted train step resolves its schedule — transport, ring_group,
     # n_col, gemm backend, AND the custom-VJP backward ring geometry — from
@@ -112,6 +118,8 @@ class Trainer:
         self.ckpt = CheckpointManager(tcfg.ckpt_dir, keep=tcfg.keep)
         self.monitor = StragglerMonitor(tcfg.straggler_factor)
         self.metrics_log: List[Dict[str, float]] = []
+        self.nan_skips = 0                    # total skipped updates
+        self._consec_nans = 0
         self.data = SyntheticLM(cfg, self.built["batch_structs"],
                                 seed=tcfg.seed)
 
@@ -170,16 +178,33 @@ class Trainer:
                       f"step {self.ckpt.latest_step() or 0} "
                       f"(restart {restarts}/{self.tcfg.max_restarts})")
                 state, step = self.restore_or_init()
+                self._consec_nans = 0
         self.ckpt.save(step, state, wait=True)
         return {"final_step": step, "restarts": restarts,
                 "stragglers": list(self.monitor.flagged),
+                "nan_skips": self.nan_skips,
                 "metrics": self.metrics_log}
+
+    def _apply_fault_hook(self, step, state):
+        """Fault hooks come in two arities: ``(step)`` (legacy — raise to
+        simulate a node failure) and ``(step, state) -> state`` (may also
+        CORRUPT the state to exercise the non-finite guard)."""
+        import inspect
+        try:
+            nparams = len(inspect.signature(self.fault_hook).parameters)
+        except (TypeError, ValueError):
+            nparams = 1
+        if nparams >= 2:
+            out = self.fault_hook(step, state)
+            return state if out is None else out
+        self.fault_hook(step)
+        return state
 
     def _run_span(self, state, step, num_steps):
         jit_step = self.built["jit"]
         while step < num_steps:
             if self.fault_hook is not None:
-                self.fault_hook(step)     # may raise — simulated node failure
+                state = self._apply_fault_hook(step, state)
             batch = self._device_batch(self.data.batch_at(step))
             t0 = time.perf_counter()
             state, metrics = jit_step(state, batch)
@@ -187,15 +212,33 @@ class Trainer:
             dt = time.perf_counter() - t0
             step += 1
             self.monitor.observe(step, dt)
-            if not np.isfinite(loss):
-                raise FloatingPointError(f"non-finite loss at step {step}")
+            skipped = bool(int(metrics.get("skipped", 0))) \
+                or not np.isfinite(loss)
+            if skipped:
+                # the jitted step already refused the update in-graph (see
+                # make_train_fn); count it, and escalate to checkpoint
+                # replay once the skips stop being transient
+                self.nan_skips += 1
+                self._consec_nans += 1
+                print(f"[trainer] step {step}: non-finite loss/grads — "
+                      f"update skipped ({self._consec_nans} consecutive, "
+                      f"{self.nan_skips} total)")
+                if self._consec_nans > self.tcfg.nan_limit:
+                    raise FloatingPointError(
+                        f"{self._consec_nans} consecutive non-finite steps "
+                        f"at step {step} (nan_limit {self.tcfg.nan_limit})")
+            else:
+                self._consec_nans = 0
             rec = {"step": step, "loss": loss, "time_s": dt,
+                   "skipped": int(skipped),
                    "grad_norm": float(metrics.get("grad_norm", np.nan))}
             self.metrics_log.append(rec)
             if step % self.tcfg.log_every == 0:
                 print(f"[trainer] step {step} loss {loss:.4f} "
                       f"({dt*1e3:.0f} ms)")
-            if step % self.tcfg.ckpt_every == 0:
+            if step % self.tcfg.ckpt_every == 0 and self._consec_nans == 0:
+                # never checkpoint mid-NaN-streak: the state that produced
+                # a non-finite step must not become the restore point
                 self.ckpt.save(step, state)
         return state, step
 

@@ -91,6 +91,54 @@ def test_plan_cache_roundtrip_and_moe_layer_pickup(tmp_path, monkeypatch):
     np.testing.assert_allclose(float(aux), float(aux_ref), rtol=1e-6)
 
 
+def test_corrupt_cache_files_start_empty(tmp_path):
+    """A truncated, garbage, or future-versioned plan cache must warn and
+    start empty (retune) instead of killing the run; a good cache written
+    afterwards round-trips normally."""
+    good = A.PlanCache(str(tmp_path / "good.json"))
+    s = A.MoEShape(M=64, N=128, K=64, E=4, topk=2, ep=1, etp=1)
+    good.put(s, A.TPU_V5E, A.Plan("comet", 1, 2), save=True)
+    blob = open(str(tmp_path / "good.json")).read()
+
+    # truncated mid-file (torn write without the atomic rename)
+    trunc = tmp_path / "trunc.json"
+    trunc.write_text(blob[:len(blob) // 2])
+    with pytest.warns(UserWarning, match="unreadable"):
+        cache = A.PlanCache(str(trunc))
+    assert cache.plans == {}
+
+    # outright garbage
+    garbage = tmp_path / "garbage.json"
+    garbage.write_text("\x00\xffnot json at all{{{")
+    with pytest.warns(UserWarning, match="unreadable"):
+        assert A.PlanCache(str(garbage)).plans == {}
+
+    # a future format version must not be silently misread
+    future = tmp_path / "future.json"
+    future.write_text('{"version": %d, "plans": {"k": {"impl": "comet"}}}'
+                      % (A.PLAN_CACHE_VERSION + 1))
+    with pytest.warns(UserWarning, match="version"):
+        assert A.PlanCache(str(future)).plans == {}
+
+    # one mangled entry is skipped; the healthy ones survive
+    import json
+    raw = json.loads(blob)
+    key = next(iter(raw["plans"]))
+    raw["plans"]["bad1"] = {"impl": "comet", "n_col_blocks": "not-an-int",
+                            "unknown_field": 1}
+    raw["plans"]["bad2"] = ["not", "a", "dict"]
+    mixed = tmp_path / "mixed.json"
+    mixed.write_text(json.dumps(raw))
+    with pytest.warns(UserWarning, match="malformed"):
+        cache = A.PlanCache(str(mixed))
+    assert key in cache.plans and len(cache.plans) == 1
+
+    # the empty caches stay usable: put + save + reload round-trips
+    cache = A.PlanCache(str(trunc))  # warns again; we only need the object
+    cache.put(s, A.TPU_V5E, A.Plan("comet", 1, 2), save=True)
+    assert A.PlanCache(str(trunc)).get(s, A.TPU_V5E).impl == "comet"
+
+
 def test_plan_override_escape_hatch(tmp_path):
     """plan_override pins the explicit knobs even with a cache configured."""
     cfg, mcfg, params, x = _problem()

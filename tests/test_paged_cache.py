@@ -11,7 +11,8 @@ import pytest
 
 from repro.configs.base import get_config
 from repro.models import attention as A
-from repro.serving import BlockAllocator, ServeEngine, pages_for
+from repro.serving import (AllocatorError, BlockAllocator, RejectedRequest,
+                           RejectReason, ServeEngine, pages_for)
 
 
 # ---------------------------------------------------------------------------
@@ -62,12 +63,53 @@ def test_over_budget_rejection():
     assert not al.can_admit(1)                         # pool exhausted
     with pytest.raises(ValueError):
         al.allocate(2, 4)
-    with pytest.raises(ValueError):
+    with pytest.raises(AllocatorError):
         al.allocate(0, 4)                              # slot already owns
     al.free_slot(1)
     assert al.can_admit(8)
-    assert al.free_slot(7) == 0                        # unknown slot: no-op
+    with pytest.raises(AllocatorError):
+        al.free_slot(7)                                # unknown slot raises
+    with pytest.raises(AllocatorError):
+        al.free_slot(1)                                # double free raises
+    al.check()                                         # nothing corrupted
     assert pages_for(0, 4) == 0 and pages_for(1, 4) == 1
+
+
+def test_allocator_randomized_invariant():
+    """Randomized alloc/free churn: after every mutation (including the
+    rejected ones) ``used + free == total`` holds, no page is owned twice,
+    and the null page never leaves the reserve."""
+    rng = np.random.default_rng(42)
+    al = BlockAllocator(n_pages=17, page_size=4, max_blocks=6)
+    total = al.cfg.n_pages - 1
+    live = set()
+    for _ in range(500):
+        if live and rng.random() < 0.45:
+            s = int(rng.choice(sorted(live)))
+            al.free_slot(s)
+            live.discard(s)
+        else:
+            s = int(rng.integers(0, 8))
+            toks = int(rng.integers(1, 30))
+            if s in live:
+                with pytest.raises(AllocatorError):
+                    al.allocate(s, toks)
+            elif al.can_admit(toks):
+                pages = al.allocate(s, toks)
+                assert 0 not in pages
+                live.add(s)
+            else:
+                with pytest.raises(ValueError):
+                    al.allocate(s, toks)
+        al.check()
+        assert al.used_pages + al.free_pages == total
+    # snapshot/restore round-trips the exact ownership state
+    state = al.snapshot_state()
+    al2 = BlockAllocator(17, 4, 6)
+    al2.restore_state(state)
+    assert al2.free_pages == al.free_pages
+    for s in live:
+        assert al2.owned(s) == al.owned(s)
 
 
 # ---------------------------------------------------------------------------
@@ -217,9 +259,11 @@ def test_submit_rejects_budget_beyond_pool_capacity():
     cfg = get_config("qwen2-0.5b-smoke")
     eng = ServeEngine(cfg, max_seq=32, batch_size=2, chunk=4, seed=0,
                       page_size=4, n_pages=5)       # 16-token pool capacity
-    with pytest.raises(AssertionError, match="pages"):
+    with pytest.raises(RejectedRequest) as ei:
         eng.submit(list(range(1, 21)), max_new=6)   # 26 toks <= max_seq,
-    assert not eng.queue                            # but needs 7 > 4 pages
+    assert ei.value.reason == RejectReason.OVER_CAPACITY  # needs 7 > 4 pages
+    assert ei.value.request.status.value == "rejected"
+    assert not eng.queue
     eng.submit([1, 2, 3], max_new=5)                # 2 pages: fine
     eng.run()
 

@@ -1,0 +1,375 @@
+"""Serving robustness: typed rejections, bounded queue + shedding,
+cancellation, deadlines (fake clock), NaN-row quarantine, deterministic
+fault injection, and exactly-once crash recovery (snapshot/restore/replay
+with zero lost and zero duplicated tokens vs the fault-free run)."""
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.serving import (FaultInjector, FaultPlan, InjectedFault,
+                           RejectedRequest, RejectReason, RequestStatus,
+                           ServeEngine)
+
+
+@pytest.fixture(scope="module")
+def params():
+    cfg = get_config("qwen2-0.5b-smoke")
+    eng = ServeEngine(cfg, max_seq=64, batch_size=2, seed=0, chunk=4)
+    return eng.params
+
+
+def make_engine(params, **kw):
+    cfg = get_config("qwen2-0.5b-smoke")
+    kw.setdefault("max_seq", 64)
+    kw.setdefault("batch_size", 2)
+    kw.setdefault("chunk", 4)
+    return ServeEngine(cfg, params=params, **kw)
+
+
+PROMPTS = [[3, 1, 4, 1, 5], [2, 7, 1], [9, 10, 11, 12], [6, 5]]
+
+
+def _tokens_by_rid(eng, rids):
+    return {rid: list(eng.finished[rid].tokens) for rid in rids}
+
+
+# ---------------------------------------------------------------------------
+# Typed rejections (the paths that used to assert-crash the engine)
+# ---------------------------------------------------------------------------
+
+
+def test_submit_rejections_typed_and_engine_survives(params):
+    eng = make_engine(params)
+    with pytest.raises(RejectedRequest) as ei:
+        eng.submit([], max_new=4)
+    assert ei.value.reason == RejectReason.EMPTY_PROMPT
+    assert ei.value.request.status == RequestStatus.REJECTED
+    with pytest.raises(RejectedRequest) as ei:
+        eng.submit([1, 2, 3], max_new=62)            # 3 + 62 > 64
+    assert ei.value.reason == RejectReason.TOO_LONG
+    assert not eng.queue and not eng.pending
+    # the engine is fully serviceable afterwards
+    res = eng.generate([[5, 6, 7]], max_new=3)
+    assert res.tokens.shape == (1, 3)
+
+
+def test_submit_over_capacity_paged(params):
+    eng = make_engine(params, max_seq=32, page_size=4, n_pages=5)
+    with pytest.raises(RejectedRequest) as ei:
+        eng.submit(list(range(1, 21)), max_new=6)    # 7 pages > 4 usable
+    assert ei.value.reason == RejectReason.OVER_CAPACITY
+    eng.generate([[1, 2, 3]], max_new=3)             # still serviceable
+
+
+def test_rejection_inside_step_does_not_trip_recovery(params):
+    """RejectedRequest must propagate to the caller untouched — it is a
+    client error, not an engine failure, so no recovery cycle runs."""
+    eng = make_engine(params, recover=True)
+    with pytest.raises(RejectedRequest):
+        eng.submit([], max_new=2)
+    assert eng.failures == 0 and eng.recoveries == 0
+
+
+# ---------------------------------------------------------------------------
+# Bounded queue + shedding
+# ---------------------------------------------------------------------------
+
+
+def test_bounded_queue_reject_policy(params):
+    eng = make_engine(params, max_queue=2)
+    eng.submit([1, 2], max_new=2)
+    eng.submit([3, 4], max_new=2)
+    with pytest.raises(RejectedRequest) as ei:
+        eng.submit([5, 6], max_new=2)
+    assert ei.value.reason == RejectReason.QUEUE_FULL
+    assert len(eng.queue) == 2 and eng.shed == 0
+    eng.run()
+    assert all(r.status == RequestStatus.OK for r in eng.finished.values())
+
+
+def test_bounded_queue_deadline_shed(params):
+    clock = FakeClock()
+    eng = make_engine(params, max_queue=2, shed_policy="deadline",
+                      clock=clock)
+    ra = eng.submit([1, 2], max_new=2, deadline_s=0.5)    # least slack
+    rb = eng.submit([3, 4], max_new=2, deadline_s=50.0)
+    rc = eng.submit([5, 6], max_new=2, deadline_s=50.0)   # sheds ra
+    assert eng.shed == 1
+    assert eng.finished[ra].status == RequestStatus.EXPIRED
+    assert [r.rid for r in eng.queue] == [rb, rc]
+    # a no-deadline queue never sheds: ties reject the newcomer instead
+    eng2 = make_engine(params, max_queue=1, shed_policy="deadline")
+    rd = eng2.submit([1, 2], max_new=2)
+    with pytest.raises(RejectedRequest):
+        eng2.submit([3, 4], max_new=2)
+    assert eng2.queue[0].rid == rd and eng2.shed == 0
+
+
+# ---------------------------------------------------------------------------
+# Cancellation
+# ---------------------------------------------------------------------------
+
+
+def test_cancel_queued_and_live(params):
+    eng = make_engine(params, batch_size=1, page_size=8)
+    ra = eng.submit(PROMPTS[0], max_new=8)
+    rb = eng.submit(PROMPTS[1], max_new=8)
+    eng.step()                                   # admits ra; rb queued
+    assert eng.live[0] and eng.slot_req[0].rid == ra
+    used_before = eng.alloc.used_pages
+    assert used_before > 0
+    assert eng.cancel(ra)                        # live cancel: slot + pages
+    assert not eng.live[0] and eng.slot_req[0] is None
+    assert eng.alloc.used_pages == 0
+    got = eng.finished[ra]
+    assert got.status == RequestStatus.CANCELLED
+    assert len(got.tokens) >= 1                  # partial tokens kept
+    assert eng.cancel(rb)                        # queued cancel
+    assert eng.finished[rb].status == RequestStatus.CANCELLED
+    assert not eng.cancel(ra)                    # already terminal
+    assert not eng.cancel(12345)                 # unknown rid
+    # freed capacity is immediately reusable
+    res = eng.generate([[7, 8, 9]], max_new=3)
+    assert res.tokens.shape == (1, 3)
+
+
+# ---------------------------------------------------------------------------
+# Deadlines (deterministic via injected clock)
+# ---------------------------------------------------------------------------
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_ttft_deadline_expires_queued(params):
+    clock = FakeClock()
+    eng = make_engine(params, batch_size=1, clock=clock)
+    ra = eng.submit(PROMPTS[0], max_new=4)               # takes the slot
+    rb = eng.submit(PROMPTS[1], max_new=4, ttft_deadline_s=1.0)
+    eng.step()
+    assert eng.live[0]
+    clock.t = 2.0                                        # rb is now late
+    eng.step()
+    assert eng.finished[rb].status == RequestStatus.EXPIRED
+    assert "ttft" in eng.finished[rb].error
+    assert eng.expired == 1
+    eng.run()
+    assert eng.finished[ra].status == RequestStatus.OK
+
+
+def test_total_deadline_expires_live(params):
+    clock = FakeClock()
+    eng = make_engine(params, clock=clock)
+    ra = eng.submit(PROMPTS[0], max_new=32, deadline_s=5.0)
+    eng.step()                                           # admit + token 0
+    assert eng.live.any()
+    clock.t = 6.0
+    eng.step()                                           # decode then expire
+    got = eng.finished[ra]
+    assert got.status == RequestStatus.EXPIRED
+    assert len(got.tokens) >= 1                          # partial kept
+    assert not eng.pending
+
+
+# ---------------------------------------------------------------------------
+# NaN quarantine
+# ---------------------------------------------------------------------------
+
+
+def test_nan_row_quarantined_neighbors_exact(params):
+    clean = make_engine(params)
+    ref = clean.generate(PROMPTS[:2], max_new=6)
+    plan = FaultPlan(nan_rows={3: 1})                 # poison 1 row @ step 3
+    eng = make_engine(params, faults=FaultInjector(plan))
+    rids = [eng.submit(p, max_new=6) for p in PROMPTS[:2]]
+    eng.run()
+    statuses = [eng.finished[r].status for r in rids]
+    assert statuses.count(RequestStatus.QUARANTINED) == 1
+    assert eng.quarantined == 1
+    ok_i = statuses.index(RequestStatus.OK)
+    bad_i = 1 - ok_i
+    # the surviving neighbour's stream is bit-identical to fault-free
+    assert eng.finished[rids[ok_i]].tokens == ref.tokens[ok_i].tolist()
+    # the quarantined one kept its pre-fault prefix of the clean stream
+    bad = eng.finished[rids[bad_i]].tokens
+    assert bad == ref.tokens[bad_i].tolist()[:len(bad)]
+    assert not eng.pending                            # engine drained clean
+
+
+# ---------------------------------------------------------------------------
+# Crash recovery: exactly-once
+# ---------------------------------------------------------------------------
+
+
+def _run_faulted(params, plan, tmp=None, n=4, max_new=6, paged=True,
+                 **kw):
+    emissions = []
+    eng = make_engine(
+        params, page_size=8 if paged else 0,
+        snapshot_dir=str(tmp) if tmp is not None else None,
+        snapshot_every=2, faults=FaultInjector(plan),
+        on_token=lambda rid, idx, tok: emissions.append((rid, idx, tok)),
+        **kw)
+    rids = [eng.submit(p, max_new=max_new) for p in PROMPTS[:n]]
+    eng.run()
+    return eng, rids, emissions
+
+
+def _assert_exactly_once(eng, rids, emissions):
+    """Zero lost, zero duplicated: every (rid, idx) emitted exactly once
+    and the emitted stream reassembles each request's token list."""
+    seen = {}
+    for rid, idx, tok in emissions:
+        assert (rid, idx) not in seen, f"duplicate emission {(rid, idx)}"
+        seen[(rid, idx)] = tok
+    for rid in rids:
+        toks = eng.finished[rid].tokens
+        got = [seen[(rid, i)] for i in range(len(toks))]  # KeyError = lost
+        assert got == toks
+
+
+def test_crash_recovery_exactly_once_with_snapshots(params, tmp_path):
+    clean = make_engine(params, page_size=8)
+    ref = clean.generate(PROMPTS, max_new=6)
+    plan = FaultPlan(crash_steps=(5,))
+    eng, rids, emissions = _run_faulted(params, plan, tmp=tmp_path)
+    assert eng.failures == 1 and eng.recoveries == 1
+    for i, rid in enumerate(rids):
+        got = eng.finished[rid]
+        assert got.status == RequestStatus.OK
+        assert got.tokens == ref.tokens[i].tolist(), i   # bit-identical
+    _assert_exactly_once(eng, rids, emissions)
+    assert eng.free_pages == eng.n_pages - 1             # pages all home
+
+
+def test_crash_recovery_without_snapshot_replays_from_scratch(params):
+    """recover=True with no snapshot_dir: reset to the initial state and
+    replay the full event log — slower, still exactly-once."""
+    clean = make_engine(params)
+    ref = clean.generate(PROMPTS[:2], max_new=5)
+    plan = FaultPlan(crash_steps=(4,))
+    eng, rids, emissions = _run_faulted(params, plan, paged=False,
+                                        n=2, max_new=5, recover=True)
+    assert eng.recoveries == 1
+    for i, rid in enumerate(rids):
+        assert eng.finished[rid].tokens == ref.tokens[i].tolist(), i
+    _assert_exactly_once(eng, rids, emissions)
+
+
+def test_unrecoverable_crash_fails_all_terminally(params):
+    """No recovery configured: the fault propagates, but every request
+    still reaches a terminal status (failed) — nobody is left hanging."""
+    eng = make_engine(params, faults=FaultInjector(
+        FaultPlan(crash_steps=(2,))))
+    rids = [eng.submit(p, max_new=4) for p in PROMPTS[:2]]
+    with pytest.raises(InjectedFault):
+        eng.run()
+    for rid in rids:
+        assert eng.finished[rid].status == RequestStatus.FAILED
+    assert not eng.pending
+
+
+def test_max_restarts_caps_consecutive_failures(params, tmp_path):
+    """A crash on every step exhausts max_restarts and re-raises; requests
+    end terminally failed."""
+    plan = FaultPlan(crash_steps=tuple(range(1, 50)))
+    eng = make_engine(params, snapshot_dir=str(tmp_path), max_restarts=2,
+                      faults=FaultInjector(plan))
+    rid = eng.submit(PROMPTS[0], max_new=4)
+    with pytest.raises(InjectedFault):
+        eng.run()
+    assert eng.failures == 3                       # 2 recovered + 1 fatal
+    assert eng.recoveries == 2
+    assert eng.finished[rid].status == RequestStatus.FAILED
+
+
+def test_manual_snapshot_restore_roundtrip(params, tmp_path):
+    eng = make_engine(params, page_size=8, snapshot_dir=str(tmp_path),
+                      snapshot_every=0)            # manual snapshots only
+    rid = eng.submit(PROMPTS[0], max_new=8)
+    eng.step()
+    eng.step()
+    eng.snapshot()
+    toks_at_snap = list(eng.finished.get(rid, eng.slot_req[0]).tokens)
+    pos_at_snap = eng.pos.copy()
+    eng.step()
+    eng.step()
+    eng.restore()
+    assert eng.slot_req[0].rid == rid
+    assert eng.slot_req[0].tokens == toks_at_snap
+    np.testing.assert_array_equal(eng.pos, pos_at_snap)
+    eng.alloc.check()
+    eng.run()
+    assert eng.finished[rid].status == RequestStatus.OK
+
+
+# ---------------------------------------------------------------------------
+# Latency spikes + page pressure
+# ---------------------------------------------------------------------------
+
+
+def test_latency_spike_flags_straggler(params):
+    slept = []
+    inj = FaultInjector(FaultPlan(latency_s={4: 0.5}), sleep=slept.append)
+    eng = make_engine(params, faults=inj)
+    # warm the EWMA with real steps, then check the spike is recorded
+    eng.generate(PROMPTS[:2], max_new=6)
+    assert inj.counts["latency"] == 1 and slept == [0.5]
+
+
+def test_page_squeeze_stalls_then_admits(params):
+    clean = make_engine(params, max_seq=32, page_size=4, n_pages=9)
+    ref = clean.generate(PROMPTS[:2], max_new=4)
+    # from step 1, hold 6 of the 8 usable pages for 3 steps: admission of
+    # the 2nd request (3 pages) must stall, then proceed — and the final
+    # streams are still bit-identical to fault-free
+    inj = FaultInjector(FaultPlan(page_squeeze={1: (6, 3)}))
+    eng = make_engine(params, max_seq=32, page_size=4, n_pages=9,
+                      faults=inj)
+    rids = [eng.submit(p, max_new=4) for p in PROMPTS[:2]]
+    eng.step()
+    assert inj.counts["page_squeeze"] == 1
+    assert len(eng.queue) >= 1                      # someone had to wait
+    eng.run()
+    for i, rid in enumerate(rids):
+        assert eng.finished[rid].status == RequestStatus.OK
+        assert eng.finished[rid].tokens == ref.tokens[i].tolist(), i
+    assert eng.free_pages == eng.n_pages - 1        # squeezes released
+
+
+# ---------------------------------------------------------------------------
+# Chaos traces (the acceptance contract)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_chaos_trace_exactly_once(params, tmp_path, seed):
+    """Poisson fault schedule (crashes + NaN rows + latency spikes + page
+    squeezes) over a multi-request trace: every request reaches a terminal
+    status, non-quarantined streams are bit-identical to the fault-free
+    run, and emission is exactly-once."""
+    clean = make_engine(params, page_size=8)
+    ref = clean.generate(PROMPTS, max_new=8)
+    plan = FaultPlan.poisson(seed, horizon=64, crash_rate=0.08,
+                             nan_rate=0.05, spike_rate=0.1, spike_s=0.0,
+                             squeeze_rate=0.1, squeeze_hold=2)
+    eng, rids, emissions = _run_faulted(params, plan, tmp=tmp_path / "s",
+                                        max_new=8, max_restarts=10)
+    for i, rid in enumerate(rids):
+        got = eng.finished[rid]
+        assert got.status in (RequestStatus.OK, RequestStatus.QUARANTINED)
+        if got.status == RequestStatus.OK:
+            assert got.tokens == ref.tokens[i].tolist(), (seed, i)
+        else:                                   # pre-fault prefix is clean
+            assert got.tokens == ref.tokens[i].tolist()[:len(got.tokens)]
+    _assert_exactly_once(eng, rids, emissions)
+    eng.faults.release_all(eng)       # squeezes may outlive the drain
+    assert eng.free_pages == eng.n_pages - 1
+    # every crash that actually fired was recovered from
+    assert eng.failures == eng.recoveries == eng.faults.counts["crash"]

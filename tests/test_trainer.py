@@ -107,6 +107,56 @@ def test_elastic_rescale_cpu_roundtrip():
             np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
 
 
+def test_nan_guard_skips_update_in_graph():
+    """A poisoned state makes loss/grad_norm non-finite; the jitted step
+    must refuse the update IN-GRAPH (donated state — host-side refusal is
+    impossible): metrics say skipped and the step counter holds still."""
+    with tempfile.TemporaryDirectory() as t:
+        tr = make_trainer(t)
+        state = tr.init_state()
+        batch = tr._device_batch(tr.data.batch_at(0))
+        state, metrics = tr.built["jit"](state, batch)
+        assert int(metrics["skipped"]) == 0 and int(state["step"]) == 1
+        # poison one param leaf -> NaN loss everywhere downstream
+        leaves, treedef = jax.tree_util.tree_flatten(state["params"])
+        leaves[0] = leaves[0] * jax.numpy.nan
+        state["params"] = jax.tree_util.tree_unflatten(treedef, leaves)
+        batch = tr._device_batch(tr.data.batch_at(1))
+        state2, metrics = tr.built["jit"](state, batch)
+        assert int(metrics["skipped"]) == 1
+        assert int(state2["step"]) == 1          # update refused
+
+
+def test_nan_limit_escalates_to_checkpoint_replay():
+    """Persistent NaNs (poisoned params — skipping can't heal those) must
+    escalate after nan_limit consecutive skips to the normal restore/replay
+    path, and the run then completes with a finite trajectory."""
+    with tempfile.TemporaryDirectory() as t1, \
+            tempfile.TemporaryDirectory() as t2:
+        clean = make_trainer(t1).run(6)
+
+        fired = {"done": False}
+
+        def poison(step, state):
+            if step == 3 and not fired["done"]:
+                fired["done"] = True
+                bad = jax.tree_util.tree_map(
+                    lambda x: x * jax.numpy.nan, state["params"])
+                return {"params": bad, "opt": state["opt"],
+                        "step": state["step"]}
+            return state
+
+        tr = make_trainer(t2, nan_limit=2)
+        tr.fault_hook = poison
+        out = tr.run(6)
+        assert out["restarts"] == 1
+        assert out["nan_skips"] == 3             # nan_limit + 1 before raise
+        assert np.isfinite(losses(out)[-1])
+        # post-recovery trajectory equals the fault-free run
+        np.testing.assert_allclose(losses(clean)[-1], losses(out)[-1],
+                                   rtol=1e-6)
+
+
 def test_loss_decreases_over_training():
     from repro.optim.adamw import AdamW
     with tempfile.TemporaryDirectory() as t:

@@ -1,0 +1,23 @@
+"""comet-verify: the repo's static-analysis layer (PR 8).
+
+Three passes over the things tests cannot enumerate:
+
+* ``schedule_check`` — the schedule-IR race detector. Re-derives
+  RAW/WAR/WAW hazards, ring send/recv pairing and wgrad-flush legality
+  from scratch (never trusting the deps the scheduler was handed) and
+  checks any proposed emission order against them.
+* ``kernel_check`` — the Pallas resource checker. Computes the VMEM
+  footprint each kernel's BlockSpecs imply, evaluates index maps over
+  the full grid (out-of-bounds offsets, uncovered output tiles) and
+  lints accumulation dtypes (bf16 inputs must accumulate in fp32).
+* ``conventions`` — the AST convention linter enforcing the ROADMAP's
+  durable rules: mesh entry points only via ``parallel/compat.py``, no
+  mutable module globals on the hot path, no bare asserts in serving
+  code, knob legalization only through the shared helpers.
+
+All passes speak :class:`Diagnostic` and are driven by ``tools/verify.py``.
+"""
+from repro.analysis.verify.diagnostics import (Diagnostic, Report,
+                                               parse_ignores)
+
+__all__ = ["Diagnostic", "Report", "parse_ignores"]

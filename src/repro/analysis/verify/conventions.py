@@ -1,0 +1,229 @@
+"""Pass 3 — hot-path convention linter (AST-based).
+
+Enforces the ROADMAP's durable conventions, the ones that decay silently
+because nothing crashes when they're broken:
+
+* ``mesh-entry`` — mesh/SPMD entry points (``shard_map``, ``use_mesh``,
+  ``set_mesh``, ``make_mesh``, the ``Mesh(...)`` constructor) may only be
+  touched in ``parallel/compat.py``; everything else routes through the
+  compat shims so a JAX version bump is a one-file change. Importing the
+  ``Mesh`` *type* for annotations is fine — constructing or activating
+  one is not.
+* ``mutable-global`` — no module-level mutable accumulators (``{}``,
+  ``[]``, ``dict()``, …) and no ``global`` statements in the hot-path
+  packages (``core/``, ``kernels/``, ``models/``, ``serving/``): they
+  leak state across jit traces and tests. Use ``functools.lru_cache`` or
+  pass state explicitly. Non-empty literal tables are constants and
+  allowed.
+* ``serving-assert`` — no ``assert`` in ``serving/``: the serving loop is
+  run with ``python -O`` in some deployments and an assert-guarded
+  invariant silently vanishes. Raise a real exception.
+* ``knob-legalize`` — no inline ``% n_col`` / ``% ring_group``
+  divisibility math outside ``core/adaptive.py``; plan knobs round-trip
+  through ``legalize_n_col`` / ``legalize_ring_group`` / ``legalize_plan``
+  so every consumer agrees on the clamping rules.
+
+Suppression: ``# verify: ignore[rule] -- why`` on the offending line
+(the justification is mandatory; see ``diagnostics.apply_ignores``).
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import List, Optional
+
+from repro.analysis.verify.diagnostics import Diagnostic, apply_ignores
+
+_PASS = "conventions"
+
+COMPAT_FILE = "parallel/compat.py"
+HOT_DIRS = ("core/", "kernels/", "models/", "serving/")
+SERVING_DIRS = ("serving/",)
+
+_MESH_ENTRY_NAMES = {"shard_map", "use_mesh", "set_mesh", "make_mesh"}
+_MESH_MODULES = ("jax", "jax.sharding", "jax.experimental",
+                 "jax.experimental.shard_map", "jax.experimental.mesh_utils")
+_KNOB_FRAGMENTS = ("n_col", "ring_group")
+_MUTABLE_CALLS = {"dict", "list", "set", "defaultdict", "OrderedDict",
+                  "deque", "Counter"}
+
+
+def _d(rule: str, path: str, line: int, msg: str,
+       hint: str = "") -> Diagnostic:
+    return Diagnostic(_PASS, rule, "error", f"{path}:{line}", msg, hint)
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """'jax.sharding.use_mesh' for an Attribute/Name chain, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _is_empty_mutable(node: ast.AST) -> bool:
+    if isinstance(node, (ast.Dict, ast.List, ast.Set)) and not getattr(
+            node, "keys", getattr(node, "elts", None)):
+        return True
+    if isinstance(node, ast.Call) and not node.args and not node.keywords:
+        name = _dotted(node.func) or ""
+        return name.split(".")[-1] in _MUTABLE_CALLS
+    return False
+
+
+class _Linter(ast.NodeVisitor):
+    def __init__(self, relpath: str):
+        self.relpath = relpath
+        self.diags: List[Diagnostic] = []
+        self.is_compat = relpath.endswith(COMPAT_FILE)
+        self.is_hot = any(f"/{d}" in f"/{relpath}" for d in HOT_DIRS)
+        self.is_serving = any(f"/{d}" in f"/{relpath}"
+                              for d in SERVING_DIRS)
+        # core/adaptive.py OWNS legalization; analysis/verify/ CHECKS it —
+        # both must be allowed to do the divisibility math everyone else
+        # delegates
+        self.is_adaptive = (relpath.endswith("core/adaptive.py")
+                            or "analysis/verify/" in relpath)
+        self._depth = 0                      # >0 inside a def/class
+
+    # -- mesh-entry ---------------------------------------------------
+
+    def visit_ImportFrom(self, node: ast.ImportFrom):
+        mod = node.module or ""
+        if not self.is_compat and mod.startswith("jax"):
+            if "shard_map" in mod:
+                self.diags.append(_d(
+                    "mesh-entry", self.relpath, node.lineno,
+                    f"import from '{mod}' outside {COMPAT_FILE}",
+                    hint="use repro.parallel.compat.shard_map"))
+            else:
+                for a in node.names:
+                    if a.name in _MESH_ENTRY_NAMES:
+                        self.diags.append(_d(
+                            "mesh-entry", self.relpath, node.lineno,
+                            f"'{a.name}' imported from '{mod}' outside "
+                            f"{COMPAT_FILE}",
+                            hint=f"use repro.parallel.compat.{a.name}"))
+        self.generic_visit(node)
+
+    def visit_Attribute(self, node: ast.Attribute):
+        if not self.is_compat:
+            name = _dotted(node)
+            if name and name.startswith("jax") \
+                    and name.split(".")[-1] in _MESH_ENTRY_NAMES:
+                self.diags.append(_d(
+                    "mesh-entry", self.relpath, node.lineno,
+                    f"'{name}' referenced outside {COMPAT_FILE}",
+                    hint="route through repro.parallel.compat"))
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call):
+        if not self.is_compat:
+            name = _dotted(node.func) or ""
+            if name.split(".")[-1] == "Mesh":
+                self.diags.append(_d(
+                    "mesh-entry", self.relpath, node.lineno,
+                    f"direct Mesh construction ('{name}(...)') outside "
+                    f"{COMPAT_FILE}",
+                    hint="use repro.parallel.compat.make_mesh"))
+        self.generic_visit(node)
+
+    # -- mutable-global -----------------------------------------------
+
+    def _check_module_assign(self, node, value):
+        if self.is_hot and self._depth == 0 and value is not None \
+                and _is_empty_mutable(value):
+            self.diags.append(_d(
+                "mutable-global", self.relpath, node.lineno,
+                "module-level mutable accumulator in a hot-path module",
+                hint="use functools.lru_cache or thread state through "
+                     "call arguments"))
+
+    def visit_Assign(self, node: ast.Assign):
+        self._check_module_assign(node, node.value)
+        self.generic_visit(node)
+
+    def visit_AnnAssign(self, node: ast.AnnAssign):
+        self._check_module_assign(node, node.value)
+        self.generic_visit(node)
+
+    def visit_Global(self, node: ast.Global):
+        if self.is_hot:
+            self.diags.append(_d(
+                "mutable-global", self.relpath, node.lineno,
+                f"'global {', '.join(node.names)}' in a hot-path module",
+                hint="module globals leak across jit traces; use "
+                     "functools.lru_cache or explicit state"))
+        self.generic_visit(node)
+
+    # -- serving-assert -----------------------------------------------
+
+    def visit_Assert(self, node: ast.Assert):
+        if self.is_serving:
+            self.diags.append(_d(
+                "serving-assert", self.relpath, node.lineno,
+                "bare assert in serving code (stripped under python -O)",
+                hint="raise ValueError/RuntimeError so the invariant "
+                     "survives optimized runs"))
+        self.generic_visit(node)
+
+    # -- knob-legalize ------------------------------------------------
+
+    def visit_BinOp(self, node: ast.BinOp):
+        if not self.is_adaptive and isinstance(node.op, ast.Mod):
+            for side in (node.left, node.right):
+                name = _dotted(side) or ""
+                if any(f in name for f in _KNOB_FRAGMENTS):
+                    self.diags.append(_d(
+                        "knob-legalize", self.relpath, node.lineno,
+                        f"inline divisibility math on '{name}' outside "
+                        "core/adaptive.py",
+                        hint="call legalize_n_col/legalize_ring_group/"
+                             "legalize_plan instead"))
+                    break
+        self.generic_visit(node)
+
+    # -- scope tracking -----------------------------------------------
+
+    def _scoped(self, node):
+        self._depth += 1
+        self.generic_visit(node)
+        self._depth -= 1
+
+    visit_FunctionDef = _scoped
+    visit_AsyncFunctionDef = _scoped
+    visit_ClassDef = _scoped
+    visit_Lambda = _scoped
+
+
+def lint_source(relpath: str, source: str) -> List[Diagnostic]:
+    """Lint one module; returns diagnostics surviving the source's
+    ``# verify: ignore[...]`` comments (plus ``bad-ignore`` findings)."""
+    try:
+        tree = ast.parse(source, filename=relpath)
+    except SyntaxError as e:
+        return [_d("syntax-error", relpath, e.lineno or 0,
+                   f"cannot parse: {e.msg}")]
+    linter = _Linter(relpath)
+    linter.visit(tree)
+    return apply_ignores(linter.diags, relpath, source, _PASS)
+
+
+def lint_tree(root: str) -> List[Diagnostic]:
+    """Lint every ``.py`` under ``root`` (the repo's ``src/repro``)."""
+    diags: List[Diagnostic] = []
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = sorted(d for d in dirnames
+                             if d not in ("__pycache__",))
+        for fn in sorted(filenames):
+            if not fn.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fn)
+            rel = os.path.relpath(path, root).replace(os.sep, "/")
+            with open(path, "r", encoding="utf-8") as f:
+                diags.extend(lint_source(rel, f.read()))
+    return diags

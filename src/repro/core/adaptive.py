@@ -24,9 +24,11 @@ Two layers, same as the paper:
 from __future__ import annotations
 
 import dataclasses
+import functools
 import json
 import math
 import os
+import re
 from typing import Callable, Dict, Iterable, Optional, Tuple
 
 # ---------------------------------------------------------------------------
@@ -43,6 +45,9 @@ class Hardware:
     links: int = 1               # usable links per chip for the ring
     gemm_eff: float = 0.7        # sustained fraction of peak for big GEMMs
     small_tile_penalty: float = 0.55   # efficiency when M-tile < 128 rows
+    # per-core VMEM budget for a Pallas kernel's working set (the verify
+    # pass and candidate_plans both gate tilings on this)
+    vmem_bytes: int = 32 * 2**20
 
 
 TPU_V5E = Hardware("tpu_v5e", flops=197e12, hbm_bw=819e9, link_bw=50e9,
@@ -321,6 +326,45 @@ class Plan:
                                  f"is not {ty}")
         return plan
 
+    def validate(self, d_model: Optional[int] = None,
+                 ep: Optional[int] = None) -> list:
+        """Static legality of the knob settings — everything checkable
+        without hardware. Returns a list of problem strings (empty =
+        legal). With ``d_model``/``ep`` supplied, also requires the knobs
+        to be PRE-legalized (v3+ caches store legalized knobs; an entry
+        that re-legalizes differently would execute different geometry
+        than the tuner ranked)."""
+        bad = []
+        if self.impl not in TRANSPORTS:
+            bad.append(f"impl {self.impl!r} not in {TRANSPORTS}")
+        if not 1 <= self.n_col_blocks <= MAX_COL_BLOCKS:
+            bad.append(f"n_col_blocks {self.n_col_blocks} outside "
+                       f"[1, {MAX_COL_BLOCKS}]")
+        if self.ring_group < 1:
+            bad.append(f"ring_group {self.ring_group} < 1")
+        if self.gemm_impl not in ("", "xla", "pallas", "pallas_fused"):
+            bad.append(f"unknown gemm_impl {self.gemm_impl!r}")
+        if self.phase not in PLAN_PHASES:
+            bad.append(f"phase {self.phase!r} not in {PLAN_PHASES}")
+        if self.schedule not in ("", "overlap"):
+            bad.append(f"unknown schedule {self.schedule!r}")
+        if self.n_slices < 1:
+            bad.append(f"n_slices {self.n_slices} < 1")
+        if self.schedule == "" and self.n_slices != 1:
+            bad.append("per-layer schedule with n_slices != 1")
+        if self.schedule == "overlap" and (self.n_slices < 2
+                                           or self.impl != "comet"):
+            bad.append("overlap schedule requires comet with >= 2 slices")
+        if not bad and d_model is not None and ep is not None:
+            lg = legalize_plan(self, d_model, ep)
+            if (lg.n_col_blocks, lg.ring_group) != (self.n_col_blocks,
+                                                    self.ring_group):
+                bad.append(
+                    f"knobs ({self.n_col_blocks}, {self.ring_group}) not "
+                    f"legal for d_model={d_model}, ep={ep} (legalize to "
+                    f"({lg.n_col_blocks}, {lg.ring_group}))")
+        return bad
+
     def apply(self, mcfg):
         """Return ``mcfg`` running this plan's schedule. Sets
         ``plan_override`` so nested calls do not re-resolve the plan."""
@@ -342,6 +386,17 @@ def plan_shape(mcfg, d_model: int, tokens_local: int, ep: int,
     return MoEShape(M=tokens_local, N=wire or d_model,
                     K=mcfg.d_expert // max(1, etp), E=mcfg.num_experts,
                     topk=mcfg.top_k, ep=ep, etp=etp)
+
+
+_KEY_GEOM_RE = re.compile(r":N(\d+):.*:ep(\d+):")
+
+
+def _key_geometry(key: str) -> Tuple[Optional[int], Optional[int]]:
+    """(d_model, ep) parsed from a cache key, (None, None) if the key is
+    not in the canonical format — validation then skips the legality-vs-
+    geometry part and checks only the static ranges."""
+    m = _KEY_GEOM_RE.search(key)
+    return (int(m.group(1)), max(1, int(m.group(2)))) if m else (None, None)
 
 
 class PlanCache:
@@ -388,9 +443,28 @@ class PlanCache:
                 bad += 1
                 continue
             try:
-                self.plans[k] = Plan.from_json(v)
+                plan = Plan.from_json(v)
             except (TypeError, ValueError, KeyError):
                 bad += 1        # one mangled entry must not drop the rest
+                continue
+            geom = _key_geometry(k)
+            problems = plan.validate(*geom)
+            if problems and not plan.validate():
+                # knobs are statically fine but not pre-legalized (a
+                # hand-written or pre-v3 entry): resolve to the executable
+                # schedule the transport would run, same as resolve-time
+                # legalization always has
+                plan = legalize_plan(plan, *geom)
+                problems = plan.validate(*geom)
+            if problems:
+                # an illegal entry (hand-edited, or written by a broken
+                # tuner) would execute geometry nobody ranked — skip it
+                warnings.warn(f"plan cache {path!r}: entry {k!r} illegal "
+                              f"({'; '.join(problems)}); skipped",
+                              stacklevel=2)
+                bad += 1
+                continue
+            self.plans[k] = plan
         if bad:
             warnings.warn(f"plan cache {path!r}: skipped {bad} malformed "
                           f"entr{'y' if bad == 1 else 'ies'}", stacklevel=2)
@@ -417,6 +491,11 @@ class PlanCache:
 
     def put(self, s: MoEShape, hw: Hardware, plan: Plan, save: bool = True,
             phase: str = "train"):
+        problems = plan.validate(s.N, max(1, s.ep))
+        if problems:
+            raise ValueError(f"refusing to cache illegal plan for "
+                             f"{self.key(s, hw, phase)}: "
+                             f"{'; '.join(problems)}")
         self.plans[self.key(s, hw, phase)] = plan
         if save and self.path:
             self.save()
@@ -426,7 +505,8 @@ def candidate_plans(s: MoEShape, max_col_blocks: int = 8,
                     max_ring_group: int = 4,
                     gemm_impls: Tuple[str, ...] = ("xla", "pallas_fused"),
                     include_bcast: bool = True,
-                    include_graph: bool = False) -> Iterable[Plan]:
+                    include_graph: bool = False,
+                    hw: Optional[Hardware] = None) -> Iterable[Plan]:
     """The search space: every transport with its legal knob settings.
 
     The default backend set omits ``"pallas"`` — the analytical model rates
@@ -441,24 +521,39 @@ def candidate_plans(s: MoEShape, max_col_blocks: int = 8,
     (n_slices=1 has no cross-layer freedom — attn_{i+1} truly depends on
     combine_i — so it is never a distinct candidate). These rank on the
     two-block graph model (``modeled_graph_step_time``) against the
-    per-layer candidates."""
+    per-layer candidates.
+
+    ``hw`` (default TPU_V5E) gates Pallas candidates on its VMEM budget:
+    a tiling whose double-buffered working set cannot fit is rejected
+    HERE, statically, so the tuner never ranks — and the cache never
+    persists — a plan that would fault at trace time. A Hardware with
+    ``vmem_bytes=0`` disables the gate (the verify pass uses this to
+    test the filter itself)."""
+    hw = TPU_V5E if hw is None else hw
+    from repro.analysis.verify.kernel_check import plan_vmem_ok
     n_cols = [n for n in range(1, max_col_blocks + 1)
               if s.N % n == 0 and s.N // n >= 128] or [1]
     rings = [g for g in range(1, min(max_ring_group, s.ep) + 1)
              if s.ep % g == 0] or [1]
     for gi in gemm_impls:
-        yield Plan("naive", 1, 1, gi)
-        yield Plan("coarse", 1, 1, gi)
+        for p in (Plan("naive", 1, 1, gi), Plan("coarse", 1, 1, gi)):
+            if plan_vmem_ok(s, p, hw):
+                yield p
         for rg in rings:
             for n_col in n_cols:
                 for fc in (False, True):
-                    yield Plan("comet", rg, n_col, gi, fc)
+                    p = Plan("comet", rg, n_col, gi, fc)
+                    if not plan_vmem_ok(s, p, hw):
+                        continue
+                    yield p
                     if include_graph:
                         for ns in (2, 4):
                             yield Plan("comet", rg, n_col, gi, fc,
                                        schedule="overlap", n_slices=ns)
         if include_bcast:
-            yield Plan("bcast", 1, 1, gi)
+            p = Plan("bcast", 1, 1, gi)
+            if plan_vmem_ok(s, p, hw):
+                yield p
 
 
 def _weight_read_time(hw: Hardware, s: MoEShape, reads: float) -> float:
@@ -853,7 +948,7 @@ def tune_plan(s: MoEShape, hw: Hardware, cache: Optional[PlanCache] = None,
         if hit is not None:
             return hit
     cands = list(candidates) if candidates is not None \
-        else list(candidate_plans(s))
+        else list(candidate_plans(s, hw=hw))
     # legalize BEFORE ranking so the knobs measured are the knobs that run,
     # then dedupe (legalization can collapse distinct candidates)
     seen = set()
@@ -956,24 +1051,23 @@ def make_timing_measure(cfg, mcfg, params, x, ctx, iters: int = 3,
 # Plan resolution (moe_layer entry)
 # ---------------------------------------------------------------------------
 
-_LOADED_CACHES: Dict[str, Tuple[float, PlanCache]] = {}
+@functools.lru_cache(maxsize=64)
+def _plan_cache_at(path: str, mtime: float) -> PlanCache:
+    pc = PlanCache(path if mtime >= 0 else None)
+    pc.path = path
+    return pc
 
 
 def load_plan_cache(path: str) -> PlanCache:
     """mtime-memoized cache load; a missing file yields an empty cache (the
     analytical model then supplies plans), and an external rewrite of the
-    file is picked up on the next lookup."""
+    file is picked up on the next lookup (the mtime is part of the memo
+    key, so a stale entry is simply never hit again)."""
     try:
         mtime = os.path.getmtime(path)
     except OSError:
         mtime = -1.0
-    ent = _LOADED_CACHES.get(path)
-    if ent is not None and ent[0] == mtime:
-        return ent[1]
-    pc = PlanCache(path if mtime >= 0 else None)
-    pc.path = path
-    _LOADED_CACHES[path] = (mtime, pc)
-    return pc
+    return _plan_cache_at(path, mtime)
 
 
 def plan_lookup_enabled(mcfg) -> bool:

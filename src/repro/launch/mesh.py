@@ -10,7 +10,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     try:
-        return jax.make_mesh(shape, axes,
-                             axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
-    except (TypeError, AttributeError):  # older jax without axis_types kw
-        return compat.make_mesh(shape, axes)
+        axis_types = (jax.sharding.AxisType.Auto,) * len(axes)
+    except AttributeError:      # pre-AxisType jax
+        axis_types = None
+    return compat.make_mesh(shape, axes, axis_types=axis_types)

@@ -7,6 +7,7 @@ the 94-layer dry-runs compilable.
 from __future__ import annotations
 
 import math
+import os
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -218,7 +219,16 @@ def forward_scheduled(cfg, params, batch, ctx: AxisCtx = AxisCtx()):
                                  enc_out=enc_out, return_cache=False,
                                  mask=mask, block=i, x_in=f"x{i}",
                                  x_out=f"x{i + 1}")
+    program = segs
     segs = exec_order(segs, cfg.block_schedule)
+    if os.environ.get("REPRO_VERIFY_SCHEDULE", "1") != "0":
+        # trace-time race detector: re-derive RAW/WAR/WAW hazards from the
+        # segments' declared reads/writes (NOT the deps the scheduler
+        # used) and refuse any order that violates one. Pure Python over
+        # a few hundred segments — costs nothing against the jit trace.
+        from repro.analysis.verify.schedule_check import \
+            assert_exec_order_safe
+        assert_exec_order_safe(program, segs)
     env = B.run_segments(segs, {"x0": h})
     aux = jnp.zeros((), jnp.float32)
     for i in range(cfg.n_layers):

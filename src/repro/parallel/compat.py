@@ -76,10 +76,21 @@ def _restore_mesh_on_exit(prev):
 
 
 def make_mesh(shape: Sequence[int], axes: Sequence[str],
-              devices: Optional[Sequence] = None) -> Mesh:
-    """Build a device mesh of ``shape`` with named ``axes``."""
+              devices: Optional[Sequence] = None,
+              axis_types: Optional[Sequence] = None) -> Mesh:
+    """Build a device mesh of ``shape`` with named ``axes``.
+
+    ``axis_types`` (jax.sharding.AxisType entries, 0.6+) is forwarded when
+    this JAX accepts it and silently dropped otherwise — callers state
+    intent once and stay version-portable."""
     shape, axes = tuple(shape), tuple(axes)
     if devices is None and hasattr(jax, "make_mesh"):
+        if axis_types is not None:
+            try:
+                return jax.make_mesh(shape, axes,
+                                     axis_types=tuple(axis_types))
+            except TypeError:   # older jax without the axis_types kwarg
+                pass
         return jax.make_mesh(shape, axes)
     import numpy as np
     devs = np.asarray(devices if devices is not None else jax.devices())

@@ -78,8 +78,13 @@ class BlockAllocator:
     """
 
     def __init__(self, n_pages: int, page_size: int, max_blocks: int):
-        assert n_pages >= 2, "need at least the null page + one real page"
-        assert page_size >= 1 and max_blocks >= 1
+        # real exceptions, not asserts: the serving loop must keep these
+        # invariants even under python -O
+        if n_pages < 2:
+            raise ValueError("need at least the null page + one real page")
+        if page_size < 1 or max_blocks < 1:
+            raise ValueError(f"page_size={page_size}, "
+                             f"max_blocks={max_blocks} must be >= 1")
         self.cfg = PagedCacheConfig(n_pages, page_size, max_blocks)
         # page 0 reserved as the null page
         self._free: List[int] = list(range(n_pages - 1, 0, -1))

@@ -88,6 +88,39 @@ def test_wgrad_flush_floats_freely():
 
 
 @pytest.mark.parametrize("training", [False, True])
+@pytest.mark.parametrize("ns", [1, 2])
+def test_race_detector_clean_on_lowered_graphs(training, ns):
+    """PR 8's independent hazard re-derivation (analysis/verify): every
+    overlap order the scheduler emits must satisfy the STRUCTURALLY
+    re-derived ring rules — deps are never consulted, so a lowering bug
+    and a scheduler bug cannot cancel out."""
+    from repro.analysis.verify import schedule_check as V
+    plan = A.legalize_plan(PLAN, MIXTRAL.N, MIXTRAL.ep)
+    diags = V.check_lowered(HW, MIXTRAL, plan, d_model=MIXTRAL.N,
+                            n_blocks=3, n_slices=ns, training=training)
+    assert diags == [], "\n".join(str(d) for d in diags)
+
+
+def test_race_detector_guards_scheduled_execution(monkeypatch):
+    """forward_scheduled runs the race detector at trace time by default
+    (REPRO_VERIFY_SCHEDULE=0 opts out): a corrupted emission order must
+    be refused before any segment is interpreted."""
+    cfg, params, batch = _arch_setup("qwen2-0.5b-smoke")
+    cfg = dataclasses.replace(cfg, block_schedule="overlap")
+    real = SCH.exec_order
+
+    def corrupt(segs, mode):
+        out = list(real(segs, mode))
+        out[0], out[-1] = out[-1], out[0]
+        return out
+
+    monkeypatch.delenv("REPRO_VERIFY_SCHEDULE", raising=False)
+    monkeypatch.setattr(SCH, "exec_order", corrupt)
+    with pytest.raises(RuntimeError, match="hazard"):
+        lm.forward_scheduled(cfg, params, batch)
+
+
+@pytest.mark.parametrize("training", [False, True])
 def test_scheduled_no_worse_and_barriers_no_better(training):
     g = SCH.lower_model_graph(HW, MIXTRAL, PLAN, d_model=MIXTRAL.N,
                               n_blocks=2, n_slices=2, training=training)

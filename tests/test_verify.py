@@ -1,0 +1,597 @@
+"""comet-verify: clean-tree runs, seeded mutants, and the VMEM property.
+
+Structure:
+
+* CLEAN — every pass over the real tree / real lowerings must produce
+  ZERO diagnostics (the zero-suppression baseline the PR establishes).
+* MUTANTS — a seeded harness corrupts orders, kernel models and source
+  snippets; the analyzer must kill (diagnose) every mutant. A mutant
+  that survives is a hole in the checker, not a flaky test.
+* PROPERTIES — candidate_plans never emits a VMEM-overflowing tiling;
+  legalize_plan is a fixed point; Plan.validate/PlanCache round-trips.
+"""
+import dataclasses
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import repro.core.adaptive as A
+from repro.analysis.verify import conventions as C
+from repro.analysis.verify import kernel_check as K
+from repro.analysis.verify import schedule_check as S
+from repro.analysis.verify.diagnostics import (Diagnostic, Report,
+                                               parse_ignores)
+from repro.core.schedule import lower_model_graph, overlap_order
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+HW = A.TPU_V5E
+MIX = A.MoEShape(M=8192, N=4096, K=14336, E=8, topk=2, ep=8, etp=1)
+PLAN = A.legalize_plan(A.Plan("comet", 2, 4, "pallas_fused",
+                              fused_combine=True), MIX.N, MIX.ep)
+
+
+def rules_of(diags):
+    return {d.rule for d in diags}
+
+
+# ---------------------------------------------------------------------------
+# Diagnostics core
+# ---------------------------------------------------------------------------
+
+
+def test_report_rendering_and_json():
+    r = Report([Diagnostic("kernel", "vmem-overflow", "error",
+                           "kernel:x", "too big", "shrink"),
+                Diagnostic("conventions", "mesh-entry", "warning",
+                           "a.py:3", "meh")])
+    assert not r.ok and len(r.errors) == 1
+    text = r.text()
+    assert "kernel/vmem-overflow" in text and "[fix: shrink]" in text
+    j = json.loads(r.to_json())
+    assert j["errors"] == 1 and not j["ok"]
+    assert j["diagnostics"][0]["rule"] == "vmem-overflow"
+    assert Report().ok and "clean" in Report().text()
+
+
+def test_bad_severity_rejected():
+    with pytest.raises(ValueError):
+        Diagnostic("kernel", "r", "fatal", "x", "m")
+
+
+def test_ignore_requires_justification():
+    src = ("x = 1  # verify: ignore[mesh-entry] -- annotation-only import\n"
+           "y = 2  # verify: ignore[mutable-global]\n")
+    ignores, bad = parse_ignores(src)
+    assert 1 in ignores and ignores[1][0] == "mesh-entry"
+    assert bad == [(2, "mutable-global")]
+
+
+# ---------------------------------------------------------------------------
+# CLEAN runs
+# ---------------------------------------------------------------------------
+
+
+def test_clean_tree_conventions():
+    diags = C.lint_tree(os.path.join(REPO, "src", "repro"))
+    assert diags == [], "\n".join(str(d) for d in diags)
+
+
+def test_clean_builtin_kernels():
+    diags = K.check_builtin_kernels()
+    assert diags == [], "\n".join(str(d) for d in diags)
+
+
+def test_clean_model_archs_schedule():
+    diags = S.check_model_archs()
+    assert diags == [], "\n".join(str(d) for d in diags)
+
+
+def test_clean_legalize_fixed_point():
+    assert K.check_legalize_fixed_point() == []
+
+
+def test_verify_cli_clean():
+    import subprocess
+    out = subprocess.run(
+        [sys.executable, os.path.join(REPO, "tools", "verify.py"),
+         "--all", "--json"], capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stdout + out.stderr
+    j = json.loads(out.stdout)
+    assert j["ok"] and j["diagnostics"] == []
+
+
+# ---------------------------------------------------------------------------
+# Seeded mutants — executed-segment order (reads/writes hazards)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class FakeSeg:
+    name: str
+    reads: tuple
+    writes: tuple
+
+
+def _exec_program():
+    # attn -> router -> gemm -> comb -> next attn, two blocks
+    return [
+        FakeSeg("L0.attn", ("x0",), ("h0",)),
+        FakeSeg("L0.router", ("h0",), ("d0",)),
+        FakeSeg("L0.gemm", ("d0",), ("e0",)),
+        FakeSeg("L0.comb", ("e0",), ("x1",)),
+        FakeSeg("L1.attn", ("x1",), ("h1",)),
+        FakeSeg("L1.router", ("h1",), ("d1",)),
+        FakeSeg("L1.gemm", ("d1",), ("e1",)),
+        FakeSeg("L1.comb", ("e1",), ("x2",)),
+    ]
+
+
+def _swap(segs, a, b):
+    out = list(segs)
+    ia = [s.name for s in out].index(a)
+    ib = [s.name for s in out].index(b)
+    out[ia], out[ib] = out[ib], out[ia]
+    return out
+
+
+def test_exec_clean_orders_pass():
+    p = _exec_program()
+    assert S.check_exec_order(p, p) == []
+    # independent values permute freely: a second block reading its own
+    # inputs may interleave anywhere
+    q = [FakeSeg("a", ("u",), ("v",)), FakeSeg("b", ("x",), ("y",))]
+    assert S.check_exec_order(q, [q[1], q[0]]) == []
+
+
+def test_mutant_exec_raw_swap():
+    p = _exec_program()
+    bad = _swap(p, "L0.router", "L0.attn")       # router before its input
+    assert "raw-hazard" in rules_of(S.check_exec_order(p, bad))
+
+
+def test_mutant_exec_cross_block_raw():
+    p = _exec_program()
+    bad = _swap(p, "L1.attn", "L0.comb")         # attn before x1 exists
+    assert "raw-hazard" in rules_of(S.check_exec_order(p, bad))
+
+
+def test_mutant_exec_war_swap():
+    p = _exec_program() + [FakeSeg("L0.rewrite", (), ("h0",))]
+    bad = _swap(p, "L0.rewrite", "L0.router")    # clobbers h0 pre-read
+    assert "war-hazard" in rules_of(S.check_exec_order(p, bad))
+
+
+def test_mutant_exec_waw_swap():
+    p = [FakeSeg("w1", (), ("v",)), FakeSeg("w2", (), ("v",)),
+         FakeSeg("r", ("v",), ())]
+    bad = [p[1], p[0], p[2]]                     # stale writer wins
+    assert "waw-hazard" in rules_of(S.check_exec_order(p, bad))
+
+
+def test_mutant_exec_dropped_segment():
+    p = _exec_program()
+    assert "not-a-permutation" in rules_of(S.check_exec_order(p, p[:-1]))
+
+
+def test_mutant_exec_duplicated_segment():
+    p = _exec_program()
+    assert "not-a-permutation" in rules_of(
+        S.check_exec_order(p, p + [p[0]]))
+
+
+def test_mutant_exec_duplicate_names_in_program():
+    p = _exec_program() + [FakeSeg("L0.attn", (), ())]
+    assert "duplicate-name" in rules_of(S.check_exec_order(p, p))
+
+
+def test_assert_exec_order_safe_raises():
+    p = _exec_program()
+    with pytest.raises(RuntimeError, match="hazard"):
+        S.assert_exec_order_safe(p, _swap(p, "L0.gemm", "L0.comb"))
+
+
+# ---------------------------------------------------------------------------
+# Seeded mutants — cost-IR graph orders (structural ring rules)
+# ---------------------------------------------------------------------------
+
+
+def _graph(training=False, n_slices=1):
+    return lower_model_graph(HW, MIX, PLAN, d_model=MIX.N, n_blocks=2,
+                             n_slices=n_slices, training=training)
+
+
+def _expect():
+    from repro.core.schedule import comet_ring_counts
+    cnt = comet_ring_counts(MIX.ep, PLAN.ring_group, PLAN.n_col_blocks)
+    return {"n_steps": cnt["n_steps"], "n_col": PLAN.n_col_blocks}
+
+
+def _sid(g, name):
+    return next(s.sid for s in g.segments if s.name == name)
+
+
+def _swap_order(order, sa, sb):
+    order = list(order)
+    ia, ib = order.index(sa), order.index(sb)
+    order[ia], order[ib] = order[ib], order[ia]
+    return order
+
+
+@pytest.mark.parametrize("training", [False, True])
+@pytest.mark.parametrize("ns", [1, 2])
+def test_graph_clean_orders_pass(training, ns):
+    g = _graph(training, ns)
+    assert S.check_graph_order(g, overlap_order(g), expect=_expect()) == []
+
+
+def test_mutant_graph_gemm_before_disp():
+    g = _graph()
+    bad = _swap_order(overlap_order(g), _sid(g, "L0.s0.disp1"),
+                      _sid(g, "L0.s0.gemm1"))
+    assert "recv-before-compute" in rules_of(
+        S.check_graph_order(g, bad, expect=_expect()))
+
+
+def test_mutant_graph_comb_before_gemm():
+    g = _graph()
+    bad = _swap_order(overlap_order(g), _sid(g, "L0.s0.gemm0"),
+                      _sid(g, "L0.s0.comb0.0"))
+    rules = rules_of(S.check_graph_order(g, bad, expect=_expect()))
+    assert "send-after-produce" in rules
+
+
+def test_mutant_graph_disp_fifo_overtake():
+    g = _graph()
+    order = overlap_order(g)
+    d1, d2 = _sid(g, "L0.s0.disp1"), _sid(g, "L0.s0.disp2")
+    bad = _swap_order(order, d1, d2)       # step 2 recv overtakes step 1
+    rules = rules_of(S.check_graph_order(g, bad, expect=_expect()))
+    assert "link-fifo" in rules
+
+
+def test_mutant_graph_router_after_gemm():
+    g = _graph()
+    bad = _swap_order(overlap_order(g), _sid(g, "L0.s0.router"),
+                      _sid(g, "L0.s0.gemm0"))
+    assert "raw-hazard" in rules_of(
+        S.check_graph_order(g, bad, expect=_expect()))
+
+
+def test_mutant_graph_attn_before_prev_combine():
+    g = _graph()
+    order = overlap_order(g)
+    a1 = _sid(g, "L1.s0.attn")
+    last_comb = max((s.sid for s in g.segments
+                     if s.name.startswith("L0.s0.comb")),
+                    key=lambda sid: order.index(sid))
+    bad = _swap_order(order, last_comb, a1)
+    assert "raw-hazard" in rules_of(
+        S.check_graph_order(g, bad, expect=_expect()))
+
+
+def test_mutant_graph_dropped_hop():
+    g = _graph()
+    victim = _sid(g, "L0.s0.disp1")
+    keep = [s for s in g.segments if s.sid != victim]
+    # renumber: order must be a permutation of the REMAINING sids —
+    # check_graph_order indexes segments by position, so rebuild sids
+    remap = {s.sid: i for i, s in enumerate(keep)}
+    g.segments = [dataclasses.replace(
+        s, sid=remap[s.sid],
+        deps=tuple(remap[d] for d in s.deps if d in remap)) for s in keep]
+    rules = rules_of(S.check_graph_order(g, list(range(len(keep))),
+                                         expect=_expect()))
+    assert "missing-segment" in rules
+
+
+def test_mutant_graph_wrong_resource():
+    g = _graph()
+    order = overlap_order(g)
+    g.segments = [dataclasses.replace(s, resource="compute")
+                  if s.name == "L0.s0.disp1" else s for s in g.segments]
+    assert "wrong-resource" in rules_of(
+        S.check_graph_order(g, order, expect=_expect()))
+
+
+def test_mutant_graph_flush_before_bgemm():
+    g = _graph(training=True)
+    bad = _swap_order(overlap_order(g), _sid(g, "L0.s0.bgemm1"),
+                      _sid(g, "L0.s0.flush1"))
+    assert "flush-before-producer" in rules_of(
+        S.check_graph_order(g, bad, expect=_expect()))
+
+
+def test_mutant_graph_flush_grows_dependent():
+    g = _graph(training=True)
+    order = overlap_order(g)
+    fl = _sid(g, "L0.s0.flush1")
+    dependent = next(s for s in g.segments
+                     if order.index(s.sid) > order.index(fl)
+                     and s.sid > fl)
+    g.segments = [dataclasses.replace(s, deps=tuple(s.deps) + (fl,))
+                  if s.sid == dependent.sid else s for s in g.segments]
+    assert "flush-has-dependent" in rules_of(
+        S.check_graph_order(g, order, expect=_expect()))
+
+
+def test_mutant_graph_not_a_permutation():
+    g = _graph()
+    order = overlap_order(g)
+    assert "not-a-permutation" in rules_of(
+        S.check_graph_order(g, order[:-1], expect=_expect()))
+
+
+# ---------------------------------------------------------------------------
+# Seeded mutants — kernel models
+# ---------------------------------------------------------------------------
+
+
+def test_mutant_kernel_oversized_tile():
+    m = K.fused_mlp_model(bn=0, d=8192, N=8192)     # full-width at d=8k
+    assert "vmem-overflow" in rules_of(K.check_vmem(m, HW.vmem_bytes))
+
+
+def test_mutant_kernel_index_map_off_by_one():
+    m = K.grouped_gemm_model()
+    blocks = tuple(
+        dataclasses.replace(b, index_map=lambda e, mm, n, k: (e, mm + 1, k))
+        if b.name == "lhs" else b for b in m.blocks)
+    bad = dataclasses.replace(m, blocks=blocks)
+    assert "index-out-of-bounds" in rules_of(K.check_index_maps(bad))
+
+
+def test_mutant_kernel_negative_offset():
+    m = K.rmsnorm_model()
+    blocks = tuple(dataclasses.replace(b, index_map=lambda i: (i - 1, 0))
+                   if b.name == "x" else b for b in m.blocks)
+    assert "index-out-of-bounds" in rules_of(
+        K.check_index_maps(dataclasses.replace(m, blocks=blocks)))
+
+
+def test_mutant_kernel_wrong_axis_order():
+    # n_major traversal wired with expert_major maps: grid axis 0 (nt)
+    # lands in the expert slot and runs off the expert dimension
+    m = K.grouped_gemm_model(order="n_major")
+    blocks = tuple(
+        dataclasses.replace(b, index_map=lambda n, e, mm, k: (n, mm, k))
+        if b.name == "lhs" else b for b in m.blocks)
+    bad = dataclasses.replace(m, blocks=blocks)
+    assert "index-out-of-bounds" in rules_of(K.check_index_maps(bad))
+
+
+def test_mutant_kernel_grid_too_small():
+    m = K.grouped_gemm_model()
+    bad = dataclasses.replace(m, grid=(m.grid[0], m.grid[1] - 1,
+                                       m.grid[2], m.grid[3]))
+    assert "uncovered-output-tile" in rules_of(K.check_index_maps(bad))
+
+
+def test_mutant_kernel_index_map_arity():
+    m = K.rmsnorm_model()
+    blocks = tuple(dataclasses.replace(b, index_map=lambda i: (i,))
+                   if b.name == "x" else b for b in m.blocks)
+    assert "index-map-arity" in rules_of(
+        K.check_index_maps(dataclasses.replace(m, blocks=blocks)))
+
+
+def test_mutant_kernel_bf16_accum():
+    m = dataclasses.replace(K.grouped_gemm_model(),
+                            accum_dtype="bfloat16")
+    assert "accum-dtype" in rules_of(K.check_accum_dtypes(m))
+
+
+# ---------------------------------------------------------------------------
+# Seeded mutants — convention linter snippets
+# ---------------------------------------------------------------------------
+
+
+def test_mutant_lint_shard_map_import():
+    src = "from jax.experimental.shard_map import shard_map\n"
+    assert "mesh-entry" in rules_of(C.lint_source("core/x.py", src))
+
+
+def test_mutant_lint_use_mesh_attribute():
+    src = "import jax\n\n\ndef f(m):\n    return jax.sharding.use_mesh(m)\n"
+    assert "mesh-entry" in rules_of(C.lint_source("launch/x.py", src))
+
+
+def test_mutant_lint_mesh_constructor():
+    src = ("from jax.sharding import Mesh\n\n\ndef f(d):\n"
+           "    return Mesh(d, ('x',))\n")
+    assert "mesh-entry" in rules_of(C.lint_source("training/x.py", src))
+
+
+def test_lint_mesh_annotation_is_legal():
+    src = ("from jax.sharding import Mesh\n\n\ndef f(m: Mesh) -> Mesh:\n"
+           "    return m\n")
+    assert C.lint_source("launch/x.py", src) == []
+
+
+def test_mutant_lint_mutable_module_dict():
+    src = "_CACHE = {}\n"
+    assert "mutable-global" in rules_of(C.lint_source("core/x.py", src))
+    # same accumulator OUTSIDE a hot dir is tolerated
+    assert C.lint_source("configs/x.py", src) == []
+
+
+def test_mutant_lint_global_stmt():
+    src = "_N = 0\n\n\ndef bump():\n    global _N\n    _N += 1\n"
+    assert "mutable-global" in rules_of(C.lint_source("serving/x.py", src))
+
+
+def test_mutant_lint_serving_assert():
+    src = "def admit(n):\n    assert n >= 0\n    return n\n"
+    assert "serving-assert" in rules_of(
+        C.lint_source("serving/engine2.py", src))
+    # the same assert in kernels/ is fine (shape guards at trace time)
+    assert C.lint_source("kernels/x.py", src) == []
+
+
+def test_mutant_lint_inline_knob_mod():
+    src = "def pick(d, plan):\n    return d % plan.n_col_blocks == 0\n"
+    assert "knob-legalize" in rules_of(
+        C.lint_source("core/transport2.py", src))
+
+
+def test_mutant_lint_bad_ignore_reported():
+    src = "def admit(n):\n    assert n  # verify: ignore[serving-assert]\n"
+    rules = rules_of(C.lint_source("serving/x.py", src))
+    assert "bad-ignore" in rules and "serving-assert" in rules
+
+
+def test_lint_justified_ignore_suppresses():
+    src = ("def admit(n):\n"
+           "    assert n  # verify: ignore[serving-assert] -- test-only "
+           "shim, never deployed\n")
+    assert C.lint_source("serving/x.py", src) == []
+
+
+# ---------------------------------------------------------------------------
+# Properties — the candidate_plans VMEM gate and Plan validation
+# ---------------------------------------------------------------------------
+
+BIG = A.MoEShape(M=4096, N=16384, K=4096, E=16, topk=2, ep=8, etp=1)
+
+
+def test_candidate_plans_never_overflow_vmem():
+    for s in (MIX, BIG,
+              A.MoEShape(M=8192, N=2048, K=1408, E=64, topk=4, ep=8,
+                         etp=1)):
+        for p in A.candidate_plans(s, include_graph=True):
+            assert K.plan_vmem_ok(s, p, HW), (s.N, s.K, p)
+
+
+def test_candidate_plans_filter_actually_bites():
+    # at d_model=16k no pallas_fused tiling fits the v5e budget: the gate
+    # must remove them all, and disabling it must bring them back
+    fused = [p for p in A.candidate_plans(BIG)
+             if p.gemm_impl == "pallas_fused"]
+    assert fused == []
+    nogate = dataclasses.replace(HW, vmem_bytes=0)
+    assert any(p.gemm_impl == "pallas_fused"
+               for p in A.candidate_plans(BIG, hw=nogate))
+
+
+def test_candidate_plans_xla_survives_big_shapes():
+    # the gate never strands a shape without candidates
+    assert any(p.gemm_impl == "xla" for p in A.candidate_plans(BIG))
+    assert any(p.impl == "comet" for p in A.candidate_plans(BIG))
+
+
+def test_tuner_on_big_shape_picks_legal_plan():
+    plan = A.tune_plan(BIG, HW)
+    assert K.plan_vmem_ok(BIG, plan, HW)
+    assert plan.validate(BIG.N, BIG.ep) == []
+
+
+def test_plan_validate_ranges():
+    assert A.Plan().validate() == []
+    assert A.Plan(impl="warp").validate()
+    assert A.Plan(n_col_blocks=0).validate()
+    assert A.Plan(n_col_blocks=A.MAX_COL_BLOCKS + 1).validate()
+    assert A.Plan(ring_group=0).validate()
+    assert A.Plan(gemm_impl="cuda").validate()
+    assert A.Plan(phase="serve").validate()
+    assert A.Plan(schedule="overlap").validate()      # needs n_slices >= 2
+    assert A.Plan(n_slices=3).validate()              # per-layer w/ slices
+    assert A.Plan("comet", 2, 4, schedule="overlap",
+                  n_slices=2).validate() == []
+
+
+def test_plan_validate_geometry():
+    assert A.Plan("comet", 2, 4).validate(4096, 8) == []
+    assert A.Plan("comet", 3, 4).validate(4096, 8)    # 3 doesn't divide 8
+    assert A.Plan("comet", 2, 5).validate(4096, 8)    # 5 doesn't divide d
+
+
+def test_plan_cache_put_rejects_illegal():
+    pc = A.PlanCache()
+    with pytest.raises(ValueError, match="illegal"):
+        pc.put(MIX, HW, A.Plan("comet", 3, 4), save=False)
+    pc.put(MIX, HW, A.Plan("comet", 2, 4), save=False)
+
+
+def test_plan_cache_load_skips_illegal_entries(tmp_path):
+    path = str(tmp_path / "plans.json")
+    good = A.Plan("comet", 2, 4, "pallas_fused")
+    key_good = A.PlanCache.key(MIX, HW)
+    key_bad = A.PlanCache.key(dataclasses.replace(MIX, M=1024), HW)
+    with open(path, "w") as f:
+        json.dump({"version": A.PLAN_CACHE_VERSION, "plans": {
+            key_good: good.to_json(),
+            key_bad: dict(A.Plan("comet", 2, 4).to_json(),
+                          n_col_blocks=A.MAX_COL_BLOCKS + 1),
+        }}, f)
+    with pytest.warns(UserWarning, match="illegal"):
+        pc = A.PlanCache(path)
+    assert pc.plans == {key_good: good}
+
+
+def test_plan_cache_load_legalizes_handwritten_knobs(tmp_path):
+    """A statically-fine entry whose knobs just aren't pre-legalized (a
+    hand-written or pre-v3 cache) loads as the legalized schedule instead
+    of being dropped — resolve_plan has always run the legalized knobs."""
+    path = str(tmp_path / "plans.json")
+    key = A.PlanCache.key(MIX, HW)
+    with open(path, "w") as f:
+        json.dump({"version": A.PLAN_CACHE_VERSION, "plans": {
+            key: A.Plan("comet", 3, 4).to_json(),       # 3 ∤ ep=8 -> rg 2
+        }}, f)
+    pc = A.PlanCache(path)
+    loaded = pc.plans[key]
+    assert loaded.ring_group == A.legalize_ring_group(MIX.ep, 3) == 2
+    assert loaded.validate(MIX.N, MIX.ep) == []
+
+
+def test_load_plan_cache_memoizes_by_mtime(tmp_path):
+    path = str(tmp_path / "plans.json")
+    A.PlanCache(path).put(MIX, HW, A.Plan("comet", 2, 4))
+    # force distinct mtimes: the memo key is (path, mtime)
+    os.utime(path, (1_000_000_000, 1_000_000_000))
+    pc1 = A.load_plan_cache(path)
+    assert A.load_plan_cache(path) is pc1
+    A.PlanCache(path).put(MIX, HW, A.Plan("comet", 4, 4))
+    os.utime(path, (1_000_000_100, 1_000_000_100))
+    pc2 = A.load_plan_cache(path)
+    assert pc2 is not pc1
+    assert pc2.get(MIX, HW).ring_group == 4
+
+
+def test_legalize_fixed_point_direct():
+    for d_model in (1536, 4096):
+        for ep in (4, 8):
+            for n in range(1, 10):
+                p1 = A.legalize_plan(A.Plan("comet", n, n), d_model, ep)
+                assert A.legalize_plan(p1, d_model, ep) == p1
+
+
+def test_forward_scheduled_hook_rejects_corrupt_order(monkeypatch):
+    """End-to-end: corrupt exec_order's output and the debug assertion in
+    forward_scheduled must refuse to interpret the trace."""
+    jax = pytest.importorskip("jax")
+    import numpy as np
+    import repro.core.schedule as SCH
+    import repro.models.lm as LM
+    from repro.configs.base import get_config
+
+    cfg = get_config("qwen2-0.5b-smoke")
+    cfg = dataclasses.replace(cfg, block_schedule="sequential")
+    params = LM.init_params(cfg, jax.random.PRNGKey(0))
+    batch = {"tokens": np.zeros((2, 16), dtype=np.int32)}
+
+    real = SCH.exec_order
+
+    def corrupt(segs, mode):
+        out = list(real(segs, mode))
+        out[0], out[-1] = out[-1], out[0]
+        return out
+
+    monkeypatch.setattr(SCH, "exec_order", corrupt)
+    monkeypatch.setenv("REPRO_VERIFY_SCHEDULE", "1")
+    with pytest.raises(RuntimeError, match="hazard"):
+        LM.forward_scheduled(cfg, params, batch)

@@ -1,0 +1,62 @@
+#!/usr/bin/env python
+"""comet-verify driver: run the static-analysis passes over the repo.
+
+    python tools/verify.py --all            # every pass, text output
+    python tools/verify.py --all --json     # machine-readable (CI)
+    python tools/verify.py --schedule       # race detector only
+    python tools/verify.py --kernels        # Pallas resource checker only
+    python tools/verify.py --conventions    # AST linter only
+
+Exit status 1 iff any error-severity diagnostic is produced. The
+schedule pass lowers every MoE arch in ``configs/archs.py`` and
+re-derives hazards for its overlap orders; the kernel pass checks the
+built-in kernel models, the candidate_plans VMEM property and the
+legalize fixed point; the conventions pass lints ``src/repro``.
+"""
+import argparse
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--all", action="store_true",
+                    help="run every pass (default if none selected)")
+    ap.add_argument("--schedule", action="store_true",
+                    help="schedule-IR race detector")
+    ap.add_argument("--kernels", action="store_true",
+                    help="Pallas VMEM/bounds/dtype checker")
+    ap.add_argument("--conventions", action="store_true",
+                    help="hot-path convention linter")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the report as JSON")
+    ap.add_argument("--root", default=os.path.join(_ROOT, "src", "repro"),
+                    help="tree to lint (conventions pass)")
+    args = ap.parse_args(argv)
+    if not (args.schedule or args.kernels or args.conventions):
+        args.all = True
+
+    from repro.analysis.verify.diagnostics import Report
+    report = Report()
+
+    if args.all or args.schedule:
+        from repro.analysis.verify import schedule_check
+        report.extend(schedule_check.check_model_archs())
+    if args.all or args.kernels:
+        from repro.analysis.verify import kernel_check
+        report.extend(kernel_check.check_builtin_kernels())
+        report.extend(kernel_check.check_candidate_plans())
+        report.extend(kernel_check.check_legalize_fixed_point())
+    if args.all or args.conventions:
+        from repro.analysis.verify import conventions
+        report.extend(conventions.lint_tree(args.root))
+
+    print(report.to_json() if args.json else report.text())
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

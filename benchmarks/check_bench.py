@@ -160,6 +160,60 @@ def g_whole_graph(d):
             f"(fwd and fwd+bwd) at all {len(rows)} paper models")
 
 
+def g_hier_modeled(d):
+    rows = _rows(d["hier_transport"]["modeled"])
+    if not rows:
+        return False, "hier_transport.modeled has no rows (figure not run?)"
+    bad = [k for k, r in rows
+           if not (r["hier_exposed_s"] < r["flat_exposed_s"]
+                   and r["hier_bwd_exposed_s"] <= r["flat_bwd_exposed_s"])]
+    return (not bad,
+            f"hier exposed comm not below flat at {bad}" if bad else
+            f"hier modeled exposed comm strictly below flat comet at all "
+            f"{len(rows)} paper shapes (bwd <= too)")
+
+
+def g_hier_measured(d):
+    m = d["hier_transport"].get("measured")
+    if not m:
+        return False, ("hier_transport.measured missing (8-device census "
+                       "subprocess failed?)")
+    ef, eh = m["flat"]["exposed_s"], m["hier"]["exposed_s"]
+    parity = d["hier_transport"].get("flat_hier_parity_rel", 1.0)
+    if m["hier"]["intra_hops"] <= 0:
+        return False, "hier execution censused no intra-class hops"
+    if not parity < 1e-5:
+        return False, f"flat/hier fp32 outputs diverge (rel {parity:.1e})"
+    return (eh < ef,
+            f"census-measured exposed: hier {eh * 1e6:.1f}us vs flat "
+            f"{ef * 1e6:.1f}us ({m['hier']['intra_hops']} hops repriced "
+            f"intra-class)" if eh < ef else
+            f"measured hier exposed {eh * 1e6:.1f}us NOT below flat "
+            f"{ef * 1e6:.1f}us")
+
+
+def g_hier_wire(d):
+    rows = _rows(d["hier_transport"].get("wire", {}))
+    if not rows:
+        return False, "hier_transport.wire has no rows (figure not run?)"
+    if not d["hier_transport"]["wire"].get("bf16", {}).get("available"):
+        return False, "bf16 wire row missing/unavailable"
+    bad = [k for k, r in rows if r.get("available")
+           and not r["max_rel_err"] <= r["tol"]]
+    avail = [k for k, r in rows if r.get("available")]
+    return (not bad,
+            f"wire error beyond documented tolerance at {bad}" if bad else
+            f"{avail} within documented tolerance of the fp32 wire "
+            f"(fp32 accumulation)")
+
+
+def g_hier_rotation(d):
+    ok = d["hier_transport"].get("rotation_deterministic")
+    return (bool(ok),
+            "encoded wire payloads bit-identical across ring rotations"
+            if ok else "wire payload bytes CHANGED under ring rotation")
+
+
 GATES: List[Gate] = [
     ("micro_present", "best_s > 0 for every kernel",
      "micro (Fig. 8 kernel sweep)", g_micro),
@@ -192,6 +246,17 @@ GATES: List[Gate] = [
      "serving.chaos (PR7 fault tolerance)", g_chaos_exactly_once),
     ("serving_chaos_ttft_bounded", "ttft_p99_factor <= 25",
      "serving.chaos (PR7 fault tolerance)", g_chaos_ttft),
+    ("hier_exposed_below_flat_modeled",
+     "hier_exposed_s < flat_exposed_s (bwd <=)",
+     "hier_transport.modeled (PR9 two-level ring)", g_hier_modeled),
+    ("hier_exposed_below_flat_measured",
+     "census-priced hier exposed < flat, fp32 parity exact",
+     "hier_transport.measured (PR9 two-level ring)", g_hier_measured),
+    ("hier_wire_tolerance", "max_rel_err <= documented tol per wire dtype",
+     "hier_transport.wire (PR9 wire format)", g_hier_wire),
+    ("hier_wire_rotation_deterministic",
+     "encoded payloads bit-identical across rotations",
+     "hier_transport.wire (PR9 wire format)", g_hier_rotation),
 ]
 
 

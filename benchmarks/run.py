@@ -400,6 +400,96 @@ def whole_graph_table(Ms=(8192,), ep: int = 8, n_blocks: int = 2):
     return table
 
 
+def hier_transport_table(Ms=(8192,), ep: int = 8):
+    """The PR 9 acceptance artifact: on the asymmetric-bandwidth preset
+    (H100_CROSSNODE: 4-GPU NVLink nodes joined by cross-node RDMA), the
+    two-level ``comet_hier`` ring's exposed communication must be STRICTLY
+    below flat comet — both MODELED (per-link-class hop profile through the
+    three-resource pipeline, every paper shape) and MEASURED (the ppermute
+    census of a real 8-device interpret execution, priced with the same
+    topology descriptor — ``benchmarks/hier_measured.py`` in a subprocess
+    so it owns XLA_FLAGS). The wire-format rows ride the measured run:
+    bf16 / fp8_e4m3 dispatch+combine vs the fp32 wire within documented
+    tolerance (fp32 accumulation), encoded payloads bit-identical across
+    ring rotations."""
+    import json as _json
+    import os
+    import subprocess
+
+    from benchmarks.figures import PAPER_MODELS
+    from repro.core import adaptive as A
+
+    hw = A.H100_CROSSNODE
+    table = {"modeled": {}}
+    print(f"\n# hier_transport (two-level ring vs flat comet on "
+          f"{hw.name}, EP={ep}, intra_group={hw.intra_group})")
+    print("model,M,flat_exposed_ms,hier_exposed_ms,exposed_cut,"
+          "hier_bwd_exposed_ms,flat_bwd_exposed_ms,wire")
+    for name, m in PAPER_MODELS.items():
+        for M in Ms:
+            s = A.MoEShape(M=M, N=m["N"], K=m["K"], E=m["E"], topk=m["topk"],
+                           ep=ep, etp=1)
+            flat = min((A.legalize_plan(p, s.N, s.ep)
+                        for p in A.candidate_plans(s, hw=hw)
+                        if p.impl == "comet"),
+                       key=lambda p: A.fwd_exposed_comm_time(hw, s, p))
+            hier = min((A.legalize_plan(p, s.N, s.ep)
+                        for p in A.candidate_plans(s, hw=hw)
+                        if p.impl == "comet_hier"),
+                       key=lambda p: A.fwd_exposed_comm_time(hw, s, p))
+            ef = A.fwd_exposed_comm_time(hw, s, flat)
+            eh = A.fwd_exposed_comm_time(hw, s, hier)
+            bf = A.bwd_exposed_comm_time(hw, s, flat)
+            bh = A.bwd_exposed_comm_time(hw, s, hier)
+            table["modeled"][f"{name}@M{M}"] = {
+                "flat_exposed_s": ef, "hier_exposed_s": eh,
+                "flat_bwd_exposed_s": bf, "hier_bwd_exposed_s": bh,
+                "hier_intra_group": hier.intra_group,
+                "hier_wire": hier.wire_dtype,
+            }
+            print(f"{name},{M},{ef * 1e3:.3f},{eh * 1e3:.3f},"
+                  f"{ef / max(eh, 1e-12):.2f}x,{bh * 1e3:.3f},"
+                  f"{bf * 1e3:.3f},{hier.wire_dtype}")
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(os.path.dirname(__file__), "..", "src"),
+                    env.get("PYTHONPATH")) if p)
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.hier_measured"],
+        capture_output=True, text=True, timeout=900, env=env,
+        cwd=os.path.join(os.path.dirname(__file__), ".."))
+    if r.returncode == 0:
+        table.update(_json.loads(r.stdout))
+        ms = table["measured"]
+        print(f"measured(8-dev census): flat "
+              f"{ms['flat']['exposed_s'] * 1e6:.1f}us "
+              f"({ms['flat']['inter_hops']} inter hops) vs hier "
+              f"{ms['hier']['exposed_s'] * 1e6:.1f}us "
+              f"({ms['hier']['inter_hops']} inter + "
+              f"{ms['hier']['intra_hops']} intra), parity rel "
+              f"{table['flat_hier_parity_rel']:.1e}")
+        for wd, row in table["wire"].items():
+            print(f"wire {wd}: " + (
+                f"max_rel_err {row['max_rel_err']:.2e} "
+                f"(tol {row['tol']:.0e})" if row.get("available")
+                else "unavailable in this jax"))
+        print(f"rotation-deterministic: {table['rotation_deterministic']}")
+    else:
+        print(f"measured subprocess FAILED rc={r.returncode}: "
+              f"{r.stderr[-500:]}")
+    ok = (all(v["hier_exposed_s"] < v["flat_exposed_s"]
+              and v["hier_bwd_exposed_s"] <= v["flat_bwd_exposed_s"]
+              for v in table["modeled"].values())
+          and r.returncode == 0
+          and table["measured"]["hier"]["exposed_s"]
+          < table["measured"]["flat"]["exposed_s"])
+    print(f"[{'PASS' if ok else 'FAIL'}] hier exposed comm strictly below "
+          "flat comet (modeled at all paper shapes AND census-measured)")
+    return table
+
+
 def serving_decode_plan_table(Ms=(8, 32, 128, 512), ep: int = 8):
     """Decode-phase plan quality at the paper's layer shapes: the tuned
     decode plan (phase="decode" — ranked on the fwd-only per-step latency
@@ -794,6 +884,7 @@ def main(argv=None) -> int:
             "hbm_hot_path": _jsonable(hbm_hot_path_table()),
             "bwd_overlap": _jsonable(bwd_overlap_table()),
             "whole_graph": _jsonable(whole_graph_table()),
+            "hier_transport": _jsonable(hier_transport_table()),
             "serving": _jsonable(serving_bench()),
             "validation_failures": fails,
         }

@@ -31,8 +31,8 @@ import dataclasses
 import math
 from typing import Dict, List, Optional, Tuple
 
-from repro.core.adaptive import (H100_NVL, L20_PCIE, TPU_V5E, Hardware,
-                                 MoEShape)
+from repro.core.adaptive import (H100_CROSSNODE, H100_NVL, L20_PCIE,
+                                 TPU_V5E, Hardware, MoEShape)
 
 # host-side launch overhead per kernel (CUDA launch + python dispatch); the
 # paper attributes FasterMoE/Tutel's small-M losses to this
@@ -42,11 +42,23 @@ HOST_LAUNCH_S = 22e-6
 # per-peer messages in the 1-8 MB range (NCCL on NVLink is far from peak at
 # MoE dispatch sizes — this is what makes comm 47% of Fig. 1a despite
 # 377 GB/s links). Calibrated once at the Fig. 10/11 operating point.
-A2A_EFF = {"h100_nvlink": 0.12, "l20_pcie": 0.45, "tpu_v5e": 0.55}
+A2A_EFF = {"h100_nvlink": 0.12, "l20_pcie": 0.45, "tpu_v5e": 0.55,
+           "h100_crossnode": 0.3}
 
 
 def link_rate(hw: Hardware) -> float:
     return hw.link_bw * hw.links * A2A_EFF.get(hw.name, 0.5)
+
+
+def link_rate_class(hw: Hardware, cls: str) -> float:
+    """Effective rate of one link class of an asymmetric topology (same
+    per-preset a2a efficiency; the class picks the raw bandwidth). Falls
+    back to the flat link_bw where the descriptor leaves a class unset."""
+    if cls == "intra":
+        bw = hw.intra_bw or hw.link_bw
+    else:
+        bw = hw.inter_bw or hw.link_bw
+    return bw * hw.links * A2A_EFF.get(hw.name, 0.5)
 
 
 @dataclasses.dataclass
@@ -259,6 +271,60 @@ def sim_comet(hw: Hardware, s: MoEShape, imb: float = 0.0,
             f1 = w.flops_l1 / ep / n_col / (hw.flops * eff)
             tb = tl.compute(f1)
             d = w.comb_bytes / ep / n_col / (link_rate(hw) * link_scale)
+            end = tl.comm(d, ready=tb)
+            comm_total += d
+    end = max(end, tl.core)
+    comp_time = (w.flops_l0 + w.flops_l1) / (hw.flops * eff)
+    overlapped = max(0.0, comp_time + comm_total - end)
+    return {"total": end, "comm": comm_total,
+            "overlapped": min(comm_total, overlapped), "tl": tl,
+            "n_col": n_col}
+
+
+def sim_comet_hier(hw: Hardware, s: MoEShape, plan, imb: float = 0.0,
+                   n_col: int = 0, tpu: bool = False) -> Dict:
+    """comet's fine-grained schedule on the two-level ring: each sub-step's
+    dispatch/combine hop is priced at its link class (intra vs inter, the
+    inter steps front-loaded — core/adaptive.hier_step_order), and the
+    wire format shrinks the bytes of both directions. Compute is identical
+    to sim_comet: the hierarchy only re-routes traffic."""
+    from repro.core import adaptive as A
+    w = layer_work(s, imb)
+    tl = Timeline()
+    ep = max(1, s.ep)
+    if n_col <= 0:
+        from repro.core.adaptive import choose_n_col
+        n_col = choose_n_col(hw, s)
+    if tpu:
+        comp_scale = 1.0
+    else:
+        t_comm = (w.disp_bytes + w.comb_bytes) / link_rate(hw)
+        t_comp = (w.flops_l0 + w.flops_l1) / (hw.flops * hw.gemm_eff)
+        nc_frac = min(0.5, max(0.05, t_comm / max(t_comm + t_comp, 1e-12)))
+        comp_scale = 1.0 - 0.5 * nc_frac
+    eff = _eff(hw, w.small_rows, fragmented=False) * comp_scale
+    classes = A.hier_step_classes(ep, plan.intra_group)
+    wire_scale = (A.wire_bytes_per_elt(s, plan.wire_dtype)
+                  / s.bytes_per_elt)
+    r = tl.launch(1)
+    comm_total = 0.0
+    recv_done = [r]
+    for i in range(1, ep):
+        d = (w.disp_bytes * wire_scale / max(1, ep - 1)
+             / link_rate_class(hw, classes[i]))
+        recv_done.append(tl.comm(d, ready=r))
+        comm_total += d
+    end = r
+    for i in range(ep):
+        f0 = w.flops_l0 / ep / (hw.flops * eff)
+        tl.compute(f0, ready=recv_done[i])
+        for b in range(n_col):
+            f1 = w.flops_l1 / ep / n_col / (hw.flops * eff)
+            tb = tl.compute(f1)
+            if classes[i] == "local":
+                continue                      # local chunk: no return hop
+            d = (w.comb_bytes * wire_scale / ep / n_col
+                 / link_rate_class(hw, classes[i]))
             end = tl.comm(d, ready=tb)
             comm_total += d
     end = max(end, tl.core)

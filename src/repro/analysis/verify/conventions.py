@@ -43,7 +43,7 @@ SERVING_DIRS = ("serving/",)
 _MESH_ENTRY_NAMES = {"shard_map", "use_mesh", "set_mesh", "make_mesh"}
 _MESH_MODULES = ("jax", "jax.sharding", "jax.experimental",
                  "jax.experimental.shard_map", "jax.experimental.mesh_utils")
-_KNOB_FRAGMENTS = ("n_col", "ring_group")
+_KNOB_FRAGMENTS = ("n_col", "ring_group", "intra_group")
 _MUTABLE_CALLS = {"dict", "list", "set", "defaultdict", "OrderedDict",
                   "deque", "Counter"}
 
@@ -183,7 +183,7 @@ class _Linter(ast.NodeVisitor):
                         f"inline divisibility math on '{name}' outside "
                         "core/adaptive.py",
                         hint="call legalize_n_col/legalize_ring_group/"
-                             "legalize_plan instead"))
+                             "legalize_intra_group/legalize_plan instead"))
                     break
         self.generic_visit(node)
 

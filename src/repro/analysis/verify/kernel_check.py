@@ -371,7 +371,8 @@ def plan_vmem_ok(s, plan, hw) -> bool:
     budget = getattr(hw, "vmem_bytes", 0)
     if not budget or plan.gemm_impl != "pallas_fused":
         return True
-    n_col = max(1, plan.n_col_blocks) if plan.impl == "comet" else 1
+    n_col = (max(1, plan.n_col_blocks)
+             if plan.impl in ("comet", "comet_hier") else 1)
     return fused_mlp_vmem_bytes(
         s.N, s.K, n_col, glu=s.glu,
         bytes_per_elt=s.bytes_per_elt) <= budget

@@ -361,17 +361,29 @@ def check_model_archs(hw=None, tokens: int = 4096) -> List[Diagnostic]:
             continue
         ep = min(8, cfg.moe.num_experts)
         s = A.plan_shape(cfg.moe, cfg.d_model, tokens, ep, 1)
-        plan = A.legalize_plan(
+        plans = [A.legalize_plan(
             A.Plan("comet", ring_group=2, n_col_blocks=4,
                    gemm_impl="pallas_fused", fused_combine=True),
-            s.N, s.ep)
-        for training in (False, True):
-            for ns in (1, 2):
-                for d in check_lowered(hw, s, plan, d_model=cfg.d_model,
-                                       n_blocks=2, n_slices=ns,
-                                       training=training):
-                    diags.append(Diagnostic(
-                        d.passname, d.rule, d.severity,
-                        f"{name}[ns={ns},bwd={int(training)}]:{d.location}",
-                        d.message, d.hint))
+            s.N, s.ep)]
+        # the hierarchical ring lowers to the same segment graph with
+        # per-class hop costs — sweep it on the asymmetric preset so the
+        # race detector covers comet_hier's schedules too
+        plans.append(A.legalize_plan(
+            A.Plan("comet_hier", ring_group=2, n_col_blocks=4,
+                   gemm_impl="pallas_fused", fused_combine=True,
+                   intra_group=4, wire_dtype="bf16"),
+            s.N, s.ep))
+        hw_for = {"comet_hier": A.H100_CROSSNODE}
+        for plan in plans:
+            for training in (False, True):
+                for ns in (1, 2):
+                    for d in check_lowered(hw_for.get(plan.impl, hw), s,
+                                           plan, d_model=cfg.d_model,
+                                           n_blocks=2, n_slices=ns,
+                                           training=training):
+                        diags.append(Diagnostic(
+                            d.passname, d.rule, d.severity,
+                            f"{name}[{plan.impl},ns={ns},"
+                            f"bwd={int(training)}]:{d.location}",
+                            d.message, d.hint))
     return diags

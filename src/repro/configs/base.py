@@ -29,10 +29,18 @@ class MoEConfig:
     every_k_layers: int = 1            # MoE block on layers where (i % k == offset)
     layer_offset: int = 0
     # Comet execution knobs (the paper's technique):
-    impl: str = "comet"                # naive | coarse | comet | dense
+    impl: str = "comet"                # naive | coarse | comet | comet_hier
+                                       # | dense
     ep: int = 0                        # expert-parallel group size; 0 = auto
     n_col_blocks: int = 0              # layer-1 N-decomposition; 0 = adaptive
     ring_group: int = 1                # source chunks fused per GroupGEMM step
+    intra_group: int = 1               # comet_hier: devices per node — the
+                                       # EP axis factors as inter-node ×
+                                       # intra-node rings; 1 = flat
+    wire_dtype: str = "fp32"           # comet_hier wire format for dispatch
+                                       # payloads + combine partials (fp32 |
+                                       # bf16 | fp8_e4m3); fp32 = native
+                                       # width, no quantization
     fused_combine: bool = False        # comet: combine each column block as
                                        # it arrives (streaming layer-1
                                        # consumer) instead of after the

@@ -48,6 +48,19 @@ class Hardware:
     # per-core VMEM budget for a Pallas kernel's working set (the verify
     # pass and candidate_plans both gate tilings on this)
     vmem_bytes: int = 32 * 2**20
+    # --- topology descriptor (two link classes) -----------------------
+    # A flat fabric leaves these at their defaults: intra_bw/inter_bw of
+    # 0.0 mean "same as link_bw", intra_group=1 means every hop is
+    # inter-class. An asymmetric preset sets link_bw = inter_bw so every
+    # FLAT transport (whose ppermutes always span node boundaries)
+    # automatically prices at the slow class with no code changes.
+    intra_bw: float = 0.0        # bytes/s within a node (NVLink/ICI pod)
+    inter_bw: float = 0.0        # bytes/s across nodes (RDMA/DCN)
+    intra_group: int = 1         # devices per node on the EP axis
+    # fixed software/DMA-setup latency per fine-grained transfer: this is
+    # what makes the optimal decomposition COARSER at small M and FINER at
+    # large M (the paper's Fig. 8 shift of the optimal division point)
+    hop_latency_s: float = 5e-6
 
 
 TPU_V5E = Hardware("tpu_v5e", flops=197e12, hbm_bw=819e9, link_bw=50e9,
@@ -56,8 +69,14 @@ H100_NVL = Hardware("h100_nvlink", flops=990e12, hbm_bw=3.35e12,
                     link_bw=377e9, links=1, gemm_eff=0.65)
 L20_PCIE = Hardware("l20_pcie", flops=119e12, hbm_bw=864e9, link_bw=25e9,
                     links=1, gemm_eff=0.6)
+# asymmetric topology: 4-GPU NVLink nodes joined by RDMA — the regime
+# MoNTA/MegaScale-MoE target. link_bw == inter_bw so every flat transport
+# prices at the slow class (its ppermutes always have a cross-node pair).
+H100_CROSSNODE = Hardware("h100_crossnode", flops=990e12, hbm_bw=3.35e12,
+                          link_bw=50e9, links=1, gemm_eff=0.65,
+                          intra_bw=377e9, inter_bw=50e9, intra_group=4)
 
-HW = {h.name: h for h in (TPU_V5E, H100_NVL, L20_PCIE)}
+HW = {h.name: h for h in (TPU_V5E, H100_NVL, L20_PCIE, H100_CROSSNODE)}
 
 
 # ---------------------------------------------------------------------------
@@ -78,10 +97,36 @@ class MoEShape:
     bytes_per_elt: int = 2
 
 
-# fixed software/DMA-setup latency per fine-grained transfer: this is what
-# makes the optimal decomposition COARSER at small M and FINER at large M
-# (the paper's Fig. 8 shift of the optimal division point with M)
+# kept for import compatibility; the knob itself is now the per-hardware
+# ``Hardware.hop_latency_s`` field (a module-level tunable skirts the
+# mutable-global lint's spirit)
 HOP_LATENCY_S = 5e-6
+
+# wire formats for the hierarchical transport's dispatch payloads and
+# per-column-block combine partials. "fp32" is the identity format (native
+# payload dtype on the wire; the name records the dequant/accum width);
+# "bf16" is a plain cast; "fp8_e4m3" is per-chunk symmetric-scale
+# quantization (optim/compression.py's scale machinery at fp8 range).
+WIRE_DTYPES = ("fp32", "bf16", "fp8_e4m3")
+
+# bytes/element on the wire; None = the payload's native width
+_WIRE_BYTES = {"fp32": None, "bf16": 2, "fp8_e4m3": 1}
+
+
+def wire_bytes_per_elt(s: "MoEShape", wire_dtype: str) -> float:
+    b = _WIRE_BYTES.get(wire_dtype)
+    return float(s.bytes_per_elt if b is None else b)
+
+
+@functools.lru_cache(maxsize=1)
+def _fp8_wire_available() -> bool:
+    """fp8 wire candidates need a jax with float8_e4m3fn (checked lazily —
+    this module must stay importable without jax)."""
+    try:
+        import jax.numpy as jnp
+        return hasattr(jnp, "float8_e4m3fn")
+    except Exception:
+        return False
 
 
 def gemm_time(hw: Hardware, rows: int, n: int, k: int, n_mats: int = 1) -> float:
@@ -97,7 +142,7 @@ def layer_times(hw: Hardware, s: MoEShape) -> Dict[str, float]:
     t_gemm1 = gemm_time(hw, rows_per_chunk, s.K, s.N, n_l0)
     t_gemm2 = gemm_time(hw, rows_per_chunk, s.N, s.K)
     chunk_bytes = rows_per_chunk * s.N * s.bytes_per_elt
-    t_hop = HOP_LATENCY_S + chunk_bytes / (hw.link_bw * hw.links)
+    t_hop = hw.hop_latency_s + chunk_bytes / (hw.link_bw * hw.links)
     # backward per-chunk GEMM work: dgrad (dh = dY·w_downᵀ, dX = dh·w_l0ᵀ)
     # + wgrad (dw_down = hᵀ·dY, dw_l0 = xᵀ·dh) ≈ 2× forward. The fused
     # backend's in-VMEM hidden recompute is an extra t_gemm1 charged where
@@ -144,14 +189,30 @@ def legalize_ring_group(ep: int, ring_group: int) -> int:
     return g
 
 
+def legalize_intra_group(ep: int, intra_group: int) -> int:
+    """Largest legal node size ≤ the requested one: clamped to [1, ep] and
+    decremented until it divides ep. Shared by the tuner, the cost model
+    and transport_comet_hier (same convention as legalize_ring_group)."""
+    ep = max(1, ep)
+    ig = max(1, min(int(intra_group), ep))
+    while ep % ig:
+        ig -= 1
+    return ig
+
+
 def legalize_plan(plan: "Plan", d_model: int, ep: int) -> "Plan":
     """Return ``plan`` with executable knobs — what transport_comet_blocks
-    will actually run for this (d_model, ep)."""
+    / transport_comet_hier will actually run for this (d_model, ep).
+    ``intra_group`` is a hier-only knob: hier plans get it legalized
+    against ep, every other transport normalizes it to 1."""
     n = legalize_n_col(d_model, plan.n_col_blocks)
     g = legalize_ring_group(ep, plan.ring_group)
-    if n == plan.n_col_blocks and g == plan.ring_group:
+    ig = (legalize_intra_group(ep, plan.intra_group)
+          if plan.impl == "comet_hier" else 1)
+    if (n, g, ig) == (plan.n_col_blocks, plan.ring_group, plan.intra_group):
         return plan
-    return dataclasses.replace(plan, n_col_blocks=n, ring_group=g)
+    return dataclasses.replace(plan, n_col_blocks=n, ring_group=g,
+                               intra_group=ig)
 
 
 def choose_n_col(hw: Hardware, s: MoEShape, max_blocks: int = 8,
@@ -168,7 +229,7 @@ def choose_n_col(hw: Hardware, s: MoEShape, max_blocks: int = 8,
             continue
         rows = s.M * s.topk / s.ep
         t_blk_gemm = gemm_time(hw, rows, blk, s.K)
-        t_blk_hop = (HOP_LATENCY_S
+        t_blk_hop = (hw.hop_latency_s
                      + rows * blk * s.bytes_per_elt / (hw.link_bw * hw.links))
         if t_blk_hop <= t_blk_gemm * 1.05:
             best = n_col
@@ -271,9 +332,17 @@ def resolve_n_col(mcfg, cfg_d_model: int, tokens_local: int,
 #     two-block whole-graph model (``modeled_graph_step_time``), per-layer
 #     candidates exactly as in v4. v4 and older caches load unchanged —
 #     ``Plan.from_json`` defaults schedule=""/n_slices=1 (per-layer).
-PLAN_CACHE_VERSION = 5
+#   v6 (PR 9) — TOPOLOGY-AWARE plans: the ``comet_hier`` transport (two-
+#     level intra/inter-node ring) joins TRANSPORTS, and plans gained
+#     ``intra_group`` (devices per node on the EP axis; hier-only knob,
+#     stored legalized via the shared ``legalize_intra_group``) and
+#     ``wire_dtype`` (dispatch/combine wire format: fp32 | bf16 |
+#     fp8_e4m3 — non-fp32 only legal on comet_hier). v5 and older caches
+#     load unchanged — ``Plan.from_json`` defaults intra_group=1 /
+#     wire_dtype="fp32" (the flat, full-precision schedule).
+PLAN_CACHE_VERSION = 6
 
-TRANSPORTS = ("naive", "coarse", "comet", "bcast")
+TRANSPORTS = ("naive", "coarse", "comet", "comet_hier", "bcast")
 PLAN_PHASES = ("train", "prefill", "decode")
 
 # what each phase's ranking objective covers (persisted in Plan.objective)
@@ -302,6 +371,11 @@ class Plan:
                                        # (core/schedule.py)
     n_slices: int = 1                  # token micro-slices creating the
                                        # cross-layer overlap freedom
+    intra_group: int = 1               # devices per node on the EP axis
+                                       # (comet_hier two-level ring; 1 on
+                                       # every other transport)
+    wire_dtype: str = "fp32"           # dispatch/combine wire format
+                                       # (comet_hier; fp32 = native bytes)
 
     def to_json(self) -> Dict:
         return dataclasses.asdict(self)
@@ -319,6 +393,7 @@ class Plan:
         # loader skips it) rather than explode deep inside plan resolution
         for f, ty in (("impl", str), ("ring_group", int),
                       ("n_col_blocks", int), ("n_slices", int),
+                      ("intra_group", int), ("wire_dtype", str),
                       ("measured_s", (int, float)),
                       ("t_bwd_s", (int, float))):
             if not isinstance(getattr(plan, f), ty):
@@ -342,6 +417,13 @@ class Plan:
                        f"[1, {MAX_COL_BLOCKS}]")
         if self.ring_group < 1:
             bad.append(f"ring_group {self.ring_group} < 1")
+        if self.intra_group < 1:
+            bad.append(f"intra_group {self.intra_group} < 1")
+        if self.wire_dtype not in WIRE_DTYPES:
+            bad.append(f"wire_dtype {self.wire_dtype!r} not in {WIRE_DTYPES}")
+        elif self.wire_dtype != "fp32" and self.impl != "comet_hier":
+            bad.append(f"wire_dtype {self.wire_dtype!r} requires the "
+                       "comet_hier transport")
         if self.gemm_impl not in ("", "xla", "pallas", "pallas_fused"):
             bad.append(f"unknown gemm_impl {self.gemm_impl!r}")
         if self.phase not in PLAN_PHASES:
@@ -357,12 +439,14 @@ class Plan:
             bad.append("overlap schedule requires comet with >= 2 slices")
         if not bad and d_model is not None and ep is not None:
             lg = legalize_plan(self, d_model, ep)
-            if (lg.n_col_blocks, lg.ring_group) != (self.n_col_blocks,
-                                                    self.ring_group):
+            if ((lg.n_col_blocks, lg.ring_group, lg.intra_group)
+                    != (self.n_col_blocks, self.ring_group,
+                        self.intra_group)):
                 bad.append(
-                    f"knobs ({self.n_col_blocks}, {self.ring_group}) not "
-                    f"legal for d_model={d_model}, ep={ep} (legalize to "
-                    f"({lg.n_col_blocks}, {lg.ring_group}))")
+                    f"knobs ({self.n_col_blocks}, {self.ring_group}, "
+                    f"{self.intra_group}) not legal for d_model={d_model}, "
+                    f"ep={ep} (legalize to ({lg.n_col_blocks}, "
+                    f"{lg.ring_group}, {lg.intra_group}))")
         return bad
 
     def apply(self, mcfg):
@@ -372,7 +456,8 @@ class Plan:
             mcfg, impl=self.impl, ring_group=self.ring_group,
             n_col_blocks=max(1, self.n_col_blocks),
             fused_combine=self.fused_combine, gemm_impl=self.gemm_impl,
-            plan_override=True)
+            intra_group=max(1, self.intra_group),
+            wire_dtype=self.wire_dtype, plan_override=True)
 
 
 def plan_shape(mcfg, d_model: int, tokens_local: int, ep: int,
@@ -550,10 +635,129 @@ def candidate_plans(s: MoEShape, max_col_blocks: int = 8,
                         for ns in (2, 4):
                             yield Plan("comet", rg, n_col, gi, fc,
                                        schedule="overlap", n_slices=ns)
+        # hierarchical variants only where the topology declares real node
+        # structure (1 < intra_group < ep after legalization): a flat
+        # fabric gains nothing and the flat presets stay byte-identical in
+        # the candidate stream. Wire formats are a hier-only knob; fp8 is
+        # enumerated only when this jax can represent it.
+        ig = legalize_intra_group(s.ep, hw.intra_group)
+        if 1 < ig < s.ep:
+            wires = ["fp32", "bf16"]
+            if _fp8_wire_available():
+                wires.append("fp8_e4m3")
+            for rg in rings:
+                for n_col in n_cols:
+                    for fc in (False, True):
+                        for wd in wires:
+                            p = Plan("comet_hier", rg, n_col, gi, fc,
+                                     intra_group=ig, wire_dtype=wd)
+                            if plan_vmem_ok(s, p, hw):
+                                yield p
         if include_bcast:
             p = Plan("bcast", 1, 1, gi)
             if plan_vmem_ok(s, p, hw):
                 yield p
+
+
+# ---------------------------------------------------------------------------
+# Topology-aware hop pricing (the comet_hier two-level ring). One shared
+# overlap formula — ``exposed_comm_from_hops`` — consumes per-sub-step hop
+# times from EITHER the analytical profile below (modeled) or from a census
+# of executed ppermutes (benchmarks/run.py's interpret measurement), so the
+# two exposed-comm figures differ only in where the traffic came from.
+# ---------------------------------------------------------------------------
+
+
+def hier_step_order(ep: int, intra_group: int) -> list:
+    """Sub-step (node_shift, local_shift) sequence of the two-level ring.
+
+    Step 0 is the local chunk. The inter-node steps come FIRST (the slow
+    hops overlap the most remaining compute), the intra-node steps land in
+    the tail where little compute is left to hide them — which is also why
+    the hierarchical ring's unavoidable last-return-hop exposure is priced
+    at the fast class while flat comet pays the slow one."""
+    ep = max(1, ep)
+    ig = legalize_intra_group(ep, intra_group)
+    nn = ep // ig
+    order = [(0, 0)]
+    for sn in range(1, nn):
+        for sl in range(ig):
+            order.append((sn, sl))
+    for sl in range(1, ig):
+        order.append((0, sl))
+    return order
+
+
+def hier_step_classes(ep: int, intra_group: int) -> list:
+    """Per-sub-step link class: "local" | "intra" | "inter"."""
+    out = []
+    for sn, sl in hier_step_order(ep, intra_group):
+        if sn == 0 and sl == 0:
+            out.append("local")
+        elif sn == 0:
+            out.append("intra")
+        else:
+            out.append("inter")
+    return out
+
+
+def link_class_bw(hw: Hardware, cls: str) -> float:
+    """Raw bytes/s of one link class (falls back to the flat link_bw when
+    the topology descriptor leaves a class unset)."""
+    if cls == "intra":
+        return (hw.intra_bw or hw.link_bw) * hw.links
+    return (hw.inter_bw or hw.link_bw) * hw.links
+
+
+def hop_time_profile(hw: Hardware, s: MoEShape, plan: "Plan") -> list:
+    """Per-sub-step one-way hop times (len ep; index 0 = the local chunk,
+    cost 0) for a ring transport. Flat comet pays link_bw on every remote
+    hop; comet_hier prices each hop by its class and shrinks the payload
+    by the wire format (dispatch and combine both ride the wire dtype)."""
+    ep = max(1, s.ep)
+    rows = s.M * s.topk / ep
+    if plan.impl != "comet_hier":
+        t = layer_times(hw, s)["t_hop"]
+        return [0.0] + [t] * (ep - 1)
+    chunk_bytes = rows * s.N * wire_bytes_per_elt(s, plan.wire_dtype)
+    out = []
+    for cls in hier_step_classes(ep, plan.intra_group):
+        if cls == "local":
+            out.append(0.0)
+        else:
+            out.append(hw.hop_latency_s + chunk_bytes / link_class_bw(hw, cls))
+    return out
+
+
+def exposed_comm_from_hops(hop_in: list, hop_out: list, t_comp: float,
+                           ring_group: int) -> float:
+    """Exposed comm of one decomposed ring: pipeline end time minus pure
+    compute, on a three-resource machine (link_in, compute, link_out;
+    in-order FIFO per link — the schedule IR's resource model in
+    miniature). ``hop_in``/``hop_out`` are per-sub-step one-way hop times
+    (index 0 = local, 0.0); ``t_comp`` is one macro-step's GEMM time."""
+    ep = len(hop_in)
+    g = max(1, ring_group)
+    n_steps = max(1, ep // g)
+    t_in = 0.0
+    core = 0.0
+    t_out = 0.0
+    for m in range(n_steps):
+        for j in range(g):
+            t_in += hop_in[m * g + j]
+        core = max(core, t_in) + t_comp
+        for j in range(g):
+            t_out = max(t_out, core) + hop_out[m * g + j]
+    return max(0.0, max(core, t_out) - n_steps * t_comp)
+
+
+def fwd_exposed_comm_time(hw: Hardware, s: MoEShape, plan: "Plan") -> float:
+    """Forward communication NOT hidden behind compute for the ring
+    transports, priced per link class (the hier figure's modeled side)."""
+    hops = hop_time_profile(hw, s, plan)
+    g = max(1, plan.ring_group)
+    t_comp = g * layer_times(hw, s)["t_chunk_compute"]
+    return exposed_comm_from_hops(hops, hops, t_comp, g)
 
 
 def _weight_read_time(hw: Hardware, s: MoEShape, reads: float) -> float:
@@ -585,11 +789,12 @@ def _hidden_traffic_time(hw: Hardware, s: MoEShape, plan: Plan) -> float:
     rows = s.M * s.topk                     # expert rows per device (a2a paths)
     if plan.impl == "bcast":
         rows /= max(1, s.ep)                # each rank only its expert slice
-    n_col = max(1, plan.n_col_blocks) if plan.impl == "comet" else 1
+    n_col = (max(1, plan.n_col_blocks)
+             if plan.impl in ("comet", "comet_hier") else 1)
     if plan.gemm_impl == "pallas_fused":
         n_l0 = 2 if s.glu else 1
         n_steps = max(1, s.ep // max(1, plan.ring_group)) \
-            if plan.impl == "comet" else 1
+            if plan.impl in ("comet", "comet_hier") else 1
         recompute = gemm_time(hw, rows, s.K, s.N, n_l0)
         reread = n_steps * _layer0_weight_bytes(s) / hw.hbm_bw
         return (n_col - 1) * max(recompute, reread)
@@ -602,7 +807,7 @@ def _combine_stage_time(hw: Hardware, s: MoEShape, plan: Plan) -> float:
     the n_col column blocks are concatenated into a full-width
     (M·topk, N) buffer (write + read) before one combine; the streaming
     per-block combine consumes each block in place."""
-    if plan.impl != "comet" or plan.fused_combine \
+    if plan.impl not in ("comet", "comet_hier") or plan.fused_combine \
             or max(1, plan.n_col_blocks) == 1:
         return 0.0
     return 2.0 * s.M * s.topk * s.N * s.bytes_per_elt / hw.hbm_bw
@@ -623,15 +828,15 @@ def hot_path_hbm_bytes(s: MoEShape, plan: Plan) -> int:
     if plan.impl == "bcast":
         rows /= max(1, s.ep)                # matches _hidden_traffic_time
     bpe = s.bytes_per_elt
-    n_col = max(1, plan.n_col_blocks) if plan.impl == "comet" else 1
+    ring = plan.impl in ("comet", "comet_hier")
+    n_col = max(1, plan.n_col_blocks) if ring else 1
     dispatch = 2 * rows * s.N * bpe
     hidden = (0 if plan.gemm_impl == "pallas_fused"
               else rows * s.K * bpe * (1 + n_col))
     out = 2 * rows * s.N * bpe
-    stage = (0 if plan.impl != "comet" or plan.fused_combine or n_col == 1
+    stage = (0 if not ring or plan.fused_combine or n_col == 1
              else 2 * rows * s.N * bpe)
-    n_steps = (max(1, s.ep // max(1, plan.ring_group))
-               if plan.impl == "comet" else 1)
+    n_steps = (max(1, s.ep // max(1, plan.ring_group)) if ring else 1)
     n_mats = (2 if s.glu else 1) + 1
     weights = n_steps * (s.E / max(1, s.ep)) * n_mats * s.N * s.K * bpe
     if plan.gemm_impl == "pallas_fused":
@@ -669,10 +874,19 @@ def modeled_plan_time(hw: Hardware, s: MoEShape, plan: Plan) -> float:
         return t_g + ar + _weight_read_time(hw, s, 1) + extra
     g = max(1, plan.ring_group)
     n_steps = max(1, s.ep // g)
-    t = SIM.sim_comet(hw, s, n_col=max(1, plan.n_col_blocks), tpu=tpu)["total"]
-    # ring_group g: ep/g weight reads (macro-step fusion) but a g-hop
-    # pipeline-fill before the first macro-step can start.
-    fill = (g - 1) * layer_times(hw, s)["t_hop"]
+    if plan.impl == "comet_hier":
+        t = SIM.sim_comet_hier(hw, s, plan,
+                               n_col=max(1, plan.n_col_blocks),
+                               tpu=tpu)["total"]
+        # pipeline fill under macro-step fusion: the first macro-step's
+        # remote sub-steps, priced at their own link classes
+        fill = sum(hop_time_profile(hw, s, plan)[1:g])
+    else:
+        t = SIM.sim_comet(hw, s, n_col=max(1, plan.n_col_blocks),
+                          tpu=tpu)["total"]
+        # ring_group g: ep/g weight reads (macro-step fusion) but a g-hop
+        # pipeline-fill before the first macro-step can start.
+        fill = (g - 1) * layer_times(hw, s)["t_hop"]
     return t + _weight_read_time(hw, s, n_steps) + fill + extra
 
 
@@ -752,6 +966,16 @@ def modeled_plan_time_bwd(hw: Hardware, s: MoEShape, plan: Plan) -> float:
     g = max(1, plan.ring_group)
     n_steps = max(1, s.ep // g)
     t_macro_comp = g * t_chunk_bwd
+    if plan.impl == "comet_hier":
+        # the backward rides the hierarchical permutes at NATIVE width
+        # (gradients are never wire-quantized), dY in + dX out
+        hops = hop_time_profile(
+            hw, s, dataclasses.replace(plan, wire_dtype="fp32"))
+        exposed = exposed_comm_from_hops(hops, hops, t_macro_comp, g)
+        return (n_steps * t_macro_comp + exposed
+                + _dw_accum_time(hw, s, n_steps)
+                + _weight_read_time(hw, s, n_steps)
+                + _bwd_hidden_time(hw, s, plan))
     t_macro_comm = g * 2.0 * lt["t_hop"]               # dY in + dX out
     steady = n_steps * max(t_macro_comp, t_macro_comm)
     fill = min(t_macro_comp, t_macro_comm) + (g - 1) * lt["t_hop"]
@@ -767,6 +991,13 @@ def bwd_exposed_comm_time(hw: Hardware, s: MoEShape, plan: Plan) -> float:
     lt = layer_times(hw, s)
     if plan.impl == "bcast":
         return 0.0
+    if plan.impl == "comet_hier":
+        g = max(1, plan.ring_group)
+        recomp = lt["t_gemm1"] if plan.gemm_impl == "pallas_fused" else 0.0
+        hops = hop_time_profile(
+            hw, s, dataclasses.replace(plan, wire_dtype="fp32"))
+        return exposed_comm_from_hops(hops, hops,
+                                      g * (lt["t_bwd_gemm"] + recomp), g)
     if plan.impl != "comet":
         return 2.0 * s.M * s.topk * s.N * s.bytes_per_elt / _a2a_rate(hw)
     g = max(1, plan.ring_group)
@@ -805,7 +1036,7 @@ def hot_path_hbm_bytes_bwd(s: MoEShape, plan: Plan) -> int:
     saved = rows * s.N * bpe
     hidden = (0 if plan.gemm_impl == "pallas_fused"
               else (1 + n_l0) * rows * s.K * bpe)
-    if plan.impl == "comet":
+    if plan.impl in ("comet", "comet_hier"):
         n_steps = max(1, s.ep // max(1, plan.ring_group))
     else:
         n_steps = 2 if plan.impl == "coarse" else 1
@@ -956,7 +1187,8 @@ def tune_plan(s: MoEShape, hw: Hardware, cache: Optional[PlanCache] = None,
     for p in cands:
         p = legalize_plan(p, s.N, s.ep)
         k = (p.impl, p.ring_group, p.n_col_blocks, p.gemm_impl,
-             p.fused_combine, p.schedule, p.n_slices)
+             p.fused_combine, p.schedule, p.n_slices, p.intra_group,
+             p.wire_dtype)
         if k not in seen:
             seen.add(k)
             uniq.append(p)

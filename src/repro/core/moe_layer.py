@@ -129,19 +129,35 @@ def _moe_body(cfg, mcfg, ctx: AxisCtx, n_col: int, gemm_impl, x, router_w,
                       rot=None, ep=1)
     else:
         send = buf.reshape(ep, E_loc, C, dw)
-        if impl == "comet" and mcfg.fused_combine:
+        if impl in ("comet", "comet_hier") and mcfg.fused_combine:
             # streaming layer-1 consumer: combine each column block as it
             # arrives so the weighted reduction overlaps remaining blocks'
             # compute + return traffic (plan knob ``fused_combine``)
-            blocks, rot = T.transport_comet_blocks(
-                ctx, send, w_local, cfg.activation, n_col_blocks=n_col,
-                ring_group=mcfg.ring_group, gemm_impl=gemm_impl)
+            if impl == "comet_hier":
+                # hier returns blocks already in destination order (rot=None)
+                blocks, rot = T.transport_comet_hier(
+                    ctx, send, w_local, cfg.activation, n_col_blocks=n_col,
+                    ring_group=mcfg.ring_group,
+                    intra_group=mcfg.intra_group,
+                    wire_dtype=mcfg.wire_dtype, gemm_impl=gemm_impl)
+            else:
+                blocks, rot = T.transport_comet_blocks(
+                    ctx, send, w_local, cfg.activation, n_col_blocks=n_col,
+                    ring_group=mcfg.ring_group, gemm_impl=gemm_impl)
             parts = [R.combine(b.reshape(ep * E_loc * C, b.shape[-1]), info,
                                wts, E_loc, C, rot, ep) for b in blocks]
             y = parts[0] if len(parts) == 1 else \
                 jnp.concatenate(parts, axis=-1)
         else:
-            if impl == "comet":
+            if impl == "comet_hier":
+                blocks, rot = T.transport_comet_hier(
+                    ctx, send, w_local, cfg.activation, n_col_blocks=n_col,
+                    ring_group=mcfg.ring_group,
+                    intra_group=mcfg.intra_group,
+                    wire_dtype=mcfg.wire_dtype, gemm_impl=gemm_impl)
+                out = blocks[0] if len(blocks) == 1 else \
+                    jnp.concatenate(blocks, axis=-1)
+            elif impl == "comet":
                 out, rot = T.transport_comet(ctx, send, w_local,
                                              cfg.activation,
                                              n_col_blocks=n_col,

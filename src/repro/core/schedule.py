@@ -366,8 +366,23 @@ def lower_model_graph(hw, s, plan, *, d_model: int, n_blocks: int = 2,
     # one macro-step consumes g source chunks; backend differences (fused
     # recompute vs hidden round trip) live in the lump terms, not here
     t_gemm = grp * lts["t_chunk_compute"]
-    t_dhop = grp * lts["t_hop"]               # g chunks per dispatch wave
-    t_chop = grp * lts["t_hop"] / n_col       # per column block return
+    if plan.impl == "comet_hier":
+        # topology-aware ring: macro-step m's dispatch wave sums its g
+        # sub-step hops from the per-class profile (inter-node sub-steps
+        # first, intra-node tail — core/adaptive.hier_step_order), so the
+        # race detector and whole-graph scheduler see the SAME per-step
+        # asymmetry the transport executes. The backward ring moves
+        # native-width gradients: price its hops with the wire format off.
+        hops = A.hop_time_profile(hw, ss, plan)
+        hops_n = A.hop_time_profile(
+            hw, ss, dataclasses.replace(plan, wire_dtype="fp32"))
+        dhop = [sum(hops[m * grp + j] for j in range(grp))
+                for m in range(n_steps)]
+        bhop = [sum(hops_n[m * grp + j] for j in range(grp))
+                for m in range(n_steps)]
+    else:
+        dhop = [grp * lts["t_hop"]] * n_steps  # g chunks per dispatch wave
+        bhop = dhop
 
     g = ScheduleGraph()
     last_combine: Dict[int, int] = {}         # slice -> sid of final combine
@@ -384,7 +399,7 @@ def lower_model_graph(hw, s, plan, *, d_model: int, n_blocks: int = 2,
                 deps = [prev_recv]
                 if m > 0:
                     d = g.add(f"L{i}.s{j}.disp{m}", "dispatch_hop", i,
-                              deps=[r], cost_s=t_dhop, slice_id=j)
+                              deps=[r], cost_s=dhop[m], slice_id=j)
                     deps.append(d)
                 e = g.add(f"L{i}.s{j}.gemm{m}", "expert_gemm", i,
                           deps=deps, cost_s=t_gemm, slice_id=j)
@@ -392,7 +407,7 @@ def lower_model_graph(hw, s, plan, *, d_model: int, n_blocks: int = 2,
                 for b in range(n_col):
                     combine_done = g.add(
                         f"L{i}.s{j}.comb{m}.{b}", "combine_hop", i,
-                        deps=[e], cost_s=t_chop, slice_id=j)
+                        deps=[e], cost_s=dhop[m] / n_col, slice_id=j)
             last_combine[j] = combine_done
     if training:
         # backward of block i runs MoE-ring-bwd THEN attn_bwd (reverse of
@@ -405,7 +420,6 @@ def lower_model_graph(hw, s, plan, *, d_model: int, n_blocks: int = 2,
                             if plan.gemm_impl == "pallas_fused" else 0.0))
         # (the bwd recompute is NOT in the lump terms — modeled_plan_time_bwd
         # charges it per chunk the same way, so keep it as segment cost)
-        t_bhop = grp * lts["t_hop"]
         t_flush = A._dw_accum_time(hw, s, n_steps) / (n_steps * ns)
         prev_dx: Dict[int, int] = {}          # slice -> upstream grad sid
         for i in reversed(range(n_blocks)):
@@ -415,13 +429,13 @@ def lower_model_graph(hw, s, plan, *, d_model: int, n_blocks: int = 2,
                 dx = up[0]
                 for m in range(n_steps):
                     h = g.add(f"L{i}.s{j}.dyhop{m}", "ring_bwd_hop", i,
-                              deps=up, cost_s=t_bhop, resource="link_in",
+                              deps=up, cost_s=bhop[m], resource="link_in",
                               slice_id=j)
                     deps = [h] if prev_g is None else [h, prev_g]
                     prev_g = g.add(f"L{i}.s{j}.bgemm{m}", "ring_bwd_gemm",
                                    i, deps=deps, cost_s=t_bgemm, slice_id=j)
                     dx = g.add(f"L{i}.s{j}.dxhop{m}", "ring_bwd_hop", i,
-                               deps=[prev_g], cost_s=t_bhop,
+                               deps=[prev_g], cost_s=bhop[m],
                                resource="link_out", slice_id=j)
                     # the flush has NO dependents: it floats into whatever
                     # bubble the scheduler finds (PR 3's deferred dW)

@@ -53,7 +53,9 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.adaptive import legalize_n_col, legalize_ring_group
+from repro.core.adaptive import (WIRE_DTYPES, hier_step_order,
+                                 legalize_intra_group, legalize_n_col,
+                                 legalize_ring_group)
 from repro.models.common import activate, is_glu
 from repro.parallel.mesh import AxisCtx
 
@@ -318,8 +320,19 @@ def comet_ring_segments(ep: int, ring_group: int, n_col_blocks: int) -> dict:
     }
 
 
+def _census_note(census, op: str, x, pairs):
+    """Record one executed ppermute (payload bytes + permutation pairs) in
+    a caller-supplied census list — the interpret-mode traffic measurement
+    benchmarks/run.py prices per link class. An explicit argument, never a
+    module global; None (the default everywhere) records nothing."""
+    if census is not None:
+        census.append({"op": op, "bytes": int(x.size) * x.dtype.itemsize,
+                       "pairs": [list(p) for p in pairs]})
+
+
 def _comet_ring_fwd(ctx: AxisCtx, send, w, activation: str, n_col: int,
-                    blk: int, g: int, gemm_impl: Optional[str]):
+                    blk: int, g: int, gemm_impl: Optional[str],
+                    census=None):
     """The forward ring. Returns (blocks, rows_steps, preacts_steps):
     ``blocks`` is the n_col-tuple of (ep, E_loc, C, blk) streamed column
     blocks; ``rows_steps`` stacks each macro-step's dispatched rows and
@@ -351,7 +364,9 @@ def _comet_ring_fwd(ctx: AxisCtx, send, w, activation: str, n_col: int,
                 if s == 0 and o == 0:
                     recvs.append(to_send)                           # local chunk first
                 else:
-                    recvs.append(lax.ppermute(to_send, ax, _perm(ctx, -s, o)))
+                    pairs = _perm(ctx, -s, o)
+                    _census_note(census, "disp", to_send, pairs)
+                    recvs.append(lax.ppermute(to_send, ax, pairs))
             if etp == 1:
                 chunk_rows.append(recvs[0])                         # (E_loc,C,d)
             else:
@@ -396,8 +411,10 @@ def _comet_ring_fwd(ctx: AxisCtx, send, w, activation: str, n_col: int,
                 if s == 0:
                     col_blocks[b].append(ob_mine)
                 else:
+                    pairs = _perm(ctx, s, 0)
+                    _census_note(census, "comb", ob_mine, pairs)
                     col_blocks[b].append(
-                        lax.ppermute(ob_mine, ax, _perm(ctx, s, 0)))
+                        lax.ppermute(ob_mine, ax, pairs))
 
     blocks = tuple(jnp.stack(cb) for cb in col_blocks)  # n_col × (ep,E_loc,C,blk)
     preacts_steps = None if fused else (
@@ -488,7 +505,7 @@ def _comet_ring_bwd(ctx: AxisCtx, rows_steps, preacts_steps, w, cts,
 def transport_comet_blocks(ctx: AxisCtx, send, w, activation: str,
                            n_col_blocks: int = 1, ring_group: int = 1,
                            gemm_impl: Optional[str] = None,
-                           custom_vjp: bool = True):
+                           custom_vjp: bool = True, census=None):
     """The comet ring, exposing the layer-1 N-decomposition to the caller:
     returns (blocks, rot) where ``blocks`` is a list of ``n_col`` arrays
     (ep, E_loc, C, blk) — column block b of every chunk's expert output —
@@ -558,7 +575,7 @@ def transport_comet_blocks(ctx: AxisCtx, send, w, activation: str,
 
     if not custom_vjp:
         blocks, _, _ = _comet_ring_fwd(ctx, send, w, activation, n_col, blk,
-                                       g, gemm_impl)
+                                       g, gemm_impl, census=census)
         return list(blocks), rot
 
     send_shape, send_dtype = send.shape, send.dtype
@@ -603,6 +620,382 @@ def transport_comet(ctx: AxisCtx, send, w, activation: str,
 def _dyn_chunk(send, g):
     """send: (ep, E_loc, C, d); g traced -> (E_loc, C, d)."""
     return lax.dynamic_index_in_dim(send, g, axis=0, keepdims=False)
+
+
+# ---------------------------------------------------------------------------
+# comet_hier: the two-level (intra-node × inter-node) decomposed ring, with
+# an optional low-precision wire format for dispatch payloads and combine
+# partials.
+#
+# The EP axis is factored as ep = n_nodes × intra_group (rank r -> node
+# r // intra_group, local slot r % intra_group). Every hop either stays
+# inside a node (both endpoints share the node index — the fast NVLink/ICI
+# class) or crosses nodes (the slow RDMA/DCN class); a flat comet shift
+# s >= 1 always has SOME cross-node pair when intra_group < ep, so a flat
+# ppermute completes at the slow class on every remote step. The two-level
+# ring instead decomposes each shift into (node_shift, local_shift): of the
+# ep-1 remote sub-steps, intra_group-1 are pure intra-node. Sub-steps run
+# inter-node FIRST (core/adaptive.hier_step_order) so the slow hops overlap
+# the most remaining compute and the cheap intra hops land in the tail.
+# Per-chunk GEMM overlap, ring_group macro-step fusion, the streamed
+# per-column-block combine and the custom-VJP backward ring all mirror the
+# flat comet schedule — only the permutations (and the wire bytes) change.
+#
+# Wire format (``wire_dtype``): dispatch chunks are quantized ONCE from the
+# pre-ring buffer (so the bytes of a chunk are identical no matter which
+# sub-step carries it — the rotation-determinism the tests assert) and
+# dequantized in fp32 on receive; each combine partial is quantized once
+# before its single return hop. Gradients are NEVER wire-quantized: the
+# backward ring moves native-width dY/dX and is the gradient of the
+# UNQUANTIZED math (straight-through, the standard estimator).
+# ---------------------------------------------------------------------------
+
+_FP8_WIRE_MAX = 448.0                  # |max finite| of float8_e4m3fn
+_FP8_WIRE_OK = hasattr(jnp, "float8_e4m3fn")
+
+
+def wire_dtype_supported(wire_dtype: str) -> bool:
+    return wire_dtype in WIRE_DTYPES and (
+        wire_dtype != "fp8_e4m3" or _FP8_WIRE_OK)
+
+
+def _wire_encode(x, wire_dtype: str, per_chunk: bool = False):
+    """Quantize a payload for the wire. Returns (payload, scale) — scale is
+    None for the scale-free formats. ``per_chunk=True`` keeps one symmetric
+    scale per leading-axis chunk (the dispatch buffer's ep chunks);
+    otherwise one scale covers the tensor (a single combine partial). The
+    fp8 path is optim/compression.py's symmetric-amax scheme at fp8 range."""
+    if wire_dtype == "fp32":           # identity: native payload dtype
+        return x, None
+    if wire_dtype == "bf16":
+        return x.astype(jnp.bfloat16), None
+    assert wire_dtype == "fp8_e4m3", wire_dtype
+    xf = x.astype(jnp.float32)
+    axes = tuple(range(1, x.ndim)) if per_chunk else tuple(range(x.ndim))
+    amax = jnp.max(jnp.abs(xf), axis=axes, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / _FP8_WIRE_MAX
+    q = jnp.clip(xf / scale, -_FP8_WIRE_MAX, _FP8_WIRE_MAX)
+    return q.astype(jnp.float8_e4m3fn), scale
+
+
+def _wire_decode(payload, scale, out_dtype):
+    """Dequantize a received payload: the scale multiply runs in fp32 (the
+    documented fp32-accumulation point) before the cast to ``out_dtype``."""
+    if scale is None:
+        return payload.astype(out_dtype)
+    return (payload.astype(jnp.float32) * scale).astype(out_dtype)
+
+
+def _hier_perm(ctx: AxisCtx, ig: int, node_shift: int, loc_shift: int,
+               tp_shift: int):
+    """Permutation over the model axis with the EP group index factored as
+    (node, local): (node, loc, t) -> ((node+node_shift) % n_nodes,
+    (loc+loc_shift) % ig, (t+tp_shift) % etp)."""
+    W, etp, ep = ctx.world, ctx.etp, ctx.ep
+    nn = ep // ig
+    pairs = []
+    for r in range(W):
+        grp, t = r // etp, r % etp
+        nd, lc = grp // ig, grp % ig
+        dg = ((nd + node_shift) % nn) * ig + (lc + loc_shift) % ig
+        pairs.append((r, dg * etp + (t + tp_shift) % etp))
+    return pairs
+
+
+def _hier_dst(g_r, sn: int, sl: int, ig: int, nn: int):
+    """Chunk slot this rank dispatches at hier sub-step (sn, sl): the
+    destination group reached by shifting -sn nodes / -sl local slots.
+    ``g_r`` is the (traced) EP group index."""
+    return ((g_r // ig - sn) % nn) * ig + (g_r % ig - sl) % ig
+
+
+def comet_hier_segments(ep: int, ring_group: int, n_col_blocks: int,
+                        intra_group: int) -> dict:
+    """Segment counts of one hierarchical forward ring. The loop structure
+    (macro-steps, dispatch hops, combine hops) is IDENTICAL to the flat
+    ring — the hierarchy re-routes hops, it does not add or remove any —
+    plus the per-class split the topology cost model prices."""
+    seg = comet_ring_segments(ep, ring_group, n_col_blocks)
+    ig = legalize_intra_group(ep, intra_group)
+    seg["intra_hops"] = ig - 1
+    seg["inter_hops"] = max(0, ep - ig)
+    return seg
+
+
+def _comet_hier_fwd(ctx: AxisCtx, send, w, activation: str, n_col: int,
+                    blk: int, g: int, ig: int, wire_dtype: str,
+                    gemm_impl: Optional[str], census=None):
+    """The hierarchical forward ring. Identical schedule to
+    ``_comet_ring_fwd`` — per macro-step: receive g chunks, one GroupGEMM,
+    stream n_col column blocks back — but every permute decomposes into the
+    two-level (node_shift, local_shift) map and payloads ride the wire
+    format. Returns (blocks, rows_steps, preacts_steps) with ``blocks`` in
+    HIER SUB-STEP order (the wrapper reorders to destination order)."""
+    ep, E_loc, C, d = send.shape
+    ax = ctx.model_axis
+    etp = ctx.etp
+    nn = ep // ig
+    n_steps = ep // g
+    r = lax.axis_index(ax)
+    g_r = r // etp
+    t_r = r % etp
+    fused = _impl(gemm_impl) == "pallas_fused"
+    shifts = hier_step_order(ep, ig)
+
+    # quantize ALL dispatch chunks once, before any permute: the bytes of a
+    # chunk are the same no matter which sub-step (or link class) carries
+    # it, and the per-chunk scales travel with their payloads
+    pay, scales = _wire_encode(send, wire_dtype, per_chunk=True)
+
+    col_blocks: List[List[jnp.ndarray]] = [[] for _ in range(n_col)]
+    rows_steps = []
+    gate_steps, up_steps = [], []
+    for step in range(n_steps):
+        # ---- dispatch: receive g source groups' chunks ---------------------
+        chunk_rows = []
+        for j in range(g):
+            s = step * g + j
+            sn, sl = shifts[s]
+            hd = _hier_dst(g_r, sn, sl, ig, nn)
+            to_send = _dyn_chunk(pay, hd)                           # (E_loc,C,d)
+            sc = None if scales is None else _dyn_chunk(scales, hd)
+            recvs = []
+            for o in range(etp):
+                if s == 0 and o == 0:
+                    recvs.append(_wire_decode(to_send, sc, send.dtype))
+                else:
+                    pairs = _hier_perm(ctx, ig, -sn, -sl, o)
+                    _census_note(census, "disp", to_send, pairs)
+                    got = lax.ppermute(to_send, ax, pairs)
+                    gsc = (None if sc is None
+                           else lax.ppermute(sc, ax, pairs))
+                    recvs.append(_wire_decode(got, gsc, send.dtype))
+            if etp == 1:
+                chunk_rows.append(recvs[0])                         # (E_loc,C,d)
+            else:
+                stacked = jnp.stack(recvs)                          # (etp,E_loc,C,d)
+                order = (t_r - jnp.arange(etp)) % etp
+                by_u = jnp.take(stacked, order, axis=0)
+                chunk_rows.append(
+                    by_u.transpose(1, 0, 2, 3).reshape(E_loc, etp * C, d))
+        rows = (chunk_rows[0] if g == 1 else
+                jnp.concatenate(chunk_rows, axis=1))   # (E_loc, g*etp*C, d)
+        rows_steps.append(rows)
+
+        # ---- macro-step expert MLP, N-decomposed ---------------------------
+        Rc = etp * C
+        if fused:
+            obs = mlp_col_blocks(rows, w, activation, n_col, blk, gemm_impl)
+        else:
+            gate, up = _mlp_preacts(rows, w, activation, gemm_impl)
+            h = activate(activation, gate, up)
+            obs = [expert_gemm2(h, w, (b * blk, blk), gemm_impl)
+                   for b in range(n_col)]
+            if gate is not None:
+                gate_steps.append(gate)
+            up_steps.append(up)
+        for b, ob in enumerate(obs):
+            ob = _etp_psum(ctx, ob)                     # (E_loc, g*Rc, blk)
+            for j in range(g):
+                s = step * g + j
+                sn, sl = shifts[s]
+                obj = lax.slice_in_dim(ob, j * Rc, (j + 1) * Rc, axis=1)
+                if etp > 1:
+                    ob_u = obj.reshape(E_loc, etp, C, blk)
+                    ob_mine = jnp.take(ob_u, t_r, axis=1)           # (E_loc,C,blk)
+                else:
+                    ob_mine = obj
+                if s == 0:
+                    col_blocks[b].append(ob_mine)
+                else:
+                    # one combine partial = one hop: quantize once before
+                    # its return permute, dequantize (fp32 multiply) on
+                    # arrival — combine accumulation order is untouched
+                    pb, psc = _wire_encode(ob_mine, wire_dtype)
+                    pairs = _hier_perm(ctx, ig, sn, sl, 0)
+                    _census_note(census, "comb", pb, pairs)
+                    got = lax.ppermute(pb, ax, pairs)
+                    gsc = (None if psc is None
+                           else lax.ppermute(psc, ax, pairs))
+                    col_blocks[b].append(
+                        _wire_decode(got, gsc, ob_mine.dtype))
+
+    blocks = tuple(jnp.stack(cb) for cb in col_blocks)  # n_col × (ep,E_loc,C,blk)
+    preacts_steps = None if fused else (
+        jnp.stack(gate_steps) if gate_steps else None, jnp.stack(up_steps))
+    return blocks, jnp.stack(rows_steps), preacts_steps
+
+
+def _comet_hier_bwd(ctx: AxisCtx, rows_steps, preacts_steps, w, cts,
+                    activation: str, n_col: int, blk: int, g: int, ig: int,
+                    send_shape, send_dtype, gemm_impl: Optional[str]):
+    """The hierarchical backward ring — ``_comet_ring_bwd`` on the
+    two-level permutes. ``cts`` arrive in HIER SUB-STEP order (the
+    destination-order reorder lives OUTSIDE the custom_vjp, so autodiff
+    transposes it before this runs). dY rides the inverse return permutes,
+    dX the inverse dispatch permutes, both at NATIVE width — gradients are
+    never wire-quantized (straight-through w.r.t. the wire format)."""
+    ep, E_loc, C, d = send_shape
+    ax = ctx.model_axis
+    etp = ctx.etp
+    nn = ep // ig
+    n_steps = ep // g
+    Rc = etp * C
+    r = lax.axis_index(ax)
+    g_r = r // etp
+    t_r = r % etp
+    shifts = hier_step_order(ep, ig)
+
+    d_send = jnp.zeros(send_shape, send_dtype)
+    dw_acc: Dict[str, jnp.ndarray] = {
+        k: jnp.zeros(v.shape, jnp.float32) for k, v in w.items()}
+    for step in range(n_steps):
+        # ---- dY: inverse return-permutes, per column block ----------------
+        dys = []
+        for b in range(n_col):
+            parts = []
+            for j in range(g):
+                s = step * g + j
+                sn, sl = shifts[s]
+                dy_src = cts[b][s]                      # (E_loc, C, blk)
+                if s == 0:
+                    dy_j = dy_src
+                else:
+                    dy_j = lax.ppermute(dy_src, ax,
+                                        _hier_perm(ctx, ig, -sn, -sl, 0))
+                if etp > 1:
+                    full = jnp.zeros((E_loc, etp, C, blk), dy_j.dtype)
+                    dy_j = full.at[:, t_r].set(dy_j).reshape(E_loc, Rc, blk)
+                parts.append(dy_j if etp > 1 else dy_j.reshape(E_loc, C, blk))
+            dy_b = parts[0] if g == 1 else jnp.concatenate(parts, axis=1)
+            if etp > 1:
+                dy_b = lax.psum(dy_b, ax, axis_index_groups=ctx.etp_groups())
+            dys.append(dy_b)                            # (E_loc, g*Rc, blk)
+
+        # ---- per-chunk dgrad + wgrad ---------------------------------------
+        rows = rows_steps[step]                         # (E_loc, g*Rc, d)
+        preacts = None if preacts_steps is None else (
+            None if preacts_steps[0] is None else preacts_steps[0][step],
+            preacts_steps[1][step])
+        d_rows, dw = _mlp_bwd(rows, w, activation, dys, blk, gemm_impl,
+                              preacts)
+        for k in dw_acc:
+            dw_acc[k] = dw_acc[k] + dw[k].astype(jnp.float32)
+
+        # ---- dX: inverse dispatch permutes back to the source -------------
+        for j in range(g):
+            s = step * g + j
+            sn, sl = shifts[s]
+            dcr = lax.slice_in_dim(d_rows, j * Rc, (j + 1) * Rc, axis=1)
+            if etp > 1:
+                by_u = dcr.reshape(E_loc, etp, C, d)
+            arrivals = None
+            for o in range(etp):
+                if etp > 1:
+                    piece = jnp.take(by_u, (t_r - o) % etp, axis=1)
+                else:
+                    piece = dcr
+                if s == 0 and o == 0:
+                    got = piece
+                else:
+                    got = lax.ppermute(piece, ax,
+                                       _hier_perm(ctx, ig, sn, sl, -o))
+                arrivals = got if arrivals is None else arrivals + got
+            d_send = lax.dynamic_update_index_in_dim(
+                d_send, arrivals.astype(send_dtype),
+                _hier_dst(g_r, sn, sl, ig, nn), axis=0)
+    return d_send, _cast_like(dw_acc, w)
+
+
+def _hier_dest_order(g_r, ep: int, ig: int):
+    """Traced index array mapping destination order to hier sub-step order:
+    ``order[dest]`` = the sub-step whose shift carried this rank's chunk
+    for destination group ``dest`` (the inverse of ``_hier_dst`` under the
+    ``hier_step_order`` enumeration)."""
+    nn = ep // ig
+    dd = jnp.arange(ep)
+    sn = (g_r // ig - dd // ig) % nn
+    sl = (g_r % ig - dd % ig) % ig
+    return jnp.where(sn == 0,
+                     jnp.where(sl == 0, 0, (nn - 1) * ig + sl),
+                     (sn - 1) * ig + sl + 1)
+
+
+def transport_comet_hier(ctx: AxisCtx, send, w, activation: str,
+                         n_col_blocks: int = 1, ring_group: int = 1,
+                         intra_group: int = 1, wire_dtype: str = "fp32",
+                         gemm_impl: Optional[str] = None,
+                         custom_vjp: bool = True, census=None):
+    """The fifth transport: comet's decomposed schedule on the two-level
+    intra/inter-node ring with an optional low-precision wire format (see
+    the section comment above). Returns (blocks, rot) exactly like
+    ``transport_comet_blocks``, with ``rot=None``: the streamed column
+    blocks are reordered on-rank into DESTINATION order (slot s holds the
+    output of this rank's tokens for destination group s), so ``combine``
+    consumes them with its naive-order slot map unchanged.
+
+    ``intra_group``/``wire_dtype`` are plan knobs (plan cache v6),
+    legalized/validated here with the SAME shared helpers the tuner uses
+    (``legalize_intra_group``; ``WIRE_DTYPES``)."""
+    ep, E_loc, C, d = send.shape
+    if not wire_dtype_supported(wire_dtype):
+        raise ValueError(
+            f"wire_dtype {wire_dtype!r} not supported here (known: "
+            f"{WIRE_DTYPES}; fp8_e4m3 needs a jax with float8_e4m3fn)")
+
+    n_col = legalize_n_col(d, n_col_blocks)
+    blk = d // n_col
+
+    if not ctx.active or ctx.world == 1:
+        # Single-rank degenerate path: no hop crosses a wire, but the wire
+        # QUANTIZATION must still apply (numerics match a real mesh run) —
+        # straight-through, mirroring the mesh backward's unquantized ring.
+        if wire_dtype != "fp32":
+            pay, sc = _wire_encode(send, wire_dtype, per_chunk=True)
+            deq = _wire_decode(pay, sc, send.dtype)
+            send = send + lax.stop_gradient(deq - send)
+        return transport_comet_blocks(ctx, send, w, activation,
+                                      n_col_blocks=n_col_blocks,
+                                      ring_group=ring_group,
+                                      gemm_impl=gemm_impl,
+                                      custom_vjp=custom_vjp)
+
+    g = legalize_ring_group(ep, ring_group)
+    ig = legalize_intra_group(ep, intra_group)
+    ax = ctx.model_axis
+    g_r = lax.axis_index(ax) // ctx.etp
+    order = _hier_dest_order(g_r, ep, ig)
+
+    if not custom_vjp:
+        blocks, _, _ = _comet_hier_fwd(ctx, send, w, activation, n_col, blk,
+                                       g, ig, wire_dtype, gemm_impl,
+                                       census=census)
+        return [jnp.take(bk, order, axis=0) for bk in blocks], None
+
+    send_shape, send_dtype = send.shape, send.dtype
+
+    @jax.custom_vjp
+    def ring(send_, w_):
+        blocks, _, _ = _comet_hier_fwd(ctx, send_, w_, activation, n_col,
+                                       blk, g, ig, wire_dtype, gemm_impl)
+        return blocks
+
+    def ring_fwd(send_, w_):
+        blocks, rows_steps, preacts_steps = _comet_hier_fwd(
+            ctx, send_, w_, activation, n_col, blk, g, ig, wire_dtype,
+            gemm_impl)
+        return blocks, (rows_steps, preacts_steps, w_)
+
+    def ring_bwd(res, cts):
+        rows_steps, preacts_steps, w_ = res
+        return _comet_hier_bwd(ctx, rows_steps, preacts_steps, w_, cts,
+                               activation, n_col, blk, g, ig, send_shape,
+                               send_dtype, gemm_impl)
+
+    ring.defvjp(ring_fwd, ring_bwd)
+    # the destination-order reorder stays OUTSIDE the custom_vjp: autodiff
+    # transposes the take, so the backward ring sees sub-step-order cts
+    return [jnp.take(bk, order, axis=0) for bk in ring(send, w)], None
 
 
 # ---------------------------------------------------------------------------

@@ -392,7 +392,7 @@ def test_plan_cache_v2_roundtrip_compat(tmp_path):
     re = A.PlanCache(path)
     assert re.get(s, A.TPU_V5E) == plan
     with open(path) as f:
-        assert json.load(f)["version"] == A.PLAN_CACHE_VERSION == 5
+        assert json.load(f)["version"] == A.PLAN_CACHE_VERSION == 6
 
 
 # ---------------------------------------------------------------------------

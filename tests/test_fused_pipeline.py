@@ -362,7 +362,7 @@ def test_plan_cache_v3_roundtrip_with_fused_fields(tmp_path):
     assert plan.objective == "fwd_bwd" and plan.t_bwd_s > 0
     with open(path) as f:
         raw = json.load(f)
-    assert raw["version"] == A.PLAN_CACHE_VERSION == 5
+    assert raw["version"] == A.PLAN_CACHE_VERSION == 6
     entry = raw["plans"][A.PlanCache.key(s, A.TPU_V5E)]
     assert "fused_combine" in entry and "gemm_impl" in entry
     assert "t_bwd_s" in entry and "objective" in entry

@@ -1,0 +1,431 @@
+"""PR 9: topology-aware hierarchical comet ring + low-precision wire format.
+
+Covers the new ``comet_hier`` transport end to end: candidate→legalize→
+execute round trip (no re-legalization drift, generalizing the PR 3
+fixed-point test to EVERY transport), wire-format rotation determinism,
+plan-cache v5→v6 load compatibility, topology cost-model properties, and
+single-device + 8-simulated-device numerical equivalence against naive.
+"""
+import dataclasses
+import json
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core import adaptive as A
+from repro.core import transport as T
+from repro.core.moe_layer import moe_ffn
+from repro.parallel.mesh import AxisCtx
+from tests._hypothesis_compat import given, settings, st
+
+
+def _problem(E=8, d=64, f=32, B=2, S=16, k=2, seed=0):
+    cfg = get_config("granite-moe-3b-a800m-smoke")
+    cfg = dataclasses.replace(cfg, d_model=d)
+    mcfg = dataclasses.replace(cfg.moe, num_experts=E, d_expert=f, top_k=k,
+                               capacity_factor=float(E))
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    full = {
+        "w_gate": jax.random.normal(ks[0], (E, d, f), jnp.float32) * 0.05,
+        "w_up": jax.random.normal(ks[1], (E, d, f), jnp.float32) * 0.05,
+        "w_down": jax.random.normal(ks[2], (E, f, d), jnp.float32) * 0.05,
+    }
+    params = {"router": jax.random.normal(ks[3], (d, E), jnp.float32) * 0.1,
+              "experts": {kk: v[None] for kk, v in full.items()}}
+    x = jax.random.normal(ks[4], (B, S, d), jnp.float32)
+    return cfg, mcfg, params, x
+
+
+# ---------------------------------------------------------------------------
+# the two-level ring's step bookkeeping
+# ---------------------------------------------------------------------------
+
+
+def test_hier_step_order_covers_every_group_shift():
+    """The (node_shift, local_shift) enumeration visits every EP group
+    exactly once, local first, inter-node block before the intra tail."""
+    for ep, ig in ((8, 4), (8, 2), (16, 4), (6, 3), (8, 1), (4, 4)):
+        ig_l = A.legalize_intra_group(ep, ig)
+        nn = ep // ig_l
+        order = A.hier_step_order(ep, ig)
+        assert len(order) == ep
+        assert order[0] == (0, 0)
+        # bijective onto group shifts
+        shifts = {(sn * ig_l + sl) for sn, sl in
+                  ((sn % nn, sl % ig_l) for sn, sl in order)}
+        assert shifts == set(range(ep))
+        classes = A.hier_step_classes(ep, ig)
+        assert classes[0] == "local"
+        n_intra = sum(c == "intra" for c in classes)
+        n_inter = sum(c == "inter" for c in classes)
+        assert n_intra == ig_l - 1 and n_inter == ep - ig_l
+        # inter block strictly precedes the intra tail
+        if n_intra and n_inter:
+            assert classes[1:1 + n_inter] == ["inter"] * n_inter
+            assert classes[1 + n_inter:] == ["intra"] * n_intra
+
+
+@given(ep=st.integers(min_value=1, max_value=64),
+       ig=st.integers(min_value=-4, max_value=128))
+@settings(max_examples=200, deadline=None)
+def test_legalize_intra_group_properties(ep, ig):
+    out = A.legalize_intra_group(ep, ig)
+    assert 1 <= out <= ep and ep % out == 0
+    # idempotent, and a fixed point when already legal
+    assert A.legalize_intra_group(ep, out) == out
+
+
+def test_hier_segments_match_flat_counts():
+    """The hierarchy re-routes hops, it never adds or removes any."""
+    flat = T.comet_ring_segments(8, 2, 4)
+    hier = T.comet_hier_segments(8, 2, 4, intra_group=4)
+    for k, v in flat.items():
+        assert hier[k] == v
+    assert hier["intra_hops"] == 3 and hier["inter_hops"] == 4
+
+
+# ---------------------------------------------------------------------------
+# candidate -> legalize -> execute round trip (generalizes the PR 3
+# fixed-point test: EVERY emitted (transport, knobs) pair must be a
+# legalization fixed point AND run through moe_layer unchanged)
+# ---------------------------------------------------------------------------
+
+
+def test_every_candidate_is_executable_after_legalize():
+    cfg, mcfg, params, x = _problem()
+    s = A.MoEShape(M=32, N=cfg.d_model, K=mcfg.d_expert, E=8, topk=2,
+                   ep=8, etp=1)
+    y_ref, _ = moe_ffn(cfg, dataclasses.replace(mcfg, impl="naive"),
+                       params, x, AxisCtx())
+    cands = list(A.candidate_plans(s, hw=A.H100_CROSSNODE))
+    impls = {p.impl for p in cands}
+    assert "comet_hier" in impls        # asymmetric preset enumerates hier
+    seen = set()
+    for p in cands:
+        lp = A.legalize_plan(p, s.N, s.ep)
+        # no re-legalization drift: what the tuner ranks IS what runs
+        assert A.legalize_plan(lp, s.N, s.ep) == lp
+        key = (lp.impl, lp.ring_group, lp.n_col_blocks, lp.intra_group,
+               lp.wire_dtype, lp.fused_combine)
+        if key in seen or lp.gemm_impl != "xla":
+            continue                    # pallas variants differ only in
+        seen.add(key)                   # backend; interpret mode is slow
+        m2 = dataclasses.replace(
+            lp.apply(mcfg), gemm_impl="", plan_cache="")
+        y, _ = moe_ffn(cfg, m2, params, x, AxisCtx(),
+                       n_col=max(1, lp.n_col_blocks))
+        assert bool(jnp.all(jnp.isfinite(y))), key
+        if lp.wire_dtype == "fp32":
+            np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                       rtol=1e-5, atol=1e-5,
+                                       err_msg=str(key))
+
+
+def test_flat_preset_candidate_stream_has_no_hier():
+    s = A.MoEShape(M=4096, N=4096, K=14336, E=8, topk=2, ep=8, etp=1)
+    impls = {p.impl for p in A.candidate_plans(s, hw=A.TPU_V5E)}
+    assert impls == {"naive", "coarse", "comet", "bcast"}
+
+
+def test_wire_dtype_is_hier_only():
+    assert A.Plan("comet", wire_dtype="bf16").validate()
+    assert not A.Plan("comet_hier", intra_group=2,
+                      wire_dtype="bf16").validate()
+    assert A.Plan("comet_hier", wire_dtype="nope").validate()
+
+
+# ---------------------------------------------------------------------------
+# wire format: quantize-once determinism + accumulation dtype
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("wire", ["bf16", "fp8_e4m3"])
+def test_wire_payload_bit_identical_across_rotations(wire):
+    """Dispatch chunks are quantized ONCE before any permute, so the bytes
+    of chunk c must be identical no matter which ring rotation carries it:
+    encode(roll(send)) == roll(encode(send)) bit-for-bit."""
+    if wire == "fp8_e4m3" and not T.wire_dtype_supported(wire):
+        pytest.skip("no float8_e4m3fn in this jax")
+    send = jax.random.normal(jax.random.PRNGKey(3), (8, 2, 4, 16),
+                             jnp.float32)
+    pay, sc = T._wire_encode(send, wire, per_chunk=True)
+    for rot in (1, 3, 5):
+        pay_r, sc_r = T._wire_encode(jnp.roll(send, rot, axis=0), wire,
+                                     per_chunk=True)
+        same = np.array_equal(
+            np.asarray(pay_r).view(np.uint8),
+            np.asarray(jnp.roll(pay, rot, axis=0)).view(np.uint8))
+        assert same, f"rotation {rot} changed {wire} wire bytes"
+        if sc is not None:
+            np.testing.assert_array_equal(
+                np.asarray(sc_r), np.asarray(jnp.roll(sc, rot, axis=0)))
+
+
+def test_wire_decode_accumulates_in_fp32():
+    """fp8 dequant must multiply in fp32 before the output cast — the
+    documented fp32-accumulation contract."""
+    if not T.wire_dtype_supported("fp8_e4m3"):
+        pytest.skip("no float8_e4m3fn in this jax")
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(4, 8)) * 3.0,
+                    jnp.float32)
+    pay, sc = T._wire_encode(x, "fp8_e4m3")
+    assert pay.dtype == jnp.float8_e4m3fn and sc.dtype == jnp.float32
+    out = T._wire_decode(pay, sc, jnp.float32)
+    assert out.dtype == jnp.float32
+    # e4m3 has a 3-bit mantissa: relative error bounded by 2^-3 per element
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x),
+                               rtol=2 ** -3, atol=1e-6)
+    # fp32 and bf16 wires carry no scale
+    for wd in ("fp32", "bf16"):
+        _, s0 = T._wire_encode(x, wd)
+        assert s0 is None
+
+
+def test_unsupported_wire_dtype_raises():
+    cfg, mcfg, params, x = _problem()
+    with pytest.raises(ValueError, match="wire_dtype"):
+        T.transport_comet_hier(AxisCtx(), jnp.zeros((1, 8, 4, 64)),
+                               {k: v[0] for k, v in
+                                params["experts"].items()},
+                               cfg.activation, wire_dtype="int3")
+
+
+# ---------------------------------------------------------------------------
+# plan cache v5 -> v6
+# ---------------------------------------------------------------------------
+
+
+def test_plan_cache_v5_file_loads_into_v6(tmp_path):
+    """A v5 cache FILE (no intra_group/wire_dtype keys, version: 5) loads
+    compatibly; a v6 save round-trips the new knobs."""
+    key = "tpu_v5e:M1024:N2048:K1408:E8:k2:ep8:etp1"
+    v5_entry = {"impl": "comet", "ring_group": 2, "n_col_blocks": 2,
+                "gemm_impl": "xla", "fused_combine": True,
+                "measured_s": 1e-3, "source": "model"}
+    p = tmp_path / "v5.json"
+    p.write_text(json.dumps({"version": 5, "plans": {key: v5_entry}}))
+    cache = A.PlanCache(str(p))
+    assert key in cache.plans
+    plan = cache.plans[key]
+    assert plan.intra_group == 1 and plan.wire_dtype == "fp32"
+
+    # round-trip a hier plan through a v6 save
+    hier = A.Plan("comet_hier", 2, 2, "xla", intra_group=4,
+                  wire_dtype="fp8_e4m3", measured_s=2e-3)
+    key2 = "h100_crossnode:M1024:N2048:K1408:E8:k2:ep8:etp1"
+    cache.plans[key2] = hier
+    out = tmp_path / "v6.json"
+    cache.path = str(out)
+    cache.save()
+    raw = json.loads(out.read_text())
+    assert raw["version"] == 6
+    cache2 = A.PlanCache(str(out))
+    assert cache2.plans[key2] == hier
+    assert cache2.plans[key] == plan
+
+
+# ---------------------------------------------------------------------------
+# topology cost model
+# ---------------------------------------------------------------------------
+
+
+def test_modeled_exposed_comm_hier_strictly_below_flat():
+    """On the asymmetric preset the hierarchical ring's modeled exposed
+    comm must be STRICTLY below flat comet — for a comm-bound shape AND a
+    compute-bound one (the intra-class tail keeps the last return hop
+    cheap even when hops otherwise hide behind GEMMs)."""
+    hw = A.H100_CROSSNODE
+    shapes = [A.MoEShape(M=2048, N=2048, K=1408, E=64, topk=4, ep=8, etp=1),
+              A.MoEShape(M=4096, N=4096, K=14336, E=8, topk=2, ep=8, etp=1)]
+    for s in shapes:
+        flat = A.fwd_exposed_comm_time(hw, s, A.Plan("comet", 1, 1))
+        hier = A.fwd_exposed_comm_time(
+            hw, s, A.Plan("comet_hier", 1, 1, intra_group=4))
+        assert hier < flat, (s.K, hier, flat)
+        # bwd side too
+        fb = A.bwd_exposed_comm_time(hw, s, A.Plan("comet", 1, 1))
+        hb = A.bwd_exposed_comm_time(
+            hw, s, A.Plan("comet_hier", 1, 1, intra_group=4))
+        assert hb <= fb, (s.K, hb, fb)
+
+
+def test_hop_latency_is_a_hardware_field():
+    """HOP_LATENCY_S was promoted to Hardware.hop_latency_s; the presets
+    keep the historical value and the cost model reads the field."""
+    assert A.TPU_V5E.hop_latency_s == A.HOP_LATENCY_S == 5e-6
+    hw_slow = dataclasses.replace(A.TPU_V5E, hop_latency_s=50e-6)
+    s = A.MoEShape(M=1024, N=2048, K=1408, E=8, topk=2, ep=8, etp=1)
+    assert (A.layer_times(hw_slow, s)["t_hop"]
+            > A.layer_times(A.TPU_V5E, s)["t_hop"])
+
+
+def test_flat_presets_price_flat():
+    """Default (flat) Hardware descriptors leave the two link classes at
+    link_bw, so flat pricing is unchanged by the topology machinery."""
+    s = A.MoEShape(M=1024, N=2048, K=1408, E=8, topk=2, ep=8, etp=1)
+    hops = A.hop_time_profile(A.TPU_V5E, s, A.Plan("comet", 1, 1))
+    t = A.layer_times(A.TPU_V5E, s)["t_hop"]
+    assert hops == [0.0] + [t] * 7
+
+
+def test_tune_cli_unknown_hw_lists_presets():
+    import os
+    root = os.path.join(os.path.dirname(__file__), "..")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    r = subprocess.run(
+        [sys.executable, os.path.join(root, "tools", "tune.py"),
+         "--hw", "not_a_preset"],
+        capture_output=True, text=True, timeout=120, env=env)
+    assert r.returncode != 0
+    err = r.stderr
+    assert "not_a_preset" in err
+    for name in ("tpu_v5e", "h100_crossnode"):
+        assert name in err
+    assert "intra_bw" in err and "intra_group" in err
+
+
+# ---------------------------------------------------------------------------
+# numerics: single-device grid (fast) + the 8-device two-level ring (slow)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("wire,rtol", [("fp32", 1e-5), ("bf16", 2e-2),
+                                       ("fp8_e4m3", 2e-1)])
+def test_single_device_hier_matches_naive(wire, rtol):
+    if not T.wire_dtype_supported(wire):
+        pytest.skip("no float8_e4m3fn in this jax")
+    cfg, mcfg, params, x = _problem()
+    y_ref, aux_ref = moe_ffn(cfg, dataclasses.replace(mcfg, impl="naive"),
+                             params, x, AxisCtx())
+    for fc in (False, True):
+        m = dataclasses.replace(mcfg, impl="comet_hier", intra_group=4,
+                                wire_dtype=wire, n_col_blocks=2,
+                                fused_combine=fc)
+        y, aux = moe_ffn(cfg, m, params, x, AxisCtx(), n_col=2)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   rtol=rtol, atol=rtol * 0.1)
+        np.testing.assert_allclose(float(aux), float(aux_ref), rtol=1e-6)
+
+
+def test_hier_grad_flows_and_matches_flat_fp32():
+    """fp32 wire: the hier custom-VJP backward must agree with the flat
+    comet backward (single-device degenerate path shares it) and with XLA
+    autodiff over the hier forward."""
+    cfg, mcfg, params, x = _problem()
+
+    def loss(p, m):
+        y, aux = moe_ffn(cfg, m, p, x, AxisCtx())
+        return jnp.sum(y ** 2) + aux
+
+    m_h = dataclasses.replace(mcfg, impl="comet_hier", intra_group=4)
+    m_c = dataclasses.replace(mcfg, impl="comet")
+    g_h = jax.grad(lambda p: loss(p, m_h))(params)
+    g_c = jax.grad(lambda p: loss(p, m_c))(params)
+    for k in g_c["experts"]:
+        np.testing.assert_allclose(np.asarray(g_h["experts"][k]),
+                                   np.asarray(g_c["experts"][k]),
+                                   rtol=1e-4, atol=1e-6)
+
+
+@pytest.mark.slow
+def test_hier_ring_on_8_devices():
+    """The real two-level ring: 8 simulated hosts, intra_group in {2, 4},
+    wire formats, ring_group/fused_combine grid, custom-VJP gradients vs
+    the local reference — all in a subprocess with its own XLA_FLAGS."""
+    import os
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import dataclasses
+import jax, jax.numpy as jnp
+from repro.configs.base import get_config
+from repro.core.moe_layer import moe_ffn, pack_expert_weights
+from repro.parallel.compat import use_mesh
+from repro.parallel.mesh import AxisCtx, make_mesh
+
+cfg = get_config("granite-moe-3b-a800m-smoke")
+d = cfg.d_model
+E, f = 8, 64
+ks = jax.random.split(jax.random.PRNGKey(7), 6)
+full = {"w_gate": jax.random.normal(ks[0], (E, d, f), jnp.float32)*0.05,
+        "w_up": jax.random.normal(ks[1], (E, d, f), jnp.float32)*0.05,
+        "w_down": jax.random.normal(ks[2], (E, f, d), jnp.float32)*0.05}
+router_w = jax.random.normal(ks[3], (d, E), jnp.float32)*0.1
+x = jax.random.normal(ks[4], (4, 32, d), jnp.float32)
+mcfg0 = dataclasses.replace(cfg.moe, num_experts=E, d_expert=f,
+                            capacity_factor=float(E), top_k=2)
+params_local = {"router": router_w,
+                "experts": {k: v[None] for k, v in full.items()}}
+mref = dataclasses.replace(mcfg0, impl="naive")
+y_ref, _ = jax.jit(lambda xx: moe_ffn(cfg, mref, params_local, xx,
+                                      AxisCtx()))(x)
+mesh = make_mesh((1, 8), ("data", "model"))
+ep, etp = 8, 1
+ctx = AxisCtx(mesh=mesh, dp_axes=("data",), model_axis="model",
+              ep=ep, etp=etp)
+packed = pack_expert_weights(full, ep, etp)
+params = {"router": router_w, "experts": packed}
+fails = []
+for ig in (2, 4):
+    for rg in (1, 2):
+        for fc in (False, True):
+            for wd in ("fp32", "bf16"):
+                m2 = dataclasses.replace(
+                    mcfg0, impl="comet_hier", ring_group=rg,
+                    n_col_blocks=2, intra_group=ig, wire_dtype=wd,
+                    fused_combine=fc)
+                with use_mesh(mesh):
+                    y, _ = jax.jit(
+                        lambda xx: moe_ffn(cfg, m2, params, xx, ctx))(x)
+                err = float(jnp.max(jnp.abs(y - y_ref)))
+                err /= float(jnp.max(jnp.abs(y_ref))) + 1e-9
+                tol = 2e-5 if wd == "fp32" else 2e-2
+                if not err < tol:
+                    fails.append(f"ig{ig} rg{rg} fc{int(fc)} {wd}: {err}")
+
+def loss(p, m2, c):
+    y, aux = moe_ffn(cfg, m2, p, x, c)
+    return jnp.sum(y**2) + aux
+
+m_h = dataclasses.replace(mcfg0, impl="comet_hier", intra_group=4,
+                          ring_group=2, n_col_blocks=2, fused_combine=True)
+with use_mesh(mesh):
+    g_h = jax.jit(jax.grad(lambda p: loss(p, m_h, ctx)))(params)
+g_local = jax.jit(jax.grad(lambda p: loss(p, mref, AxisCtx())))(params_local)
+gl_packed = pack_expert_weights(
+    {k: v[0] for k, v in g_local["experts"].items()}, ep, etp)
+for k in packed:
+    e = float(jnp.max(jnp.abs(g_h["experts"][k] - gl_packed[k])))
+    s = float(jnp.max(jnp.abs(gl_packed[k]))) + 1e-9
+    if not e / s < 5e-5:
+        fails.append(f"grad[{k}]: {e/s}")
+# ETP hybrid: ep=4, etp=2, two nodes of two groups
+ep2, etp2 = 4, 2
+ctx2 = AxisCtx(mesh=mesh, dp_axes=("data",), model_axis="model",
+               ep=ep2, etp=etp2)
+packed2 = pack_expert_weights(full, ep2, etp2)
+params2 = {"router": router_w, "experts": packed2}
+m2 = dataclasses.replace(mcfg0, impl="comet_hier", intra_group=2,
+                         n_col_blocks=2)
+with use_mesh(mesh):
+    y, _ = jax.jit(lambda xx: moe_ffn(cfg, m2, params2, xx, ctx2))(x)
+err = float(jnp.max(jnp.abs(y - y_ref)))
+err /= float(jnp.max(jnp.abs(y_ref))) + 1e-9
+if not err < 2e-5:
+    fails.append(f"etp2: {err}")
+assert not fails, fails
+print("HIER_OK")
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=900, env=env)
+    assert r.returncode == 0 and "HIER_OK" in r.stdout, \
+        r.stdout[-2000:] + r.stderr[-2000:]

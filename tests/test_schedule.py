@@ -186,17 +186,23 @@ def test_tuner_ranks_graph_candidates():
     assert m(plan) <= m(dataclasses.replace(plan, schedule="", n_slices=1))
 
 
-def test_plan_cache_v5_roundtrip_and_v4_compat(tmp_path):
-    p5 = A.Plan("comet", 2, 4, "pallas_fused", fused_combine=True,
-                schedule="overlap", n_slices=4)
-    assert A.Plan.from_json(p5.to_json()) == p5
-    # a v4 cache entry (no schedule / n_slices keys) must load as a
-    # per-layer plan with the defaults
-    v4 = {k: v for k, v in p5.to_json().items()
-          if k not in ("schedule", "n_slices")}
+def test_plan_cache_v6_roundtrip_and_compat(tmp_path):
+    p6 = A.Plan("comet_hier", 2, 4, "pallas_fused", fused_combine=True,
+                schedule="overlap", n_slices=4, intra_group=4,
+                wire_dtype="bf16")
+    assert A.Plan.from_json(p6.to_json()) == p6
+    # a v5 cache entry (no intra_group / wire_dtype keys) must load as a
+    # flat-topology plan with the defaults
+    v5 = {k: v for k, v in p6.to_json().items()
+          if k not in ("intra_group", "wire_dtype")}
+    p = A.Plan.from_json(v5)
+    assert p.intra_group == 1 and p.wire_dtype == "fp32"
+    # a v4 entry (additionally no schedule / n_slices) still loads
+    v4 = {k: v for k, v in v5.items() if k not in ("schedule", "n_slices")}
     p = A.Plan.from_json(v4)
     assert p.schedule == "" and p.n_slices == 1
-    assert A.PLAN_CACHE_VERSION == 5
+    assert p.intra_group == 1 and p.wire_dtype == "fp32"
+    assert A.PLAN_CACHE_VERSION == 6
 
 
 # ---------------------------------------------------------------------------

@@ -31,8 +31,25 @@ def _print_plan(tag, s, plan):
     sched = f",{plan.schedule}/ns{plan.n_slices}" if plan.schedule else ""
     print(f"{tag},M{s.M},N{s.N},K{s.K},E{s.E},k{s.topk},ep{s.ep},etp{s.etp},"
           f"{plan.phase},{plan.impl},rg{plan.ring_group},nc{plan.n_col_blocks},"
+          f"ig{plan.intra_group},{plan.wire_dtype},"
           f"{plan.gemm_impl},fc{int(plan.fused_combine)},"
           f"{plan.measured_s * 1e3:.4f}ms,{plan.source}{sched}")
+
+
+def _hw_lines():
+    """One readable line per Hardware preset, topology descriptor included
+    — what the unknown---hw error prints so the fix is self-evident."""
+    from repro.core.adaptive import HW
+    lines = []
+    for name in sorted(HW):
+        h = HW[name]
+        topo = (f"intra_bw={h.intra_bw / 1e9:.0f}GB/s "
+                f"inter_bw={h.inter_bw / 1e9:.0f}GB/s "
+                f"intra_group={h.intra_group}"
+                if h.intra_group > 1 else "flat")
+        lines.append(f"  {name:<16} link_bw={h.link_bw / 1e9:.0f}GB/s "
+                     f"hop_latency={h.hop_latency_s * 1e6:.0f}us  {topo}")
+    return "\n".join(lines)
 
 
 # the (arch, B, S) of the single-device smoke run `benchmarks/run.py --plan`
@@ -198,13 +215,15 @@ def main(argv=None) -> int:
 
     from repro.core.adaptive import HW, PlanCache
     if args.hw not in HW:
-        raise SystemExit(f"unknown --hw {args.hw!r}; have {sorted(HW)}")
+        raise SystemExit(
+            f"unknown --hw {args.hw!r}; available Hardware presets:\n"
+            + _hw_lines())
     hw = HW[args.hw]
     out = args.out or os.path.join("plans", f"{args.hw}.json")
     cache = PlanCache(out)
 
-    print("tag,M,N,K,E,topk,ep,etp,phase,impl,ring_group,n_col,gemm,"
-          "fused_combine,latency,source")
+    print("tag,M,N,K,E,topk,ep,etp,phase,impl,ring_group,n_col,intra_group,"
+          "wire,gemm,fused_combine,latency,source")
     if args.measured:
         tune_measured(args, hw, cache)
     else:

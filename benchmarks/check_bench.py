@@ -146,6 +146,56 @@ def g_chaos_ttft(d):
             f"{f:.1f}x fault-free (gate: <= 25x)")
 
 
+def g_disagg_parity(d):
+    g = d["serving"]["disagg"]
+    ok = bool(g["trace"]["bit_exact_vs_shared_engine"])
+    return ok, (f"disagg token streams bit-exact vs the shared engine on "
+                f"the {g['n_requests']}-request mixed-length Poisson trace"
+                if ok else
+                "disagg topology DIVERGED from the shared-engine reference")
+
+
+def g_disagg_ttft(d):
+    t = d["serving"]["disagg"]["ttft"]
+    s, m = t["shared_mean_ticks"], t["disagg_mean_ticks"]
+    return (m < s,
+            f"mean TTFT at equal total slots: disagg {m:.2f} ticks vs "
+            f"shared {s:.2f} (prefill admission decoupled from decode "
+            f"turnover)" if m < s else
+            f"disagg mean TTFT {m:.2f} ticks NOT below shared {s:.2f}")
+
+
+def g_disagg_exactly_once(d):
+    c = d["serving"]["disagg"]["crash"]
+    ok = (bool(c["all_terminal"]) and bool(c["streams_bit_identical"])
+          and c["lost_tokens"] == 0 and c["duplicated_tokens"] == 0
+          and c["recoveries"] >= c["injected_crashes"] > 0)
+    return ok, (f"{c['injected_crashes']} single-worker crashes "
+                f"({', '.join(sorted(c['plan'].values()))}) -> "
+                f"{c['recoveries']} recoveries, streams bit-identical, "
+                f"0 lost / 0 duplicated across the handoff boundary" if ok
+                else f"worker-crash delivery broke: terminal="
+                     f"{c['all_terminal']} identical="
+                     f"{c['streams_bit_identical']} lost={c['lost_tokens']} "
+                     f"dup={c['duplicated_tokens']} recoveries="
+                     f"{c['recoveries']}/{c['injected_crashes']}")
+
+
+def g_disagg_migration(d):
+    m = d["serving"]["disagg"]["migration"]
+    ok = (m["migrations"] == d["serving"]["disagg"]["n_requests"]
+          and m["pages_moved"] == m["expected_content_pages"]
+          and m["decode_worker_prefill_tokens"] == 0)
+    return ok, (f"{m['migrations']} handoffs moved exactly the "
+                f"{m['pages_moved']} content pages (no tail-budget "
+                f"copies), decode workers ran 0 prefill tokens" if ok else
+                f"migration unbounded: {m['migrations']} handoffs, "
+                f"{m['pages_moved']} pages vs "
+                f"{m['expected_content_pages']} expected, "
+                f"{m['decode_worker_prefill_tokens']} decode-side "
+                f"prefill tokens (re-prefill!)")
+
+
 def g_whole_graph(d):
     rows = _rows(d["whole_graph"])
     if not rows:
@@ -246,6 +296,17 @@ GATES: List[Gate] = [
      "serving.chaos (PR7 fault tolerance)", g_chaos_exactly_once),
     ("serving_chaos_ttft_bounded", "ttft_p99_factor <= 25",
      "serving.chaos (PR7 fault tolerance)", g_chaos_ttft),
+    ("disagg_stream_parity", "bit_exact_vs_shared_engine == true",
+     "serving.disagg (PR10 router/worker topology)", g_disagg_parity),
+    ("disagg_ttft_below_shared",
+     "disagg_mean_ticks < shared_mean_ticks at equal total slots",
+     "serving.disagg (PR10 router/worker topology)", g_disagg_ttft),
+    ("disagg_exactly_once_under_worker_crash",
+     "bit-identical streams, 0 lost / 0 dup, recoveries >= crashes",
+     "serving.disagg (PR10 router/worker topology)", g_disagg_exactly_once),
+    ("disagg_migration_bounded",
+     "pages_moved == content pages, decode prefill tokens == 0",
+     "serving.disagg (PR10 router/worker topology)", g_disagg_migration),
     ("hier_exposed_below_flat_modeled",
      "hier_exposed_s < flat_exposed_s (bwd <=)",
      "hier_transport.modeled (PR9 two-level ring)", g_hier_modeled),

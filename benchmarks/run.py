@@ -541,10 +541,11 @@ def serving_trace_bench(n_requests: int = 8, slots: int = 2,
     import numpy as np
 
     from repro.configs.base import get_config
-    from repro.serving import ServeEngine
+    from repro.serving import EngineConfig
 
     cfg = get_config("granite-moe-3b-a800m-smoke")
-    eng = ServeEngine(cfg, max_seq=64, batch_size=slots, seed=seed, chunk=8)
+    eng = EngineConfig(max_seq=64, batch_size=slots, seed=seed,
+                       chunk=8).build(cfg)
     rng = np.random.default_rng(seed)
     arrivals = np.cumsum(rng.exponential(mean_interarrival_steps,
                                          size=n_requests)).astype(int)
@@ -648,7 +649,7 @@ def serving_paged_bench(seed: int = 0):
     import numpy as np
 
     from repro.configs.base import get_config
-    from repro.serving import ServeEngine
+    from repro.serving import EngineConfig
 
     cfg = get_config("qwen2-0.5b-smoke")
     rng = np.random.default_rng(seed)
@@ -659,8 +660,8 @@ def serving_paged_bench(seed: int = 0):
     def run(paged: bool, params=None):
         kw = (dict(batch_size=6, page_size=8, n_pages=17) if paged
               else dict(batch_size=2))
-        eng = ServeEngine(cfg, params=params, max_seq=64, chunk=8, seed=seed,
-                          **kw)
+        eng = EngineConfig(max_seq=64, chunk=8, seed=seed,
+                           **kw).build(cfg, params=params)
         for p in prompts:
             eng.submit(p, max_new=6)
         peak = 0
@@ -677,8 +678,8 @@ def serving_paged_bench(seed: int = 0):
     # admission latency: a 4-request burst admitted one-per-step vs in one
     # stacked chunk call (same params, fresh caches)
     def admit_burst(admit_k):
-        eng = ServeEngine(cfg, params=ref.params, max_seq=64, batch_size=4,
-                          chunk=8, admit_k=admit_k)
+        eng = EngineConfig(max_seq=64, batch_size=4, chunk=8,
+                           admit_k=admit_k).build(cfg, params=ref.params)
         for p in prompts[:4]:
             eng.submit(p, max_new=2)
         t0 = time.perf_counter()
@@ -738,7 +739,7 @@ def serving_chaos_bench(n_requests: int = 8, slots: int = 2,
     import numpy as np
 
     from repro.configs.base import get_config
-    from repro.serving import FaultInjector, FaultPlan, ServeEngine
+    from repro.serving import EngineConfig, FaultInjector, FaultPlan
 
     cfg = get_config("qwen2-0.5b-smoke")
     rng = np.random.default_rng(seed)
@@ -749,11 +750,11 @@ def serving_chaos_bench(n_requests: int = 8, slots: int = 2,
 
     def run_trace(params=None, faults=None, snapshot_dir=None):
         emissions = []
-        eng = ServeEngine(cfg, params=params, max_seq=64, batch_size=slots,
-                          seed=seed, chunk=8, page_size=8,
-                          snapshot_dir=snapshot_dir, snapshot_every=2,
-                          max_restarts=16, faults=faults,
-                          on_token=lambda r, i, t: emissions.append((r, i, t)))
+        ec = EngineConfig(max_seq=64, batch_size=slots, seed=seed, chunk=8,
+                          page_size=8, snapshot_dir=snapshot_dir,
+                          snapshot_every=2, max_restarts=16)
+        eng = ec.build(cfg, params=params, faults=faults,
+                       on_token=lambda r, i, t: emissions.append((r, i, t)))
         t0 = time.perf_counter()
         nxt = 0
         rids = []
@@ -825,15 +826,182 @@ def serving_chaos_bench(n_requests: int = 8, slots: int = 2,
     return res
 
 
+def serving_disagg_bench(n_requests: int = 10, max_new: int = 8,
+                         seed: int = 0):
+    """Disaggregated prefill/decode vs the shared engine at EQUAL total
+    slots (4 shared vs 2 prefill + 2 decode), on a prefill-heavy
+    mixed-length Poisson trace. Time is a virtual tick clock (+1 per
+    scheduler step) so TTFT measures scheduling structure, not host
+    noise. Four contracts, each a named gate:
+
+    * every token stream is bit-exact vs the shared single engine;
+    * mean TTFT (ticks) is STRICTLY below the shared engine's — prefill
+      admission no longer waits on decode slot turnover;
+    * a seeded single-worker crash (one decode loss, one prefill loss)
+      recovers exactly-once across the handoff boundary: zero lost /
+      duplicated emissions, streams identical to the clean disagg run;
+    * migration is bounded: pages moved == content pages of each prompt
+      (no tail-budget copies) and decode workers run ZERO prefill tokens
+      (pages migrate, requests are never re-prefilled)."""
+    import tempfile
+
+    import numpy as np
+
+    from repro.configs.base import get_config
+    from repro.serving import EngineConfig, FaultInjector, FaultPlan
+    from repro.serving.paged_cache import pages_for
+
+    cfg = get_config("qwen2-0.5b-smoke")
+    rng = np.random.default_rng(seed)
+    # prefill-heavy mix: prompts 8-32 toks dwarf the 8-token decode budget
+    prompts = [rng.integers(1, cfg.vocab_size,
+                            size=int(rng.integers(8, 33))).tolist()
+               for _ in range(n_requests)]
+    arrivals = np.cumsum(rng.exponential(1.5, size=n_requests)).astype(int)
+
+    class Ticks:
+        """Virtual clock: 1.0 per scheduler step, shared by engine(s)."""
+
+        def __init__(self):
+            self.t = 0.0
+
+        def __call__(self):
+            return self.t
+
+    def run_trace(build):
+        emissions = []
+        clock = Ticks()
+        eng = build(clock, lambda r, i, t: emissions.append((r, i, t)))
+        rids, nxt = [], 0
+        while nxt < n_requests or eng.pending:
+            while nxt < n_requests and arrivals[nxt] <= clock.t:
+                rids.append(eng.submit(prompts[nxt], max_new=max_new))
+                nxt += 1
+            if not eng.pending and nxt < n_requests:  # idle gap in trace
+                rids.append(eng.submit(prompts[nxt], max_new=max_new))
+                nxt += 1
+            eng.step()
+            clock.t += 1.0
+        return eng, rids, emissions
+
+    shared_ec = EngineConfig(max_seq=64, batch_size=4, chunk=8, page_size=8,
+                             seed=seed)
+    shared, s_rids, _ = run_trace(
+        lambda c, cb: shared_ec.build(cfg, clock=c, on_token=cb))
+    params = shared.params
+
+    dis_ec = EngineConfig(max_seq=64, batch_size=2, chunk=8, page_size=8,
+                          seed=seed, disagg=True, prefill_workers=1,
+                          decode_workers=1, prefill_slots=2, decode_slots=2)
+    router, d_rids, d_emit = run_trace(
+        lambda c, cb: dis_ec.build(cfg, params=params, clock=c, on_token=cb))
+
+    shared_toks = {r: list(shared.finished[r].tokens) for r in s_rids}
+    dis_toks = {r: list(router.finished[r].tokens) for r in d_rids}
+    exact = shared_toks == dis_toks
+
+    def ttfts(eng, rids):
+        return [eng.finished[r].ttft_s for r in rids
+                if eng.finished[r].first_token_t > 0]
+
+    tt_s, tt_d = ttfts(shared, s_rids), ttfts(router, d_rids)
+    mean_s, mean_d = float(np.mean(tt_s)), float(np.mean(tt_d))
+    p99_s = float(np.percentile(tt_s, 99))
+    p99_d = float(np.percentile(tt_d, 99))
+
+    s = router.summary()
+    expected_pages = sum(pages_for(len(p), router.page_size)
+                         for p in prompts)
+    decode_prefill = sum(w.prefill_tokens for w in router.decodes)
+    migration_ok = (s["migrations"] == n_requests
+                    and s["pages_moved"] == expected_pages
+                    and decode_prefill == 0)
+
+    # seeded single-worker crashes: one decode loss mid-trace, one
+    # prefill loss later — exactly-once must hold across the handoff
+    plan = FaultPlan(crash_workers={5: ("decode", 0), 11: ("prefill", 0)})
+    with tempfile.TemporaryDirectory(prefix="repro_disagg_") as snap:
+        crash_ec = EngineConfig(
+            max_seq=64, batch_size=2, chunk=8, page_size=8, seed=seed,
+            disagg=True, prefill_workers=1, decode_workers=1,
+            prefill_slots=2, decode_slots=2, snapshot_dir=snap,
+            snapshot_every=2, max_restarts=16, recover=True)
+        injectors = {t: FaultInjector(plan, role=t)
+                     for t in crash_ec.worker_targets()}
+        crashed, c_rids, c_emit = run_trace(
+            lambda c, cb: crash_ec.build(cfg, params=params, clock=c,
+                                         on_token=cb, faults=injectors))
+    injected = sum(inj.counts["crash"] for inj in injectors.values())
+    crash_toks = {r: list(crashed.finished[r].tokens) for r in c_rids}
+    seen, dup = set(), 0
+    for r, i, _ in c_emit:
+        dup += (r, i) in seen
+        seen.add((r, i))
+    lost = sum((r, i) not in seen for r in c_rids
+               for i in range(len(crashed.finished[r].tokens)))
+    terminal = all(crashed.finished[r].done for r in c_rids)
+    crash_exact = crash_toks == dis_toks
+
+    res = {
+        "n_requests": n_requests, "total_slots": 4,
+        "shared_slots": 4, "prefill_slots": 2, "decode_slots": 2,
+        "trace": {
+            "bit_exact_vs_shared_engine": bool(exact),
+            "mixed_prompt_lens": sorted(len(p) for p in prompts),
+        },
+        "ttft": {
+            "shared_mean_ticks": mean_s, "disagg_mean_ticks": mean_d,
+            "shared_p99_ticks": p99_s, "disagg_p99_ticks": p99_d,
+            "disagg_below_shared": bool(mean_d < mean_s),
+        },
+        "migration": {
+            "migrations": int(s["migrations"]),
+            "pages_moved": int(s["pages_moved"]),
+            "expected_content_pages": int(expected_pages),
+            "decode_worker_prefill_tokens": int(decode_prefill),
+            "remigrations": int(s["remigrations"]),
+            "bounded": bool(migration_ok),
+        },
+        "crash": {
+            "plan": {str(t): f"{r}{i}" for t, (r, i)
+                     in plan.crash_workers.items()},
+            "injected_crashes": int(injected),
+            "recoveries": int(crashed.recoveries),
+            "failures": int(crashed.failures),
+            "remigrations": int(crashed.remigrations),
+            "duplicate_handoffs": int(crashed.duplicate_handoffs),
+            "all_terminal": bool(terminal),
+            "streams_bit_identical": bool(crash_exact),
+            "lost_tokens": int(lost), "duplicated_tokens": int(dup),
+        },
+    }
+    print(f"\n# serving_disagg (1x2 prefill -> 1x2 decode vs shared 4-slot, "
+          f"{n_requests} mixed-length requests)")
+    print(f"bit-exact vs shared: {exact}; ttft mean {mean_d:.1f} ticks "
+          f"disagg vs {mean_s:.1f} shared (p99 {p99_d:.0f} vs {p99_s:.0f})")
+    print(f"migration: {s['migrations']} handoffs, {s['pages_moved']} pages "
+          f"(expected {expected_pages}), decode prefill toks "
+          f"{decode_prefill}")
+    print(f"crash run: {injected} injected -> {crashed.recoveries} "
+          f"recoveries, lost {lost} dup {dup}, bit-identical {crash_exact}")
+    ok = (exact and mean_d < mean_s and migration_ok and terminal
+          and crash_exact and lost == 0 and dup == 0)
+    print(f"[{'PASS' if ok else 'FAIL'}] disagg bit-exact, lower TTFT, "
+          "bounded migration, exactly-once under single-worker crashes")
+    return res
+
+
 def serving_bench():
     """The serving figure set: modeled decode-plan quality, a real
     Poisson-trace run through the continuous-batching engine, the
-    paged-cache memory-headroom / admission figures, and the chaos
-    fault-recovery figure."""
+    paged-cache memory-headroom / admission figures, the chaos
+    fault-recovery figure, and the disaggregated prefill/decode
+    topology figure."""
     return {"decode_plans": serving_decode_plan_table(),
             "trace": serving_trace_bench(),
             "paged": serving_paged_bench(),
-            "chaos": serving_chaos_bench()}
+            "chaos": serving_chaos_bench(),
+            "disagg": serving_disagg_bench()}
 
 
 def _jsonable(obj):

@@ -1,7 +1,9 @@
-from repro.serving.engine import (GenerateResult, Request,  # noqa: F401
-                                  RejectedRequest, RejectReason,
-                                  RequestStatus, ServeEngine,
-                                  stitch_prefill_cache)
+from repro.serving.disagg import (DecodeWorker,  # noqa: F401
+                                  PrefillWorker, Router)
+from repro.serving.engine import (EngineConfig, GenerateResult,  # noqa: F401
+                                  Handoff, RejectedRequest, RejectReason,
+                                  Request, RequestSpec, RequestStatus,
+                                  ServeEngine, stitch_prefill_cache)
 from repro.serving.faults import (FaultInjector, FaultPlan,  # noqa: F401
                                   InjectedFault)
 from repro.serving.paged_cache import (AllocatorError,  # noqa: F401

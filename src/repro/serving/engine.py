@@ -48,7 +48,28 @@ machinery for the serving workload):
 
 ``generate(prompts, ...)`` remains as a convenience wrapper: submit all,
 run to completion, return a batch result. Any number of prompts works —
-more prompts than slots simply queue.
+more prompts than slots simply queue. Prompts may be raw token sequences
+or typed :class:`RequestSpec` values; a malformed prompt surfaces its
+:class:`RejectedRequest` per-row instead of aborting the batch.
+
+WORKER API (the disaggregated topology in serving/disagg.py builds on
+these — they are first-class engine API, not internals):
+
+* ``prefill_step()`` — queued-deadline expiry + one stacked chunk-
+  admission call; ``decode_step()`` — one decoded token per live slot +
+  live-deadline expiry. ``step()`` is exactly ``prefill_step(); decode_
+  step()`` under the fault/snapshot envelope; a ``role``-restricted
+  engine (``role="prefill"`` / ``"decode"``) builds only the step it
+  runs and skips the other entirely.
+* ``export_handoff(slot)`` / ``migrate(handoff)`` — KV handoff as paged-
+  page MIGRATION: a finished prefill's page contents (+ per-slot SSM
+  carry) move into another engine's pool through a :class:`Handoff`
+  record, so the decode worker resumes at the prefill position without
+  re-prefill, bit-exact vs the single-engine path.
+* :class:`EngineConfig` — one construction surface (config groups:
+  engine / paging / robustness / chaos / disagg) shared by the CLI and
+  the benchmarks; ``EngineConfig.build()`` returns a ServeEngine, or the
+  Router topology when ``disagg`` is set.
 """
 from __future__ import annotations
 
@@ -121,6 +142,7 @@ class RejectReason(str, enum.Enum):
     TOO_LONG = "too_long"               # prompt + max_new > max_seq
     OVER_CAPACITY = "over_capacity"     # page budget beyond the whole pool
     QUEUE_FULL = "queue_full"           # bounded queue, shed policy said no
+    INVALID = "invalid"                 # spec field failed validation
 
 
 class RejectedRequest(Exception):
@@ -131,7 +153,76 @@ class RejectedRequest(Exception):
     def __init__(self, reason: RejectReason, msg: str, request=None):
         super().__init__(f"{reason.value}: {msg}")
         self.reason = reason
+        self.msg = msg
         self.request = request
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestSpec:
+    """Typed submission: everything ``submit()`` accepts, as ONE validated
+    value object — replacing the growing kwarg sprawl (``max_new`` /
+    ``eos_id`` / ``ttft_deadline_s`` / ``deadline_s`` / routing hints).
+    The kwargs path on ``submit()``/``generate()`` still works and builds
+    the spec internally, so both doors validate identically.
+
+    Validation runs in ``__post_init__`` and raises
+    :class:`RejectedRequest` (reason ``EMPTY_PROMPT`` / ``INVALID``) for
+    anything malformed in ISOLATION; engine-relative checks (``TOO_LONG``
+    / ``OVER_CAPACITY`` / ``QUEUE_FULL``) stay in ``submit()``, where the
+    engine geometry is known. Deadlines of None inherit the engine
+    defaults at submit time. ``route_hint`` is a disaggregated-topology
+    hint — preferred prefill-worker index (best-effort; the Router wraps
+    it into range, a single engine ignores it)."""
+    prompt: Tuple[int, ...]
+    max_new: int = 32
+    eos_id: Optional[int] = None
+    ttft_deadline_s: Optional[float] = None
+    deadline_s: Optional[float] = None
+    route_hint: Optional[int] = None
+
+    def __post_init__(self):
+        if isinstance(self.prompt, (str, bytes)):
+            raise RejectedRequest(
+                RejectReason.INVALID,
+                "prompt must be a sequence of token ids, not text")
+        try:
+            prompt = tuple(int(t) for t in self.prompt)
+        except (TypeError, ValueError) as e:
+            raise RejectedRequest(
+                RejectReason.INVALID,
+                f"prompt must be a sequence of token ids ({e})") from e
+        object.__setattr__(self, "prompt", prompt)
+        if not prompt:
+            raise RejectedRequest(RejectReason.EMPTY_PROMPT, "empty prompt")
+        if not isinstance(self.max_new, (int, np.integer)) or \
+                self.max_new < 1:
+            raise RejectedRequest(
+                RejectReason.INVALID,
+                f"max_new must be a positive int, got {self.max_new!r}")
+        if self.eos_id is not None and \
+                not isinstance(self.eos_id, (int, np.integer)):
+            raise RejectedRequest(
+                RejectReason.INVALID,
+                f"eos_id must be an int or None, got {self.eos_id!r}")
+        for name in ("ttft_deadline_s", "deadline_s"):
+            v = getattr(self, name)
+            if v is not None and (not isinstance(v, (int, float))
+                                  or isinstance(v, bool) or v <= 0):
+                raise RejectedRequest(
+                    RejectReason.INVALID,
+                    f"{name} must be a positive number or None, got {v!r}")
+        if self.route_hint is not None and \
+                (not isinstance(self.route_hint, (int, np.integer))
+                 or self.route_hint < 0):
+            raise RejectedRequest(
+                RejectReason.INVALID,
+                f"route_hint must be a worker index >= 0 or None, "
+                f"got {self.route_hint!r}")
+
+    @property
+    def budget_tokens(self) -> int:
+        """Cache budget this request admits against (prompt + max_new)."""
+        return len(self.prompt) + self.max_new
 
 
 @dataclasses.dataclass
@@ -140,6 +231,12 @@ class GenerateResult:
     lengths: np.ndarray         # (B,) tokens before eos/max
     prefill_tokens: int
     decode_steps: int
+    # per-row terminal status values + the typed rejection for each row
+    # that never entered the engine (malformed prompt); appended after the
+    # original fields so positional construction stays compatible
+    statuses: List[str] = dataclasses.field(default_factory=list)
+    rejected: Dict[int, RejectedRequest] = dataclasses.field(
+        default_factory=dict)
 
 
 @dataclasses.dataclass
@@ -159,6 +256,7 @@ class Request:
     error: str = ""
     ttft_deadline_s: Optional[float] = None   # first token within this
     deadline_s: Optional[float] = None        # whole request within this
+    route_hint: Optional[int] = None          # preferred prefill worker
 
     @property
     def done(self) -> bool:
@@ -171,7 +269,7 @@ class Request:
 
 _REQ_FIELDS = ("rid", "prompt", "max_new", "eos_id", "tokens", "length",
                "slot", "submit_t", "first_token_t", "done_t", "error",
-               "ttft_deadline_s", "deadline_s")
+               "ttft_deadline_s", "deadline_s", "route_hint")
 
 
 def _req_to_json(r: Request) -> Dict:
@@ -181,10 +279,37 @@ def _req_to_json(r: Request) -> Dict:
 
 
 def _req_from_json(d: Dict) -> Request:
-    kw = {k: d[k] for k in _REQ_FIELDS}
+    # .get: route_hint is absent from pre-disagg snapshots/logs
+    kw = {k: d.get(k) if k == "route_hint" else d[k] for k in _REQ_FIELDS}
     kw["prompt"] = list(kw["prompt"])
     kw["tokens"] = list(kw["tokens"])
     return Request(status=RequestStatus(d["status"]), **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class Handoff:
+    """One finished prefill crossing the worker boundary — everything a
+    decode pool needs to resume the request at its prefill position
+    WITHOUT re-prefill. The page CONTENTS ride the handoff as immutable
+    gathered arrays (detached from the exporting pool, which reclaims its
+    pages the moment the export returns), so the record stays valid even
+    if the exporting worker crashes, restores, or reuses the pages — the
+    router re-migrates from the same record after a decode-worker loss.
+
+    ``pages`` is the SOURCE pool's page-id list for the request's full
+    ``prompt + max_new`` budget (what admission allocated); only the
+    ``n_content_pages`` prefix holds written K/V and travels in ``kv`` —
+    the tail pages' contents are garbage on both sides, masked by
+    position validity exactly like a reused contiguous slot."""
+    rid: int
+    req_json: Dict              # request state at handoff (tokens=[first])
+    pos: int                    # cache position = prompt length
+    last_tok: int               # feeds the first decode step
+    budget_tokens: int          # prompt + max_new (import page budget)
+    pages: Tuple[int, ...]      # source page ids, block-table order
+    block_table: Tuple[int, ...]  # source row (import cross-check)
+    n_content_pages: int        # written prefix actually copied
+    kv: Tuple                   # per cache entry: K/V page gather | SSM row
 
 
 class ServeEngine:
@@ -200,9 +325,13 @@ class ServeEngine:
                  max_restarts: int = 3, recover: Optional[bool] = None,
                  faults=None, straggler_factor: float = 2.5,
                  clock: Optional[Callable[[], float]] = None,
-                 on_token: Optional[Callable[[int, int, int], None]] = None):
+                 on_token: Optional[Callable[[int, int, int], None]] = None,
+                 role: str = "both"):
+        if role not in ("both", "prefill", "decode"):
+            raise ValueError(f"role must be both|prefill|decode, got {role!r}")
         self.cfg = cfg
         self.mesh = mesh
+        self.role = role
         self.max_seq = max_seq
         self.B = batch_size                       # decode slots
         self.plan_cache = plan_cache
@@ -258,30 +387,33 @@ class ServeEngine:
         dshape = ShapeConfig("serve_decode", seq_len=max_seq,
                              global_batch=batch_size, kind="decode",
                              page_size=self.page_size, n_pages=self.n_pages)
-        self.prefill = build_prefill_chunk_step(cfg, dshape, mesh,
-                                                chunk=self.chunk,
-                                                plan_cache=plan_cache,
-                                                plan_hw=plan_hw)
-        self.decode = build_decode_step(cfg, dshape, mesh,
-                                        plan_cache=plan_cache,
-                                        plan_hw=plan_hw)
+        # a role-restricted worker builds ONLY the step it runs: a decode
+        # worker never compiles prefill plans and vice versa
+        self.prefill = (build_prefill_chunk_step(cfg, dshape, mesh,
+                                                 chunk=self.chunk,
+                                                 plan_cache=plan_cache,
+                                                 plan_hw=plan_hw)
+                        if role != "decode" else None)
+        self.decode = (build_decode_step(cfg, dshape, mesh,
+                                         plan_cache=plan_cache,
+                                         plan_hw=plan_hw)
+                       if role != "prefill" else None)
+        ctx = (self.decode or self.prefill)["ctx"]
         if params is None:
-            params = lm.init_params(cfg, jax.random.PRNGKey(seed),
-                                    self.prefill["ctx"])
+            params = lm.init_params(cfg, jax.random.PRNGKey(seed), ctx)
         self.params = params
         # device state: the decode cache, donated through every chunk/decode
         # call — contiguous: one region (batch row) per slot; paged: shared
         # K/V page pools + dense per-slot SSM entries
         if self.paged:
             self.cache = lm.init_paged_cache(cfg, batch_size, self.n_pages,
-                                             page_size, self.decode["ctx"])
+                                             page_size, ctx)
             self.alloc = BlockAllocator(self.n_pages, page_size,
                                         self.max_blocks)
             self.block_tables = np.zeros((batch_size, self.max_blocks),
                                          np.int32)
         else:
-            self.cache = lm.init_cache(cfg, batch_size, max_seq,
-                                       self.decode["ctx"])
+            self.cache = lm.init_cache(cfg, batch_size, max_seq, ctx)
             self.alloc = None
             self.block_tables = None
         # host scheduler state
@@ -315,6 +447,11 @@ class ServeEngine:
         self.expired = 0
         self.quarantined = 0
         self._consec_failures = 0
+        # page-migration accounting (disaggregated handoff)
+        self.handoffs_out = 0       # finished prefills exported
+        self.migrations_in = 0      # handoffs imported into this pool
+        self.pages_exported = 0     # content pages copied out
+        self.pages_imported = 0     # content pages copied in
 
     # -- streaming API ------------------------------------------------------
 
@@ -324,33 +461,70 @@ class ServeEngine:
         req.done_t = self._clock()
         raise RejectedRequest(reason, msg, request=req)
 
-    def submit(self, prompt: Sequence[int], max_new: int = 32,
-               eos_id: Optional[int] = None,
+    def _coerce_spec(self, request, max_new, eos_id, ttft_deadline_s,
+                     deadline_s) -> RequestSpec:
+        """Kwargs → :class:`RequestSpec` (a spec passes through). A spec
+        validation failure is re-raised with a terminal (status=rejected)
+        Request record attached, so the kwargs door keeps its contract:
+        every rejection carries an inspectable request."""
+        if isinstance(request, RequestSpec):
+            return request
+        try:
+            return RequestSpec(prompt=request, max_new=max_new,
+                               eos_id=eos_id,
+                               ttft_deadline_s=ttft_deadline_s,
+                               deadline_s=deadline_s)
+        except RejectedRequest as e:
+            try:
+                prompt = ([] if isinstance(request, (str, bytes))
+                          else [int(t) for t in request])
+            except Exception:
+                prompt = []
+            rec = Request(self._next_rid, prompt,
+                          max_new if isinstance(max_new, int) else 0,
+                          None, submit_t=self._clock())
+            self._next_rid += 1            # rids stay unique on reject
+            rec.status = RequestStatus.REJECTED
+            rec.error = f"{e.reason.value}: {e.msg}"
+            rec.done_t = self._clock()
+            raise RejectedRequest(e.reason, e.msg, request=rec) from e
+
+    def submit(self, request: Union[RequestSpec, Sequence[int]],
+               max_new: int = 32, eos_id: Optional[int] = None,
                ttft_deadline_s: Optional[float] = None,
                deadline_s: Optional[float] = None) -> int:
-        """Queue a request; returns its id. Admission happens on the next
-        ``step()`` (or immediately inside ``run()``). Malformed requests
-        raise :class:`RejectedRequest` (typed reason, engine untouched);
-        a full bounded queue applies the shedding policy first."""
-        req = Request(self._next_rid, list(prompt), max_new, eos_id,
-                      submit_t=self._clock(),
+        """Queue a request; returns its id. ``request`` is a
+        :class:`RequestSpec` or a raw prompt (token sequence) plus the
+        legacy kwargs, which build a spec internally. Admission happens on
+        the next ``step()`` (or immediately inside ``run()``). Malformed
+        requests raise :class:`RejectedRequest` (typed reason, engine
+        untouched); a full bounded queue applies the shedding policy
+        first."""
+        if self.role == "decode":
+            raise RuntimeError(
+                "decode-role worker takes migrated requests only "
+                "(migrate()); submit through the router")
+        spec = self._coerce_spec(request, max_new, eos_id,
+                                 ttft_deadline_s, deadline_s)
+        req = Request(self._next_rid, list(spec.prompt), spec.max_new,
+                      spec.eos_id, submit_t=self._clock(),
                       ttft_deadline_s=(self.ttft_deadline_s
-                                       if ttft_deadline_s is None
-                                       else ttft_deadline_s),
-                      deadline_s=(self.deadline_s if deadline_s is None
-                                  else deadline_s))
+                                       if spec.ttft_deadline_s is None
+                                       else spec.ttft_deadline_s),
+                      deadline_s=(self.deadline_s if spec.deadline_s is None
+                                  else spec.deadline_s),
+                      route_hint=spec.route_hint)
         self._next_rid += 1                    # rids stay unique on reject
-        if len(req.prompt) == 0:
-            self._reject(req, RejectReason.EMPTY_PROMPT, "empty prompt")
-        if len(req.prompt) + max_new > self.max_seq:
+        if spec.budget_tokens > self.max_seq:
             self._reject(req, RejectReason.TOO_LONG,
-                         f"prompt {len(req.prompt)} + max_new {max_new} "
-                         f"exceeds engine max_seq {self.max_seq}")
+                         f"prompt {len(req.prompt)} + max_new "
+                         f"{spec.max_new} exceeds engine max_seq "
+                         f"{self.max_seq}")
         if self.paged:
             # a budget beyond the POOL capacity would never fit, and the
             # FIFO admission gate would stall on it (and everything queued
             # behind it) forever — reject it at the door instead
-            need = pages_for(len(req.prompt) + max_new, self.page_size)
+            need = pages_for(spec.budget_tokens, self.page_size)
             if need > min(self.n_pages - 1, self.max_blocks):
                 self._reject(req, RejectReason.OVER_CAPACITY,
                              f"request needs {need} pages, pool holds "
@@ -363,10 +537,18 @@ class ServeEngine:
             self._drop_queued(victim, RequestStatus.EXPIRED,
                               "shed: queue full")
             self.shed += 1
+        self.enqueue(req)
+        return req.rid
+
+    def enqueue(self, req: Request) -> None:
+        """Append an ALREADY-VALIDATED Request to this engine's queue and
+        write-ahead log (the router dispatches through this after doing
+        its own admission; ``submit()`` lands here too). The log entry
+        makes the request crash-durable on THIS engine: a post-snapshot
+        restore replays it from token 0, watermark-deduped."""
         req.status = RequestStatus.QUEUED
         self.queue.append(req)
         self._log.append(("submit", _req_to_json(req)))
-        return req.rid
 
     def _shed_victim(self, new_req: Request) -> Optional[Request]:
         """Pick the queued request to drop when the bounded queue is full
@@ -633,16 +815,43 @@ class ServeEngine:
     def _step_inner(self):
         if self.faults is not None:
             self.faults.begin_step(self)   # latency / pressure / crash hook
+        if self.role != "decode":
+            self.prefill_step()
+        if self.role != "prefill":
+            self.decode_step()
+        self._after_phases()
+        if self.ckpt is not None and self.snapshot_every and \
+                self.step_idx % self.snapshot_every == 0:
+            self.snapshot()
+
+    # -- worker API: the two phases of step(), callable separately ----------
+
+    def prefill_step(self) -> List[Tuple[int, Request]]:
+        """The admission phase of one scheduler iteration: queued-deadline
+        expiry, then ONE stacked chunk-admission call (free-page gated
+        when paged). Returns the admitted (slot, request) pairs. This is
+        the entire step of a ``role="prefill"`` worker."""
         self._expire_queued()
         pairs = self._gather_admissions()
         if pairs:
             self._admit_batch(pairs)
-        if self.live.any():
+        return pairs
+
+    def decode_step(self) -> int:
+        """The decode phase of one scheduler iteration: one decoded token
+        per live slot (non-finite rows quarantined), then live-deadline
+        expiry. Returns how many rows decoded. This is the entire step of
+        a ``role="decode"`` worker."""
+        n = int(self.live.sum())
+        if n:
             self._decode_once()
         self._expire_live()
-        if self.ckpt is not None and self.snapshot_every and \
-                self.step_idx % self.snapshot_every == 0:
-            self.snapshot()
+        return n
+
+    def _after_phases(self):
+        """Post-phase hook between the scheduler phases and the periodic
+        snapshot — the PrefillWorker overrides this to export finished
+        prefills as page-migration handoffs. Base engine: no-op."""
 
     def _decode_once(self):
         t0 = time.perf_counter()
@@ -677,6 +886,99 @@ class ServeEngine:
             self.last_tok[slot] = int(nxt[slot])
             if self._record_token(req, int(nxt[slot]), len(req.tokens)):
                 self._retire(slot)
+
+    # -- page-migration handoff (disaggregated prefill/decode) --------------
+
+    def export_handoff(self, slot: int) -> Handoff:
+        """Detach a live request from this engine as a :class:`Handoff`:
+        gather its written K/V page contents (and per-slot SSM carry) out
+        of the pools into immutable arrays, free the slot and its pages,
+        and return the record. The request is NOT retired — it continues
+        on whichever engine imports the handoff; this engine forgets it
+        entirely (its capacity is back immediately)."""
+        if not self.paged:
+            raise RuntimeError("page-migration handoff needs a paged cache")
+        req = self.slot_req[slot]
+        if req is None or not self.live[slot]:
+            raise RuntimeError(f"export_handoff({slot}): slot is not live")
+        pos = int(self.pos[slot])
+        n_content = pages_for(pos, self.page_size)
+        owned = self.alloc.owned(slot)
+        content = jnp.asarray(np.asarray(owned[:n_content], np.int32))
+        kv = []
+        for e in self.cache:
+            if "k" in e:     # shared page pool: gather the written prefix
+                kv.append({k: jnp.take(e[k], content, axis=1)
+                           for k in ("k", "v")})
+            else:            # dense per-slot SSM carry: copy the slot row
+                kv.append({k: e[k][:, slot] for k in e})
+        hand = Handoff(rid=req.rid, req_json=_req_to_json(req), pos=pos,
+                       last_tok=int(self.last_tok[slot]),
+                       budget_tokens=len(req.prompt) + req.max_new,
+                       pages=tuple(owned),
+                       block_table=tuple(int(p) for p in
+                                         self.block_tables[slot]),
+                       n_content_pages=n_content, kv=tuple(kv))
+        self.alloc.export_pages(slot)
+        self.block_tables[slot] = 0
+        self.slot_req[slot] = None
+        self.live[slot] = False
+        self.pos[slot] = 0
+        req.slot = -1
+        self.handoffs_out += 1
+        self.pages_exported += n_content
+        return hand
+
+    def can_import(self, hand: Handoff) -> bool:
+        """Whether :meth:`migrate` would succeed RIGHT NOW (a free slot
+        and the handoff's full page budget). The router's backpressure
+        gate — a False keeps the handoff queued at the router."""
+        free = any(not self.live[s] and self.slot_req[s] is None
+                   for s in range(self.B))
+        return (self.paged and free
+                and self.alloc.can_admit(hand.budget_tokens))
+
+    def migrate(self, hand: Handoff) -> bool:
+        """Import a migrated prefill into this engine: bind a free slot,
+        allocate the destination page budget (``import_pages`` — fresh
+        ids, handoff metadata cross-checked), scatter the content pages
+        and SSM carry into the pools, and resume the request at its
+        handoff position. Returns False WITHOUT side effects when no slot
+        or pages are available (backpressure); raises AllocatorError only
+        on a genuinely torn handoff."""
+        if not self.paged:
+            raise RuntimeError("page-migration handoff needs a paged cache")
+        if self.role == "prefill":
+            raise RuntimeError("prefill-role worker cannot import decodes")
+        if not self.can_import(hand):
+            return False
+        slot = next(s for s in range(self.B)
+                    if not self.live[s] and self.slot_req[s] is None)
+        dst = self.alloc.import_pages(slot, hand.pages, hand.block_table)
+        row = np.zeros((self.max_blocks,), np.int32)
+        row[:len(dst)] = dst
+        self.block_tables[slot] = row
+        dst_content = jnp.asarray(
+            np.asarray(dst[:hand.n_content_pages], np.int32))
+        cache = []
+        for e, h in zip(self.cache, hand.kv):
+            if "k" in e:
+                cache.append({k: e[k].at[:, dst_content].set(
+                    h[k].astype(e[k].dtype)) for k in ("k", "v")})
+            else:
+                cache.append({k: e[k].at[:, slot].set(
+                    h[k].astype(e[k].dtype)) for k in e})
+        self.cache = tuple(cache)
+        req = _req_from_json(hand.req_json)
+        req.slot = slot
+        req.status = RequestStatus.RUNNING
+        self.slot_req[slot] = req
+        self.pos[slot] = hand.pos
+        self.last_tok[slot] = hand.last_tok
+        self.live[slot] = True
+        self.migrations_in += 1
+        self.pages_imported += hand.n_content_pages
+        return True
 
     # -- snapshot / restore / recovery --------------------------------------
 
@@ -832,23 +1134,242 @@ class ServeEngine:
 
     # -- batch convenience wrapper -----------------------------------------
 
-    def generate(self, prompts: Sequence[Sequence[int]], max_new: int = 32,
+    def generate(self, prompts: Sequence[Union[Sequence[int], RequestSpec]],
+                 max_new: int = 32,
                  eos_id: Optional[int] = None) -> GenerateResult:
         """Submit every prompt, run to completion, return a batch result
         (rows in submit order). More prompts than slots simply queue —
-        freed slots are refilled mid-decode."""
+        freed slots are refilled mid-decode. Prompts may be raw token
+        sequences (the kwargs apply) or per-row :class:`RequestSpec`
+        values (the spec's own fields win). A malformed prompt does NOT
+        abort the batch: its row comes back zeroed (length 0, status
+        "rejected") with the typed exception in ``result.rejected``."""
         base_steps = self.decode_steps
-        rids = [self.submit(p, max_new=max_new, eos_id=eos_id)
-                for p in prompts]
+        rids: List[Optional[int]] = []
+        rejected: Dict[int, RejectedRequest] = {}
+        widths: List[int] = []
+        pre_toks = 0
+        for i, p in enumerate(prompts):
+            widths.append(p.max_new if isinstance(p, RequestSpec)
+                          else max_new)
+            try:
+                rids.append(self.submit(p, max_new=max_new, eos_id=eos_id))
+                pre_toks += len(p.prompt if isinstance(p, RequestSpec)
+                                else p)
+            except RejectedRequest as e:
+                rejected[i] = e
+                rids.append(None)
         self.run()
         n = len(prompts)
-        out = np.zeros((n, max_new), np.int32)
+        width = max(widths, default=max_new)
+        out = np.zeros((n, width), np.int32)
         lengths = np.zeros((n,), np.int64)
+        statuses: List[str] = []
         for i, rid in enumerate(rids):
+            if rid is None:
+                statuses.append(RequestStatus.REJECTED.value)
+                continue
             req = self.collect(rid)
-            t = req.tokens[:max_new]
+            t = req.tokens[:width]
             out[i, :len(t)] = t
             lengths[i] = req.length
-        return GenerateResult(out, lengths,
-                              prefill_tokens=sum(len(p) for p in prompts),
-                              decode_steps=self.decode_steps - base_steps)
+            statuses.append(req.status.value)
+        return GenerateResult(out, lengths, prefill_tokens=pre_toks,
+                              decode_steps=self.decode_steps - base_steps,
+                              statuses=statuses, rejected=rejected)
+
+
+# ---------------------------------------------------------------------------
+# Engine construction config
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    """Engine construction, consolidated: the ~20 flat CLI flags of
+    ``launch/serve.py`` and the duplicated keyword soup of the serving
+    benchmarks, as ONE validated dataclass with the same groups the CLI
+    shows (engine / paging / robustness / chaos / disagg) and ONE builder.
+    ``build(model_cfg)`` returns a :class:`ServeEngine` — or, when
+    ``disagg`` is set, the router/worker topology
+    (:class:`~repro.serving.disagg.Router`) behind the same streaming
+    API. ``add_cli_args`` / ``from_cli_args`` keep the flag names the CLI
+    always had, grouped."""
+    # engine
+    max_seq: int = 256
+    batch_size: int = 4
+    chunk: int = 0
+    seed: int = 0
+    plan_cache: Optional[str] = None
+    plan_hw: str = ""
+    # paging
+    page_size: int = 0
+    n_pages: int = 0
+    admit_k: int = 0
+    # robustness
+    max_queue: int = 0
+    shed_policy: Union[str, Callable] = "reject"
+    ttft_deadline_s: Optional[float] = None
+    deadline_s: Optional[float] = None
+    snapshot_dir: Optional[str] = None
+    snapshot_every: int = 8
+    max_restarts: int = 3
+    recover: Optional[bool] = None
+    # chaos (seeded fault injection; rate 0 = off)
+    chaos_rate: float = 0.0
+    chaos_seed: int = 0
+    chaos_horizon: int = 256
+    # disagg (router/worker topology; requires paging — the handoff IS
+    # page migration)
+    disagg: bool = False
+    prefill_workers: int = 1
+    decode_workers: int = 1
+    prefill_slots: int = 0      # 0 = batch_size
+    decode_slots: int = 0       # 0 = batch_size
+
+    def __post_init__(self):
+        for name in ("max_seq", "batch_size", "prefill_workers",
+                     "decode_workers"):
+            if int(getattr(self, name)) < 1:
+                raise ValueError(f"{name} must be >= 1, "
+                                 f"got {getattr(self, name)}")
+        for name in ("chunk", "page_size", "n_pages", "admit_k",
+                     "max_queue", "snapshot_every", "max_restarts",
+                     "prefill_slots", "decode_slots"):
+            if int(getattr(self, name)) < 0:
+                raise ValueError(f"{name} must be >= 0, "
+                                 f"got {getattr(self, name)}")
+        if not callable(self.shed_policy) and \
+                self.shed_policy not in ("reject", "deadline"):
+            raise ValueError(f"shed_policy must be reject|deadline|callable,"
+                             f" got {self.shed_policy!r}")
+        if self.chaos_rate < 0:
+            raise ValueError(f"chaos_rate must be >= 0, "
+                             f"got {self.chaos_rate}")
+        if self.disagg and self.page_size <= 0:
+            raise ValueError(
+                "disagg mode needs a paged KV cache (page_size > 0): the "
+                "prefill→decode handoff is page migration")
+
+    # -- chaos --------------------------------------------------------------
+
+    def worker_targets(self) -> Tuple[Tuple[str, int], ...]:
+        """Every (role, index) in the disagg topology, crash-target
+        order."""
+        return (tuple(("prefill", i) for i in range(self.prefill_workers))
+                + tuple(("decode", i) for i in range(self.decode_workers)))
+
+    def make_faults(self, role: Optional[Tuple[str, int]] = None):
+        """Seeded chaos injector from the chaos group (None when the rate
+        is 0). In disagg mode, crash draws target single workers and each
+        worker gets a role-scoped injector over the SAME plan."""
+        if self.chaos_rate <= 0:
+            return None
+        from repro.serving.faults import FaultInjector, FaultPlan
+        plan = FaultPlan.poisson(
+            self.chaos_seed, self.chaos_horizon,
+            crash_rate=self.chaos_rate, nan_rate=self.chaos_rate,
+            spike_rate=self.chaos_rate,
+            workers=self.worker_targets() if self.disagg else ())
+        return FaultInjector(plan, role=role)
+
+    # -- the one builder ----------------------------------------------------
+
+    def build(self, model_cfg: ModelConfig, params=None, mesh=None,
+              clock: Optional[Callable[[], float]] = None,
+              on_token: Optional[Callable[[int, int, int], None]] = None,
+              faults="auto"):
+        """Construct the engine this config describes: a ServeEngine, or
+        the Router topology when ``disagg`` is set. ``faults="auto"``
+        derives injector(s) from the chaos group; pass an injector or
+        None to override. Chaos with unset ``recover`` turns recovery
+        on."""
+        recover = self.recover
+        if recover is None and self.chaos_rate > 0:
+            recover = True
+        if self.disagg:
+            from repro.serving.disagg import Router   # disagg imports us
+            return Router(model_cfg, self, params=params, mesh=mesh,
+                          clock=clock, on_token=on_token, faults=faults)
+        inj = self.make_faults() if faults == "auto" else faults
+        return ServeEngine(
+            model_cfg, params=params, mesh=mesh, max_seq=self.max_seq,
+            batch_size=self.batch_size, seed=self.seed,
+            plan_cache=self.plan_cache, plan_hw=self.plan_hw,
+            chunk=self.chunk, page_size=self.page_size,
+            n_pages=self.n_pages, admit_k=self.admit_k,
+            max_queue=self.max_queue, shed_policy=self.shed_policy,
+            ttft_deadline_s=self.ttft_deadline_s, deadline_s=self.deadline_s,
+            snapshot_dir=self.snapshot_dir,
+            snapshot_every=self.snapshot_every,
+            max_restarts=self.max_restarts, recover=recover, faults=inj,
+            clock=clock, on_token=on_token)
+
+    # -- CLI mapping --------------------------------------------------------
+
+    @staticmethod
+    def add_cli_args(ap) -> None:
+        """Register the flag groups on an argparse parser (same flag
+        names ``launch/serve.py`` always had, now grouped)."""
+        g = ap.add_argument_group("engine")
+        g.add_argument("--max-seq", type=int, default=128)
+        g.add_argument("--batch", type=int, default=4,
+                       help="decode slots (disagg: default per-role slots)")
+        g.add_argument("--chunk", type=int, default=16,
+                       help="prefill chunk length")
+        g.add_argument("--seed", type=int, default=0)
+        g.add_argument("--plan-cache", default=None)
+        g.add_argument("--plan-hw", default="")
+        g = ap.add_argument_group("paging")
+        g.add_argument("--page-size", type=int, default=0,
+                       help="paged KV page length (0 = contiguous cache)")
+        g.add_argument("--pages", type=int, default=0,
+                       help="pool size incl. null page (0 = parity)")
+        g.add_argument("--admit-k", type=int, default=0,
+                       help="max stacked admissions per step (0 = slots)")
+        g = ap.add_argument_group("robustness")
+        g.add_argument("--max-queue", type=int, default=0,
+                       help="bounded queue (0 = unbounded)")
+        g.add_argument("--shed", default="reject",
+                       choices=["reject", "deadline"])
+        g.add_argument("--ttft-deadline", type=float, default=None)
+        g.add_argument("--deadline", type=float, default=None)
+        g.add_argument("--snapshot-dir", default=None)
+        g.add_argument("--snapshot-every", type=int, default=8)
+        g.add_argument("--max-restarts", type=int, default=3)
+        g = ap.add_argument_group("chaos")
+        g.add_argument("--chaos", type=float, default=0.0,
+                       help="per-step fault rate (0 = off)")
+        g.add_argument("--chaos-seed", type=int, default=0)
+        g = ap.add_argument_group("disagg")
+        g.add_argument("--disagg", action="store_true",
+                       help="router/worker topology (needs --page-size)")
+        g.add_argument("--prefill-workers", type=int, default=1)
+        g.add_argument("--decode-workers", type=int, default=1)
+        g.add_argument("--prefill-slots", type=int, default=0,
+                       help="slots per prefill worker (0 = --batch)")
+        g.add_argument("--decode-slots", type=int, default=0,
+                       help="slots per decode worker (0 = --batch)")
+
+    @classmethod
+    def from_cli_args(cls, args, chaos_horizon: int = 0) -> "EngineConfig":
+        """Parsed argparse namespace → EngineConfig (flag names as
+        registered by :meth:`add_cli_args`)."""
+        return cls(max_seq=args.max_seq, batch_size=args.batch,
+                   chunk=args.chunk, seed=args.seed,
+                   plan_cache=args.plan_cache, plan_hw=args.plan_hw,
+                   page_size=args.page_size, n_pages=args.pages,
+                   admit_k=args.admit_k, max_queue=args.max_queue,
+                   shed_policy=args.shed,
+                   ttft_deadline_s=args.ttft_deadline,
+                   deadline_s=args.deadline,
+                   snapshot_dir=args.snapshot_dir,
+                   snapshot_every=args.snapshot_every,
+                   max_restarts=args.max_restarts,
+                   chaos_rate=args.chaos, chaos_seed=args.chaos_seed,
+                   chaos_horizon=chaos_horizon or 256,
+                   disagg=args.disagg,
+                   prefill_workers=args.prefill_workers,
+                   decode_workers=args.decode_workers,
+                   prefill_slots=args.prefill_slots,
+                   decode_slots=args.decode_slots)

@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List, Mapping, Tuple
+from typing import Callable, Dict, List, Mapping, Optional, Tuple
 
 import numpy as np
 
@@ -50,6 +50,13 @@ class FaultPlan:
     * ``page_squeeze`` — step -> (n_pages, hold_steps): temporarily claim
       free pages from the engine's allocator (memory-pressure admission
       stall), released ``hold_steps`` later.
+    * ``crash_workers`` — step -> (role, index): crash ONE worker of the
+      disaggregated topology (e.g. ``("decode", 0)``) at that step. Only
+      role-scoped injectors (``FaultInjector(plan, role=...)``) fire
+      these, and only the matching worker's injector raises — the router
+      hands the same plan to every worker, so a single seed targets a
+      single worker role across the whole fleet. Ignored by role-less
+      (single-engine) injectors.
     """
     seed: int = 0
     crash_steps: Tuple[int, ...] = ()
@@ -57,21 +64,32 @@ class FaultPlan:
     nan_rows: Mapping[int, int] = dataclasses.field(default_factory=dict)
     page_squeeze: Mapping[int, Tuple[int, int]] = dataclasses.field(
         default_factory=dict)
+    crash_workers: Mapping[int, Tuple[str, int]] = dataclasses.field(
+        default_factory=dict)
 
     @classmethod
     def poisson(cls, seed: int, horizon: int, crash_rate: float = 0.02,
                 nan_rate: float = 0.02, spike_rate: float = 0.05,
                 spike_s: float = 0.02, squeeze_rate: float = 0.0,
                 squeeze_pages: int = 2, squeeze_hold: int = 4,
-                start: int = 2) -> "FaultPlan":
+                start: int = 2,
+                workers: Tuple[Tuple[str, int], ...] = ()) -> "FaultPlan":
         """Chaos schedule: independent per-step Bernoulli draws for each
         fault class over ``[start, horizon)`` — the discrete analogue of a
-        Poisson fault process. One seed reproduces the whole trace."""
+        Poisson fault process. One seed reproduces the whole trace.
+
+        With ``workers`` (disaggregated topology: a tuple of ``(role,
+        index)`` targets), each crash draw hits one uniformly chosen
+        worker and lands in ``crash_workers`` instead of ``crash_steps``
+        — the whole-engine crash becomes a single-worker loss."""
         rng = np.random.default_rng(seed)
-        crash, lat, nan, squeeze = [], {}, {}, {}
+        crash, lat, nan, squeeze, wcrash = [], {}, {}, {}, {}
         for t in range(start, horizon):
             if rng.random() < crash_rate:
-                crash.append(t)
+                if workers:
+                    wcrash[t] = tuple(workers[int(rng.integers(len(workers)))])
+                else:
+                    crash.append(t)
             if rng.random() < spike_rate:
                 lat[t] = spike_s
             if rng.random() < nan_rate:
@@ -79,13 +97,14 @@ class FaultPlan:
             if rng.random() < squeeze_rate:
                 squeeze[t] = (squeeze_pages, squeeze_hold)
         return cls(seed=seed, crash_steps=tuple(crash), latency_s=lat,
-                   nan_rows=nan, page_squeeze=squeeze)
+                   nan_rows=nan, page_squeeze=squeeze, crash_workers=wcrash)
 
     def summary(self) -> Dict[str, int]:
         return {"crash": len(self.crash_steps),
                 "latency": len(self.latency_s),
                 "nan": len(self.nan_rows),
-                "page_squeeze": len(self.page_squeeze)}
+                "page_squeeze": len(self.page_squeeze),
+                "worker_crash": len(self.crash_workers)}
 
 
 class FaultInjector:
@@ -94,9 +113,14 @@ class FaultInjector:
     injects (``counts``) and records an event log for assertions."""
 
     def __init__(self, plan: FaultPlan,
-                 sleep: Callable[[float], None] = time.sleep):
+                 sleep: Callable[[float], None] = time.sleep,
+                 role: Optional[Tuple[str, int]] = None):
         self.plan = plan
         self.sleep = sleep
+        # role=(name, index) scopes this injector to ONE worker of a
+        # disaggregated topology: only the plan's matching crash_workers
+        # entries fire here (the router clones one plan across workers)
+        self.role = tuple(role) if role is not None else None
         self.counts: Dict[str, int] = {"crash": 0, "latency": 0, "nan": 0,
                                        "page_squeeze": 0}
         self.events: List[Tuple[int, str]] = []
@@ -129,6 +153,14 @@ class FaultInjector:
                 self._squeezes[key] = t + hold
                 self.counts["page_squeeze"] += 1
                 self.events.append((t, f"squeeze {n_pages} pages"))
+        if self.role is not None:
+            tgt = self.plan.crash_workers.get(t)
+            if tgt is not None and tuple(tgt) == self.role:
+                self.counts["crash"] += 1
+                self.events.append((t, f"crash {self.role[0]}{self.role[1]}"))
+                raise InjectedFault(
+                    t, f"injected {self.role[0]}-worker {self.role[1]} "
+                       f"loss at step {t}")
         if t in self.plan.crash_steps:
             self.counts["crash"] += 1
             self.events.append((t, "crash"))

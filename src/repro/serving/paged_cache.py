@@ -33,7 +33,7 @@ max_blocks) int32`` operands.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List
+from typing import Dict, List, Sequence
 
 NULL_PAGE = 0
 
@@ -166,6 +166,51 @@ class BlockAllocator:
             del self._owner[p]
         self._free.extend(pages)
         return len(pages)
+
+    # -- migration (disaggregated prefill/decode handoff) -------------------
+
+    def export_pages(self, slot: int) -> List[int]:
+        """Detach ``slot``'s pages for MIGRATION to another pool: returns
+        the page ids in block-table order and reclaims them (they join this
+        pool's free list immediately, so the exporting worker's capacity is
+        back the moment the handoff leaves). The caller must copy the page
+        CONTENTS out of the device pool *before* calling this — after it
+        returns, the ids may be handed straight to the next admission."""
+        if slot not in self._owned:
+            raise AllocatorError(
+                f"export_pages({slot}): slot owns no pages "
+                f"(double export or stale slot id)")
+        pages = list(self._owned[slot])
+        self.free_slot(slot)
+        return pages
+
+    def import_pages(self, slot: int, pages: Sequence[int],
+                     block_table: Sequence[int]) -> List[int]:
+        """Admit a migrated request into THIS pool: allocate one fresh
+        destination page per exported source id, owned by ``slot``. The
+        handoff carries the request's FULL ``prompt + max_new`` budget
+        (that is what the exporting pool allocated at admission), so the
+        all-at-once admission invariant — a live request can never starve
+        mid-decode — survives the migration. ``pages`` and ``block_table``
+        both come from the exporting pool; the table's non-null prefix
+        must equal ``pages``, so a torn handoff (metadata stitched from
+        two different exports) fails HERE, before any page content lands.
+        Returns the destination ids positionally matched to ``pages``; the
+        caller copies page contents src→dst and writes its own table row.
+        """
+        pages = [int(p) for p in pages]
+        table = [int(p) for p in list(block_table)]
+        if not pages:
+            raise AllocatorError(f"import_pages({slot}): empty page list")
+        if NULL_PAGE in pages:
+            raise AllocatorError(
+                f"import_pages({slot}): null page in the handoff")
+        if table[:len(pages)] != pages or \
+                any(p != NULL_PAGE for p in table[len(pages):]):
+            raise AllocatorError(
+                f"import_pages({slot}): block table {table} does not "
+                f"describe exported pages {pages} (torn handoff)")
+        return self.allocate(slot, len(pages) * self.cfg.page_size)
 
     # -- invariants / snapshot ---------------------------------------------
 

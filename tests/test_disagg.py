@@ -1,0 +1,412 @@
+"""Disaggregated prefill/decode serving (serving/disagg.py): paged-page
+KV migration between a PrefillWorker and a DecodeWorker, Router
+scheduling (FIFO dispatch, backpressure, route hints), bit-exactness vs
+the shared single engine, TTFT decoupling at equal total slots, and
+exactly-once delivery across the handoff boundary under single-worker
+crashes. Uses the non-MoE qwen2 smoke arch so greedy decode is
+batch-composition independent (bit-exact comparisons), plus the mamba2
+smoke arch for SSM-state (non-paged per-slot state) migration."""
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.serving import (DecodeWorker, EngineConfig, FaultInjector,
+                           FaultPlan, PrefillWorker, RejectedRequest,
+                           RejectReason, RequestSpec, RequestStatus, Router,
+                           ServeEngine)
+from repro.serving.paged_cache import (AllocatorError, BlockAllocator,
+                                       pages_for)
+
+
+@pytest.fixture(scope="module")
+def params():
+    cfg = get_config("qwen2-0.5b-smoke")
+    eng = ServeEngine(cfg, max_seq=64, batch_size=2, seed=0, chunk=4)
+    return eng.params
+
+
+def make_ec(**kw):
+    kw.setdefault("max_seq", 64)
+    kw.setdefault("chunk", 4)
+    kw.setdefault("page_size", 8)
+    kw.setdefault("disagg", True)
+    kw.setdefault("prefill_workers", 1)
+    kw.setdefault("decode_workers", 1)
+    kw.setdefault("prefill_slots", 2)
+    kw.setdefault("decode_slots", 2)
+    return EngineConfig(**kw)
+
+
+def make_router(params, **kw):
+    cfg = get_config("qwen2-0.5b-smoke")
+    return make_ec(**kw).build(cfg, params=params)
+
+
+def make_shared(params, **kw):
+    cfg = get_config("qwen2-0.5b-smoke")
+    kw.setdefault("max_seq", 64)
+    kw.setdefault("batch_size", 4)
+    kw.setdefault("chunk", 4)
+    kw.setdefault("page_size", 8)
+    return EngineConfig(**kw).build(cfg, params=params)
+
+
+PROMPTS = [[3, 1, 4, 1, 5], [2, 7, 1], [9, 10, 11, 12, 13, 14, 15, 16, 17],
+           [6, 5]]
+
+
+def run_all(eng, prompts, max_new=4, **submit_kw):
+    rids = [eng.submit(p, max_new=max_new, **submit_kw) for p in prompts]
+    eng.run()
+    return {r: list(eng.finished[r].tokens) for r in rids}
+
+
+# ---------------------------------------------------------------------------
+# Allocator page migration (pure allocator, no model)
+# ---------------------------------------------------------------------------
+
+
+def _alloc(n_pages=9, page_size=8, max_blocks=8):
+    return BlockAllocator(n_pages, page_size, max_blocks)
+
+
+def test_export_frees_pages_and_returns_them():
+    a = _alloc()
+    got = a.allocate(0, 20)                       # 3 pages
+    free_before = a.free_pages
+    pages = a.export_pages(0)
+    assert pages == got
+    assert a.free_pages == free_before + 3        # capacity back at handoff
+    assert a.owned(0) == []
+
+
+def test_double_export_raises():
+    a = _alloc()
+    a.allocate(0, 8)
+    a.export_pages(0)
+    with pytest.raises(AllocatorError):
+        a.export_pages(0)
+
+
+def test_import_allocates_matching_count():
+    src, dst = _alloc(), _alloc()
+    pages = src.allocate(0, 17)                   # 3 pages
+    table = pages + [0] * 5
+    src.export_pages(0)
+    got = dst.import_pages(1, pages, table)
+    assert len(got) == 3 and dst.owned(1) == got
+
+
+def test_import_torn_handoff_raises():
+    src, dst = _alloc(), _alloc()
+    pages = src.allocate(0, 17)
+    src.export_pages(0)
+    bad = list(pages)
+    bad[1] = bad[1] + 1 if bad[1] + 1 not in bad else bad[1] + 2
+    with pytest.raises(AllocatorError):           # table disagrees w/ pages
+        dst.import_pages(1, pages, bad + [0] * 5)
+    with pytest.raises(AllocatorError):           # null page in payload
+        dst.import_pages(1, [0] + pages[1:], [0] + pages[1:] + [0] * 5)
+    with pytest.raises(AllocatorError):           # empty handoff
+        dst.import_pages(1, [], [0] * 8)
+
+
+# ---------------------------------------------------------------------------
+# Engine-level handoff: export on one engine, migrate into another
+# ---------------------------------------------------------------------------
+
+
+def test_export_migrate_continues_bit_exact(params):
+    """Prefill on worker A, export, import into worker B, decode there:
+    the resulting stream must equal the single shared engine's."""
+    cfg = get_config("qwen2-0.5b-smoke")
+    ref = run_all(make_shared(params), PROMPTS[:1], max_new=5)
+    a = PrefillWorker(cfg, params=params, max_seq=64, batch_size=2,
+                      chunk=4, page_size=8)
+    b = DecodeWorker(cfg, params=params, max_seq=64, batch_size=2,
+                     chunk=4, page_size=8)
+    b.emitted = a.emitted                         # shared watermark
+    rid = a.submit(PROMPTS[0], max_new=5)
+    while not a.outbox:                           # _after_phases auto-exports
+        a.step()                                  # each finished prefill
+    hand = a.outbox.pop()
+    assert not any(a.live) and a.handoffs_out == 1
+    assert hand.n_content_pages == pages_for(len(PROMPTS[0]), a.page_size)
+    assert b.can_import(hand) and b.migrate(hand)
+    while b.pending:
+        b.step()
+    assert list(b.finished[rid].tokens) == ref[0]
+    assert b.prefill_tokens == 0                  # pages moved, no re-prefill
+
+
+def test_prefill_worker_cannot_decode_or_migrate(params):
+    cfg = get_config("qwen2-0.5b-smoke")
+    a = PrefillWorker(cfg, params=params, max_seq=64, batch_size=2,
+                      chunk=4, page_size=8)
+    assert a.decode is None
+    with pytest.raises(RuntimeError):
+        a.migrate(None)
+    b = DecodeWorker(cfg, params=params, max_seq=64, batch_size=2,
+                     chunk=4, page_size=8)
+    assert b.prefill is None
+    with pytest.raises(RuntimeError):             # decode role takes no
+        b.submit(PROMPTS[0], max_new=2)           # direct submissions
+
+
+# ---------------------------------------------------------------------------
+# Router topology: parity, scheduling, accounting
+# ---------------------------------------------------------------------------
+
+
+def test_router_parity_vs_shared_engine(params):
+    ref = run_all(make_shared(params), PROMPTS, max_new=4)
+    router = make_router(params)
+    got = run_all(router, PROMPTS, max_new=4)
+    assert got == ref
+    assert all(router.finished[r].status == RequestStatus.OK for r in got)
+
+
+def test_router_generate_parity(params):
+    ref = make_shared(params).generate(PROMPTS, max_new=4)
+    got = make_router(params).generate(PROMPTS, max_new=4)
+    assert np.array_equal(np.asarray(ref.tokens), np.asarray(got.tokens))
+    assert got.statuses == ["ok"] * len(PROMPTS)
+
+
+def test_router_eos_parity(params):
+    """eos fired mid-stream on the decode worker truncates exactly like
+    the shared engine (eos taken from the reference's generated run)."""
+    ref_full = run_all(make_shared(params), PROMPTS[:1], max_new=6)
+    eos = ref_full[0][2]                          # stop after 3 tokens
+    ref = run_all(make_shared(params), PROMPTS[:1], max_new=6, eos_id=eos)
+    got = run_all(make_router(params), PROMPTS[:1], max_new=6, eos_id=eos)
+    assert got == ref and len(got[0]) <= 3
+
+
+def test_migration_accounting_no_reprefill(params):
+    router = make_router(params)
+    run_all(router, PROMPTS, max_new=4)
+    s = router.summary()
+    assert s["migrations"] == len(PROMPTS)
+    assert s["pages_moved"] == sum(pages_for(len(p), router.page_size)
+                                   for p in PROMPTS)
+    assert all(w.prefill_tokens == 0 for w in router.decodes)
+    assert all(w.decode_tokens == 0 for w in router.prefills)
+    assert router.prefill_tokens == sum(len(p) for p in PROMPTS)
+
+
+def test_backpressure_single_decode_slot(params):
+    """decode_slots=1 forces handoffs to wait in the ready queue; FIFO
+    order and bit-exactness must survive the backpressure."""
+    ref = run_all(make_shared(params), PROMPTS, max_new=4)
+    router = make_router(params, decode_slots=1)
+    got = run_all(router, PROMPTS, max_new=4)
+    assert got == ref
+    assert router.summary()["migrations"] == len(PROMPTS)
+
+
+def test_multi_worker_spread_with_route_hints(params):
+    """2x1 prefill -> 2x1 decode: route hints pin prompts to distinct
+    prefill workers; every stream still matches the shared engine."""
+    ref = run_all(make_shared(params), PROMPTS, max_new=4)
+    router = make_router(params, prefill_workers=2, decode_workers=2,
+                         prefill_slots=1, decode_slots=1)
+    rids = [router.submit(RequestSpec(tuple(p), max_new=4, route_hint=i))
+            for i, p in enumerate(PROMPTS)]
+    router.run()
+    assert {r: list(router.finished[r].tokens) for r in rids} == ref
+    assert all(w.prefill_tokens > 0 for w in router.prefills)
+    assert sum(w.decode_tokens > 0 for w in router.decodes) >= 1
+
+
+def test_router_rejections_match_engine_reasons(params):
+    router = make_router(params)
+    for prompt, kw, reason in [
+            ([], {}, RejectReason.EMPTY_PROMPT),
+            ([1, 2, 3], {"max_new": 62}, RejectReason.TOO_LONG),
+            ("text", {}, RejectReason.INVALID),
+    ]:
+        with pytest.raises(RejectedRequest) as ei:
+            router.submit(prompt, **kw)
+        assert ei.value.reason == reason
+        assert ei.value.request.status == RequestStatus.REJECTED
+    # still serviceable afterwards
+    got = run_all(router, PROMPTS[:1], max_new=3)
+    assert len(next(iter(got.values()))) == 3
+
+
+def test_router_over_capacity_uses_tightest_pool(params):
+    router = make_router(params, n_pages=5)       # 4 usable pages
+    with pytest.raises(RejectedRequest) as ei:
+        router.submit(list(range(1, 35)), max_new=8)   # 6 pages > 4
+    assert ei.value.reason == RejectReason.OVER_CAPACITY
+
+
+def test_router_bounded_queue_and_shed(params):
+    router = make_router(params, max_queue=2, shed_policy="reject")
+    rids = [router.submit(p, max_new=2) for p in PROMPTS[:2]]
+    # workers haven't stepped: both sit in the router queue
+    with pytest.raises(RejectedRequest) as ei:
+        router.submit(PROMPTS[2], max_new=2)
+    assert ei.value.reason == RejectReason.QUEUE_FULL
+    router.run()
+    assert all(router.finished[r].status == RequestStatus.OK for r in rids)
+
+
+def test_router_cancel_queued_and_running(params):
+    router = make_router(params)
+    r0 = router.submit(PROMPTS[0], max_new=16)
+    r1 = router.submit(PROMPTS[1], max_new=16)
+    assert router.cancel(r1)                      # still router-queued
+    assert router.finished[r1].status == RequestStatus.CANCELLED
+    for _ in range(3):
+        router.step()
+    assert router.cancel(r0)                      # live on a worker
+    router.run()
+    assert router.finished[r0].status == RequestStatus.CANCELLED
+    assert not router.cancel(r0)                  # already terminal
+
+
+def test_engineconfig_disagg_requires_paging():
+    with pytest.raises(ValueError):
+        EngineConfig(disagg=True, page_size=0)
+
+
+# ---------------------------------------------------------------------------
+# TTFT decoupling at equal total slots (virtual tick clock)
+# ---------------------------------------------------------------------------
+
+
+class Ticks:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def _ttft_trace(build, prompts, arrivals, max_new):
+    clock = Ticks()
+    eng = build(clock)
+    rids, nxt = [], 0
+    while nxt < len(prompts) or eng.pending:
+        while nxt < len(prompts) and arrivals[nxt] <= clock.t:
+            rids.append(eng.submit(prompts[nxt], max_new=max_new))
+            nxt += 1
+        if not eng.pending and nxt < len(prompts):
+            rids.append(eng.submit(prompts[nxt], max_new=max_new))
+            nxt += 1
+        eng.step()
+        clock.t += 1.0
+    toks = {r: list(eng.finished[r].tokens) for r in rids}
+    ttfts = [eng.finished[r].ttft_s for r in rids]
+    return eng, toks, ttfts
+
+
+@pytest.mark.slow
+def test_disagg_ttft_below_shared_on_poisson_trace(params):
+    """The paper point of the topology: on a prefill-heavy mixed trace at
+    EQUAL total slots, prefill admission no longer waits on decode slot
+    turnover, so mean TTFT (in deterministic scheduler ticks) drops
+    strictly below the shared engine's — with bit-exact streams."""
+    cfg = get_config("qwen2-0.5b-smoke")
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(1, cfg.vocab_size,
+                            size=int(rng.integers(8, 33))).tolist()
+               for _ in range(10)]
+    arrivals = np.cumsum(rng.exponential(1.5, size=len(prompts))).astype(int)
+    shared_ec = EngineConfig(max_seq=64, batch_size=4, chunk=4, page_size=8)
+    _, ref, tt_shared = _ttft_trace(
+        lambda c: shared_ec.build(cfg, params=params, clock=c),
+        prompts, arrivals, max_new=8)
+    _, got, tt_dis = _ttft_trace(
+        lambda c: make_ec().build(cfg, params=params, clock=c),
+        prompts, arrivals, max_new=8)
+    assert got == ref
+    assert float(np.mean(tt_dis)) < float(np.mean(tt_shared))
+
+
+# ---------------------------------------------------------------------------
+# Exactly-once across the handoff boundary under single-worker crashes
+# ---------------------------------------------------------------------------
+
+
+def _crash_run(params, crash_workers, emissions, **ec_kw):
+    with tempfile.TemporaryDirectory(prefix="repro_disagg_t_") as snap:
+        ec = make_ec(snapshot_dir=snap, snapshot_every=2, max_restarts=16,
+                     recover=True, **ec_kw)
+        plan = FaultPlan(crash_workers=crash_workers)
+        inj = {t: FaultInjector(plan, role=t) for t in ec.worker_targets()}
+        router = ec.build(
+            get_config("qwen2-0.5b-smoke"), params=params, faults=inj,
+            on_token=lambda r, i, t: emissions.append((r, i, t)))
+        toks = run_all(router, PROMPTS, max_new=4)
+        injected = sum(i.counts["crash"] for i in inj.values())
+    return router, toks, injected
+
+
+def _check_exactly_once(emissions, toks):
+    seen, dup = set(), 0
+    for r, i, _ in emissions:
+        dup += (r, i) in seen
+        seen.add((r, i))
+    lost = sum((r, i) not in seen
+               for r, t in toks.items() for i in range(len(t)))
+    assert dup == 0 and lost == 0
+
+
+@pytest.mark.slow
+def test_decode_worker_crash_exactly_once(params):
+    ref = run_all(make_router(params), PROMPTS, max_new=4)
+    emissions = []
+    router, toks, injected = _crash_run(params, {4: ("decode", 0)},
+                                        emissions)
+    assert injected == 1 and router.recoveries == router.failures == 1
+    assert toks == ref
+    assert all(router.finished[r].status == RequestStatus.OK for r in toks)
+    _check_exactly_once(emissions, toks)
+
+
+@pytest.mark.slow
+def test_prefill_worker_crash_exactly_once(params):
+    """A prefill loss replays prefill from the restored snapshot; any
+    duplicate handoff of an already-migrated request is deduped by rid
+    at the router, so decode never sees the same stream twice."""
+    ref = run_all(make_router(params), PROMPTS, max_new=4)
+    emissions = []
+    router, toks, injected = _crash_run(params, {3: ("prefill", 0)},
+                                        emissions)
+    assert injected == 1 and router.recoveries == router.failures == 1
+    assert toks == ref
+    _check_exactly_once(emissions, toks)
+
+
+@pytest.mark.slow
+def test_both_roles_crash_exactly_once(params):
+    ref = run_all(make_router(params), PROMPTS, max_new=4)
+    emissions = []
+    router, toks, injected = _crash_run(
+        params, {3: ("prefill", 0), 6: ("decode", 0)}, emissions)
+    assert injected == 2 and router.recoveries == 2
+    assert toks == ref
+    _check_exactly_once(emissions, toks)
+
+
+# ---------------------------------------------------------------------------
+# SSM per-slot state migration (non-paged recurrent state rides the
+# handoff alongside the paged KV pages)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_ssm_state_migration_parity():
+    cfg = get_config("mamba2-780m-smoke")
+    shared = EngineConfig(max_seq=64, batch_size=4, chunk=4,
+                          page_size=8).build(cfg)
+    ref = run_all(shared, PROMPTS[:2], max_new=4)
+    router = make_ec().build(cfg, params=shared.params)
+    got = run_all(router, PROMPTS[:2], max_new=4)
+    assert got == ref
+    assert router.summary()["migrations"] == 2

@@ -1,0 +1,238 @@
+"""The typed serving API surface: RequestSpec validation (one value
+object, validated in __post_init__), kwargs<->spec parity (both
+submission doors reject identically, reason-for-reason), per-row
+rejection in generate() (a malformed prompt no longer aborts the batch),
+and EngineConfig (the one builder behind launch/serve.py and the serving
+benchmarks — flag round-trip and built-engine equivalence)."""
+import argparse
+
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.serving import (EngineConfig, RejectedRequest, RejectReason,
+                           RequestSpec, RequestStatus, ServeEngine)
+
+
+@pytest.fixture(scope="module")
+def params():
+    cfg = get_config("qwen2-0.5b-smoke")
+    eng = ServeEngine(cfg, max_seq=64, batch_size=2, seed=0, chunk=4)
+    return eng.params
+
+
+def make_engine(params, **kw):
+    cfg = get_config("qwen2-0.5b-smoke")
+    kw.setdefault("max_seq", 64)
+    kw.setdefault("batch_size", 2)
+    kw.setdefault("chunk", 4)
+    return ServeEngine(cfg, params=params, **kw)
+
+
+# ---------------------------------------------------------------------------
+# RequestSpec validation (malformed-in-isolation cases)
+# ---------------------------------------------------------------------------
+
+
+def test_spec_normalizes_and_freezes():
+    s = RequestSpec(np.asarray([3, 1, 4], np.int32), max_new=5)
+    assert s.prompt == (3, 1, 4)                  # tuple-ified, int-ified
+    assert all(isinstance(t, int) for t in s.prompt)
+    assert s.budget_tokens == 8
+    with pytest.raises(AttributeError):           # frozen value object
+        s.max_new = 9
+
+
+MALFORMED = [
+    (([],), {}, RejectReason.EMPTY_PROMPT),
+    (("text",), {}, RejectReason.INVALID),        # str is NOT token ids
+    ((b"bytes",), {}, RejectReason.INVALID),
+    (([1, "x", 3],), {}, RejectReason.INVALID),
+    (([1, 2],), {"max_new": 0}, RejectReason.INVALID),
+    (([1, 2],), {"max_new": -3}, RejectReason.INVALID),
+    (([1, 2],), {"eos_id": 1.5}, RejectReason.INVALID),
+    (([1, 2],), {"deadline_s": 0}, RejectReason.INVALID),
+    (([1, 2],), {"deadline_s": True}, RejectReason.INVALID),
+    (([1, 2],), {"ttft_deadline_s": -1.0}, RejectReason.INVALID),
+    (([1, 2],), {"route_hint": -1}, RejectReason.INVALID),
+]
+
+
+@pytest.mark.parametrize("args,kw,reason", MALFORMED)
+def test_spec_rejects_malformed(args, kw, reason):
+    with pytest.raises(RejectedRequest) as ei:
+        RequestSpec(*args, **kw)
+    assert ei.value.reason == reason
+
+
+def test_spec_accepts_numpy_scalars():
+    s = RequestSpec((np.int32(7), np.int64(9)), max_new=np.int32(3),
+                    eos_id=np.int64(2))
+    assert s.prompt == (7, 9) and s.budget_tokens == 5
+
+
+# ---------------------------------------------------------------------------
+# kwargs <-> spec parity: both doors, same verdicts
+# ---------------------------------------------------------------------------
+
+
+def test_submit_parity_malformed(params):
+    """Every malformed case rejects with the SAME reason through the
+    legacy kwargs door and the spec door, and both leave a terminal
+    REJECTED record on the exception."""
+    eng = make_engine(params)
+    for args, kw, reason in MALFORMED:
+        if "route_hint" in kw:                     # spec-only field: no
+            continue                               # kwargs door to compare
+        with pytest.raises(RejectedRequest) as via_kwargs:
+            eng.submit(args[0], **kw)
+        with pytest.raises(RejectedRequest) as via_spec:
+            try:
+                spec = RequestSpec(args[0], **kw)
+            except RejectedRequest:
+                raise                              # spec door = ctor raise
+            eng.submit(spec)
+        assert via_kwargs.value.reason == via_spec.value.reason == reason
+        assert via_kwargs.value.request.status == RequestStatus.REJECTED
+    assert not eng.queue and not eng.pending       # engine untouched
+
+
+def test_submit_spec_fields_win(params):
+    eng = make_engine(params)
+    ref = eng.generate([[5, 6, 7]], max_new=3)
+    spec = RequestSpec((5, 6, 7), max_new=3)
+    got = eng.generate([spec], max_new=31)         # spec's max_new wins
+    assert np.array_equal(ref.tokens, got.tokens[:, :3])
+    assert int(got.lengths[0]) == 3
+
+
+def test_submit_spec_eos_and_deadline(params):
+    eng = make_engine(params, deadline_s=None)
+    full = eng.generate([[5, 6, 7]], max_new=6)
+    eos = int(full.tokens[0, 1])
+    rid = eng.submit(RequestSpec((5, 6, 7), max_new=6, eos_id=eos,
+                                 deadline_s=123.0))
+    req = eng.queue[-1]
+    assert req.rid == rid
+    assert req.eos_id == eos and req.deadline_s == 123.0
+    eng.run()
+    assert len(eng.finished[rid].tokens) <= 2      # eos truncates
+
+
+def test_rejected_rid_not_reused(params):
+    eng = make_engine(params)
+    with pytest.raises(RejectedRequest) as ei:
+        eng.submit([], max_new=2)
+    bad_rid = ei.value.request.rid
+    good_rid = eng.submit([1, 2], max_new=2)
+    assert good_rid != bad_rid                     # rids stay unique
+    eng.run()
+
+
+# ---------------------------------------------------------------------------
+# generate(): per-row rejection instead of batch abort
+# ---------------------------------------------------------------------------
+
+
+def test_generate_survives_malformed_rows(params):
+    eng = make_engine(params)
+    ref = eng.generate([[5, 6, 7], [9, 10]], max_new=3)
+    res = eng.generate([[5, 6, 7], [], [9, 10], "oops"], max_new=3)
+    assert res.statuses == ["ok", "rejected", "ok", "rejected"]
+    assert set(res.rejected) == {1, 3}
+    assert res.rejected[1].reason == RejectReason.EMPTY_PROMPT
+    assert res.rejected[3].reason == RejectReason.INVALID
+    # rejected rows zeroed, accepted rows identical to the clean batch
+    assert not res.tokens[1].any() and not res.tokens[3].any()
+    assert int(res.lengths[1]) == 0 and int(res.lengths[3]) == 0
+    assert np.array_equal(res.tokens[[0, 2]], ref.tokens)
+    # prefill accounting counts only accepted prompts
+    assert res.prefill_tokens == 5
+
+
+def test_generate_all_rejected_is_not_an_error(params):
+    eng = make_engine(params)
+    res = eng.generate([[], ""], max_new=2)
+    assert res.statuses == ["rejected", "rejected"]
+    assert res.tokens.shape == (2, 2) and not res.tokens.any()
+    assert eng.generate([[4, 2]], max_new=2).statuses == ["ok"]
+
+
+# ---------------------------------------------------------------------------
+# EngineConfig: validation, builder equivalence, CLI round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_engineconfig_validates():
+    with pytest.raises(ValueError):
+        EngineConfig(max_seq=0)
+    with pytest.raises(ValueError):
+        EngineConfig(batch_size=0)
+    with pytest.raises(ValueError):
+        EngineConfig(shed_policy="yolo")
+    with pytest.raises(ValueError):
+        EngineConfig(disagg=True, page_size=0)    # handoff needs pages
+    with pytest.raises(ValueError):
+        EngineConfig(disagg=True, page_size=8, prefill_workers=0)
+
+
+def test_engineconfig_build_equivalent_to_direct(params):
+    cfg = get_config("qwen2-0.5b-smoke")
+    direct = ServeEngine(cfg, params=params, max_seq=64, batch_size=2,
+                         chunk=4, page_size=8, max_queue=3,
+                         deadline_s=9.0)
+    built = EngineConfig(max_seq=64, batch_size=2, chunk=4, page_size=8,
+                         max_queue=3, deadline_s=9.0).build(cfg,
+                                                            params=params)
+    assert (built.max_seq, built.B, built.page_size, built.max_queue,
+            built.deadline_s) == (direct.max_seq, direct.B,
+                                  direct.page_size, direct.max_queue,
+                                  direct.deadline_s)
+    a = direct.generate([[3, 1, 4], [1, 5]], max_new=4)
+    b = built.generate([[3, 1, 4], [1, 5]], max_new=4)
+    assert np.array_equal(a.tokens, b.tokens)
+
+
+def test_engineconfig_cli_round_trip():
+    ap = argparse.ArgumentParser()
+    EngineConfig.add_cli_args(ap)
+    args = ap.parse_args([
+        "--max-seq", "128", "--batch", "3", "--chunk", "16", "--seed", "5",
+        "--page-size", "8", "--pages", "33", "--admit-k", "2",
+        "--max-queue", "7", "--shed", "deadline", "--deadline", "4.5",
+        "--snapshot-every", "3", "--chaos", "0.25", "--chaos-seed", "9",
+        "--disagg", "--prefill-workers", "2", "--decode-workers", "3",
+        "--prefill-slots", "1", "--decode-slots", "2"])
+    ec = EngineConfig.from_cli_args(args, chaos_horizon=77)
+    assert (ec.max_seq, ec.batch_size, ec.chunk, ec.seed) == (128, 3, 16, 5)
+    assert (ec.page_size, ec.n_pages, ec.admit_k) == (8, 33, 2)
+    assert (ec.max_queue, ec.shed_policy, ec.deadline_s) == (7, "deadline",
+                                                             4.5)
+    assert (ec.chaos_rate, ec.chaos_seed, ec.chaos_horizon) == (0.25, 9, 77)
+    assert ec.disagg and (ec.prefill_workers, ec.decode_workers) == (2, 3)
+    assert (ec.prefill_slots, ec.decode_slots) == (1, 2)
+    assert ec.worker_targets() == (("prefill", 0), ("prefill", 1),
+                                   ("decode", 0), ("decode", 1),
+                                   ("decode", 2))
+
+
+def test_engineconfig_defaults_round_trip():
+    """An empty CLI line reproduces the dataclass defaults (modulo the
+    two launcher-historic overrides) — flags and config can't drift."""
+    ap = argparse.ArgumentParser()
+    EngineConfig.add_cli_args(ap)
+    ec = EngineConfig.from_cli_args(ap.parse_args([]))
+    assert ec == EngineConfig(max_seq=128, chunk=16)
+
+
+def test_engineconfig_make_faults():
+    assert EngineConfig().make_faults() is None   # chaos off
+    ec = EngineConfig(chaos_rate=0.5, chaos_seed=3, chaos_horizon=64)
+    inj = ec.make_faults()
+    assert inj is not None and inj.plan.seed == 3
+    dis = EngineConfig(chaos_rate=0.5, chaos_horizon=64, page_size=8,
+                       disagg=True, prefill_workers=1, decode_workers=1)
+    plan = dis.make_faults(role=("decode", 0)).plan
+    assert plan.crash_workers and not plan.crash_steps  # crashes target
+    assert all(t in dis.worker_targets()                # single workers
+               for t in plan.crash_workers.values())
